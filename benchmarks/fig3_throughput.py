@@ -1,0 +1,35 @@
+"""Paper Figure 3 — training throughput (samples/sec) per optimizer.
+
+Claims: SAM ~0.5x SGD; AsyncSAM(fused, b'=b/4) well above SAM; the
+heterogeneous executor hides the ascent entirely (~SGD throughput) when the
+helper keeps up. Prints `fig3,<method>,samples_per_s,relative_to_sgd`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import train_classifier
+
+CASES = [("sgd", {}), ("sam", {}), ("gsam", {}), ("looksam", {}),
+         ("esam", {}), ("aesam", {}), ("mesa", {}),
+         ("async_sam", {"ascent_fraction": 0.25})]
+
+
+def run(steps: int = 200, batch: int = 256, verbose: bool = True) -> dict:
+    out = {}
+    for name, extra in CASES:
+        r = train_classifier(name, steps=steps, batch=batch,
+                             ascent_fraction=extra.get("ascent_fraction", 0.5))
+        med = float(np.median(r.step_times))
+        out[name] = batch / med
+    if verbose:
+        base = out["sgd"]
+        for name, v in out.items():
+            print(f"fig3,{name},{v:.0f},{v / base:.3f}")
+        print(f"fig3,claim_async_faster_than_sam,"
+              f"{'PASS' if out['async_sam'] > out['sam'] * 1.15 else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Figure 5 — loss-landscape flatness at the converged solution.
+
+Quantitative proxies instead of a 30x30 surface plot:
+  * random-direction sharpness: E[L(w + r*u) - L(w)] over unit Gaussians u;
+  * adversarial sharpness: L(w + r*g/||g||) - L(w) (the SAM inner max).
+Claim: SAM and AsyncSAM both land in flatter regions than SGD.
+Prints `fig5,<method>,rand_sharpness,adv_sharpness,val_acc`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import TASK, mlp_loss, train_classifier
+from repro.core import perturb
+from repro.utils import trees
+
+METHODS = ["sgd", "sam", "async_sam"]
+RHO = 0.5
+
+
+def sharpness(params, batch, n_dirs: int = 12, rho: float = RHO):
+    base = float(mlp_loss(params, batch, None)[0])
+    key = jax.random.PRNGKey(42)
+    rand = []
+    for i in range(n_dirs):
+        u = trees.tree_random_like(jax.random.fold_in(key, i), params)
+        w = perturb(params, u, rho)
+        rand.append(float(mlp_loss(w, batch, None)[0]) - base)
+    g = jax.grad(lambda p: mlp_loss(p, batch, None)[0])(params)
+    adv = float(mlp_loss(perturb(params, g, rho), batch, None)[0]) - base
+    return sum(rand) / len(rand), adv
+
+
+def run(steps: int = 400, verbose: bool = True) -> dict:
+    batch = TASK.valid_set(1024)
+    out = {}
+    for m in METHODS:
+        r = train_classifier(m, steps=steps, rho=0.1)
+        rs, advs = sharpness(_params_of(m, steps), batch)
+        out[m] = (rs, advs, r.val_acc)
+        if verbose:
+            print(f"fig5,{m},{rs:.4f},{advs:.4f},{r.val_acc:.4f}")
+    if verbose:
+        print(f"fig5,claim_sam_flatter,"
+              f"{'PASS' if out['sam'][1] < out['sgd'][1] else 'FAIL'}")
+        print(f"fig5,claim_async_flatter,"
+              f"{'PASS' if out['async_sam'][1] < out['sgd'][1] else 'FAIL'}")
+    return out
+
+
+def _params_of(method: str, steps: int):
+    """Re-train and return final parameters (kept simple; seconds on CPU)."""
+    from repro import optim
+    from repro.core import MethodConfig, init_train_state, make_method
+    from benchmarks.common import mlp_init
+
+    mcfg = MethodConfig(name=method, rho=0.1, ascent_fraction=0.5,
+                        same_batch_ascent=True)
+    mth = make_method(mcfg)
+    opt = optim.sgd(optim.cosine_schedule(0.05, steps), momentum=0.9)
+    state = init_train_state(mlp_init(jax.random.PRNGKey(0)), opt, mth,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(mth.make_step(mlp_loss, opt))
+    for b in TASK.train_batches(128, steps):
+        state, _ = step(state, b)
+    return state.params
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Measure one §Perf hillclimb variant: cell + overrides -> roofline terms.
+
+Usage:
+  python benchmarks/perf_cell.py '{"arch":"olmo-1b","shape_name":"train_4k",
+      "variant":"dots","cfg_kw":{"remat":"dots"},"mcfg_kw":{"ascent_interval":4}}'
+
+Writes artifacts/perf/<arch>_<shape>_<variant>.json and prints the three
+roofline terms + MFU-bound (see EXPERIMENTS.md §Perf).
+"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'
+import dataclasses, json, sys
+import pathlib
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO)); sys.path.insert(0, str(REPO / "src"))
+import pathlib
+
+from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, model_flops)
+from repro.configs import get_config
+from repro.core import MethodConfig
+from repro.launch import dryrun as D
+from repro.models.config import SHAPES
+
+def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
+    cfg = get_config(arch)
+    if cfg_kw:
+        cfg = dataclasses.replace(cfg, **cfg_kw)
+    mkw = {"name": "async_sam", "n_microbatches": 4}
+    mkw.update(mcfg_kw or {})
+    mcfg = MethodConfig(**mkw)
+    r = D.run_cell(arch, shape_name, method_cfg=mcfg, cfg_override=cfg,
+                   save=False, verbose=False)
+    shape = SHAPES[shape_name]
+    ana = model_flops(cfg, shape, mcfg,
+                      remat_extra=1.0 if cfg.remat == "full" else 0.0)
+    chips = 256
+    t_comp = ana["total"] / chips / PEAK_FLOPS
+    mem_bytes = 2 * r.argument_bytes + 3 * r.peak_memory_per_device
+    t_mem = mem_bytes / HBM_BW
+    t_coll = r.collective_bytes / ICI_BW
+    out = {"arch": arch, "shape": shape_name, "variant": variant,
+           "status": r.status, "note": r.note[:200],
+           "t_compute_s": t_comp, "t_memory_s": t_mem, "t_coll_s": t_coll,
+           "bound_s": max(t_comp, t_mem, t_coll),
+           "mfu_bound": ana["model_flops_6nd"] / (chips * PEAK_FLOPS *
+                                                  max(t_comp, t_mem, t_coll)),
+           "collective_gb": r.collective_bytes / 1e9,
+           "temp_gb": r.peak_memory_per_device / 1e9,
+           "inventory": r.inventory}
+    d = REPO / "artifacts" / "perf"; d.mkdir(parents=True, exist_ok=True)
+    (d / f"{arch}_{shape_name}_{variant}.json").write_text(json.dumps(out, indent=1))
+    print(f"{variant:28s} {r.status:4s} comp={t_comp:.3f}s mem={t_mem:.3f}s "
+          f"coll={t_coll:.3f}s bound={out['bound_s']:.3f}s "
+          f"mfu={out['mfu_bound']:.3f} tempGB={out['temp_gb']:.1f} "
+          f"collGB={out['collective_gb']:.1f}", flush=True)
+    return out
+
+if __name__ == "__main__":
+    import importlib
+    spec = json.loads(sys.argv[1])
+    measure(**spec)

@@ -1,0 +1,312 @@
+"""Roofline analysis (deliverable g).
+
+Terms per (arch x shape x mesh), TPU v5e-class constants:
+
+    compute    = FLOPs / (chips * 197e12)
+    memory     = bytes_accessed / (chips * 819e9)
+    collective = wire_bytes / (chips-local links * 50e9)
+
+Sources and the scan caveat: XLA's cost_analysis counts a lax.scan body ONCE
+(observed 16x undercount on olmo). The production dry-run therefore keeps the
+scan program for memory_analysis (what fits on a chip) while this harness
+re-lowers each cell with layers UNROLLED (cfg.scan_layers=False,
+n_microbatches=1) to obtain exact per-step FLOPs / bytes / collective bytes.
+`analytic` columns (MODEL_FLOPS = 6*N*D, 6*N_active*D for MoE) cross-check the
+exact numbers and feed the "useful compute" ratio.
+
+Outputs: artifacts/analysis/<cell>.json + artifacts/roofline.csv +
+a markdown table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN_DIR = REPO / "artifacts" / "dryrun"
+ANALYSIS_DIR = REPO / "artifacts" / "analysis"
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs model (cross-check + MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape, mcfg=None, remat_extra: float = 1.0) -> dict:
+    """Analytic per-step GLOBAL flops for a cell. Returns components."""
+    from repro.models import analytic_param_count
+
+    S, B = shape.seq_len, shape.global_batch
+    n_total = analytic_param_count(cfg)
+    n_active = analytic_param_count(cfg, active_only=True)
+    # matmul params: exclude the embed gather; tied embeds still pay the
+    # unembed matmul, so the net adjustment is -V*d only when untied
+    embed_adj = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    p_mat = n_active - embed_adj
+
+    attn = _attention_flops(cfg, S) * B
+    if shape.kind == "train":
+        f = (mcfg.ascent_fraction if mcfg else 0.25)
+        f = f / max(1, getattr(mcfg, "ascent_interval", 1) if mcfg else 1)
+        tokens = B * S
+        total = (2 * p_mat * tokens + attn) * (3.0 + remat_extra) * (1.0 + f)
+        reference = 6 * n_active * tokens          # MODEL_FLOPS = 6*N*D
+    elif shape.kind == "prefill":
+        tokens = B * S
+        total = 2 * p_mat * tokens + attn
+        reference = 2 * n_active * tokens          # inference: 2*N*D
+    else:  # decode: one token, attention over the full cache
+        tokens = B
+        total = 2 * p_mat * B + _decode_attn_flops(cfg, S) * B
+        reference = 2 * n_active * tokens
+    return {"total": total, "model_flops_6nd": reference,
+            "n_params": n_total, "n_active": n_active}
+
+
+def _attention_flops(cfg, S: int) -> float:
+    """Score+context flops per sequence (full blocks, as the jnp path runs)."""
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":       # rwkv: K*V state update+readout per token
+        r = cfg.rwkv
+        heads = cfg.d_model // r.head_dim
+        return 4.0 * S * heads * r.head_dim * r.head_dim * cfg.n_layers
+    total = 0.0
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        heads = d_inner // s.head_dim
+        T = s.chunk_size
+        per_tok = 2 * T * (s.d_state + s.head_dim) + 4 * s.head_dim * s.d_state
+        total += S * per_tok * heads * cfg.n_layers
+        n_attn = (cfg.n_layers + cfg.hybrid.period - 1) // cfg.hybrid.period
+        total += 4.0 * S * S * cfg.n_heads * hd * n_attn
+        return total
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    qk_dim = hd
+    v_dim = hd
+    if cfg.mla:
+        qk_dim = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        v_dim = cfg.mla.v_head_dim
+    n_attn_layers = cfg.n_layers
+    total += 2.0 * S * ctx * cfg.n_heads * (qk_dim + v_dim) * n_attn_layers
+    if cfg.family == "audio":
+        e = cfg.encdec
+        total += 2.0 * S * S * cfg.n_heads * 2 * hd * e.n_encoder_layers  # enc
+        total += 2.0 * S * S * cfg.n_heads * 2 * hd * cfg.n_layers        # cross
+    return total
+
+
+def _decode_attn_flops(cfg, S: int) -> float:
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        r = cfg.rwkv
+        heads = cfg.d_model // r.head_dim
+        return 4.0 * heads * r.head_dim * r.head_dim * cfg.n_layers
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        heads = d_inner // s.head_dim
+        n_attn = (cfg.n_layers + cfg.hybrid.period - 1) // cfg.hybrid.period
+        return (4.0 * heads * s.head_dim * s.d_state * cfg.n_layers
+                + 4.0 * S * cfg.n_heads * hd * n_attn)
+    ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    qk_dim = hd
+    v_dim = hd
+    if cfg.mla:
+        qk_dim = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim  # absorbed
+        v_dim = cfg.mla.kv_lora_rank
+    return 2.0 * ctx * cfg.n_heads * (qk_dim + v_dim) * cfg.n_layers
+
+
+def analytic_decode_bytes(cfg, shape) -> float:
+    """HBM traffic model for one decode step (params + cache read)."""
+    from repro.models import analytic_param_count, build_model
+    import jax
+
+    from repro.utils.trees import tree_bytes
+
+    n = analytic_param_count(cfg)
+    bundle = build_model(cfg)
+    cache = jax.eval_shape(lambda: bundle.init_cache(
+        shape.global_batch, shape.seq_len, pos=shape.seq_len - 1))
+    return 4.0 * n + 2.0 * tree_bytes(cache)  # fp32 params + cache r/w
+
+
+# ---------------------------------------------------------------------------
+# Exact per-step analysis via unrolled lowering
+# ---------------------------------------------------------------------------
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 save: bool = True, cfg_kw: dict | None = None,
+                 tag: str = "") -> dict:
+    """Unrolled lowering of one cell -> exact flops/bytes/collectives."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.core import MethodConfig
+    from repro.launch import dryrun as D
+
+    cfg = dc.replace(get_config(arch), scan_layers=False, **(cfg_kw or {}))
+    mcfg = MethodConfig(name="async_sam", n_microbatches=1)
+    r = D.run_cell(arch, shape_name, multi_pod=multi_pod, method_cfg=mcfg,
+                   cfg_override=cfg, save=False, verbose=False,
+                   tag="unrolled")
+    out = dataclasses.asdict(r) if dataclasses.is_dataclass(r) else r
+    if save and r.status == "ok":
+        ANALYSIS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        (ANALYSIS_DIR / f"{arch}_{shape_name}_{r.mesh}{suffix}.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table builder
+# ---------------------------------------------------------------------------
+
+def build_table(chips: int = 256, verbose: bool = True) -> list[dict]:
+    from repro.configs import get_config
+    from repro.core import MethodConfig
+    from repro.models.config import SHAPES
+
+    rows = []
+    for prod_file in sorted(DRYRUN_DIR.glob("*_16x16.json")):
+        prod = json.loads(prod_file.read_text())
+        if prod["status"] != "ok":
+            if prod["status"] == "skipped":
+                rows.append({"arch": prod["arch"], "shape": prod["shape"],
+                             "status": "skipped", "note": prod["note"]})
+            continue
+        arch, shape_name = prod["arch"], prod["shape"]
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ana_file = ANALYSIS_DIR / f"{arch}_{shape_name}_16x16.json"
+        ana = json.loads(ana_file.read_text()) if ana_file.exists() else None
+
+        mcfg = MethodConfig()
+        analytic = model_flops(cfg, shape, mcfg)
+        # unrolled-HLO flops are exact ONLY for train cells (prefill/decode
+        # paths still scan over layers; their unrolled artifacts undercount).
+        # Collectives always come from the production artifact so every row
+        # shares one methodology (in-scan collectives counted once — a known
+        # floor documented in §Dry-run).
+        if (ana and ana.get("status") == "ok" and ana.get("flops", 0) > 0
+                and shape.kind == "train"):
+            flops_chip = ana["flops"]
+            src = "unrolled-hlo"
+        else:
+            flops_chip = analytic["total"] / chips
+            src = "analytic"
+        coll_chip = prod["collective_bytes"]
+        # HBM traffic model: HLO "bytes accessed" counts every operand pre-
+        # fusion (observed 20x+ over-estimate), so the memory term uses a
+        # working-set model instead: state r/w (params+opt, grads) plus the
+        # live activation footprint streamed a small constant number of times.
+        if shape.kind == "decode":
+            bytes_chip = analytic_decode_bytes(cfg, shape) / chips
+        else:
+            bytes_chip = (2.0 * prod["argument_bytes"]
+                          + 3.0 * prod["peak_memory_per_device"])
+
+        t_compute = flops_chip / PEAK_FLOPS
+        t_memory = bytes_chip / HBM_BW
+        t_coll = coll_chip / ICI_BW
+        dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                       (t_coll, "collective"))[1]
+        bound = max(t_compute, t_memory, t_coll)
+        useful = analytic["model_flops_6nd"] / max(1.0, flops_chip * chips)
+        # achievable fraction-of-peak when running at the roofline bound
+        mfu_bound = (analytic["model_flops_6nd"]
+                     / (chips * PEAK_FLOPS * bound)) if bound else 0.0
+        rows.append({
+            "arch": arch, "shape": shape_name, "status": "ok", "src": src,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops_6nd": analytic["model_flops_6nd"],
+            "hlo_flops_global": flops_chip * chips,
+            "useful_ratio": useful,
+            "peak_mem_gb": prod["peak_memory_per_device"] / 1e9,
+            "roofline_fraction": mfu_bound,
+            "lever": _lever(cfg, shape, dominant, useful),
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    (REPO / "artifacts").mkdir(exist_ok=True)
+    _write_csv(rows, REPO / "artifacts" / "roofline.csv")
+    if verbose:
+        for r in rows:
+            if r["status"] == "ok":
+                print(f"roofline,{r['arch']},{r['shape']},{r['src']},"
+                      f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+                      f"{r['t_collective_s']:.4f},{r['dominant']},"
+                      f"useful={r['useful_ratio']:.3f},"
+                      f"mfu_bound={r['roofline_fraction']:.3f}")
+            else:
+                print(f"roofline,{r['arch']},{r['shape']},skipped")
+    return rows
+
+
+def _lever(cfg, shape, dominant: str, useful: float) -> str:
+    """One sentence: what moves this cell's dominant roofline term down."""
+    if dominant == "compute":
+        if cfg.moe is not None and useful < 0.4:
+            return ("dense-dispatch einsums dominate: lower capacity_factor "
+                    "(-19% measured on mixtral) or ragged-dispatch kernel")
+        if shape.kind == "train":
+            return ("remat=dots removes the re-forward (-25%, needs ~2x act "
+                    "memory) and ascent_interval=k amortizes the ascent to f/k")
+        return "TPU flash kernel skips masked kv blocks (~2x attention flops)"
+    if dominant == "collective":
+        if cfg.family in ("hybrid", "ssm"):
+            return ("fsdp_sp profile (seq-sharded activations) replaces "
+                    "per-block all-reduces with per-layer weight gathers "
+                    "(2.2x measured on zamba2)")
+        return ("overlap grad reduce-scatter with the collective-free ascent "
+                "pass; bf16 weight streaming halves gather bytes")
+    if shape.kind == "decode":
+        return ("bandwidth-bound by design: quantized (int8) KV cache and "
+                "wider decode batches raise arithmetic intensity")
+    return "stream fewer activation passes (fuse CE; larger microbatches)"
+
+
+def _write_csv(rows, path):
+    import csv
+
+    keys = ["arch", "shape", "status", "src", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "model_flops_6nd",
+            "hlo_flops_global", "useful_ratio", "peak_mem_gb",
+            "roofline_fraction", "lever", "note"]
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful | MFU-bound | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped ({r.get('note','')[:40]}) | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['peak_mem_gb']:.1f} |\n")
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "analyze":
+        print(json.dumps(analyze_cell(sys.argv[2], sys.argv[3]), indent=1)[:500])
+    else:
+        build_table()

@@ -1,0 +1,69 @@
+"""Benchmark entrypoint: one harness per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention, where
+us_per_call is the wall time of the harness and `derived` carries its
+headline metric/claim verdict. Full detail rows (each harness's own CSV)
+stream above the summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps/seeds (CI mode)")
+    args = ap.parse_args()
+
+    steps = 150 if args.quick else 400
+    seeds = (0,) if args.quick else (0, 1, 2)
+
+    from benchmarks import (fig1_cosine, fig3_throughput, fig4_time_vs_acc,
+                            fig5_landscape, roofline, table_4_1_accuracy,
+                            table_4_2_hetero)
+
+    summary: list[str] = []
+
+    def timed(name, fn, derived_fn):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        summary.append(f"{name},{us:.0f},{derived_fn(out)}")
+        return out
+
+    timed("table_4_1_accuracy",
+          lambda: table_4_1_accuracy.run(steps=steps, seeds=seeds),
+          lambda r: f"async_sam_acc={r['async_sam'][0]:.4f};"
+                    f"sgd_acc={r['sgd'][0]:.4f}")
+    timed("table_4_2_hetero",
+          lambda: table_4_2_hetero.run(steps=max(100, steps // 2)),
+          lambda r: f"acc@5x={r[5][1]:.4f}")
+    timed("fig1_cosine",
+          lambda: fig1_cosine.run(steps=max(100, steps // 2)),
+          lambda r: f"mean_cos={r['mean']:.3f}")
+    timed("fig3_throughput",
+          lambda: fig3_throughput.run(steps=max(100, steps // 2)),
+          lambda r: f"async/sgd={r['async_sam'] / r['sgd']:.3f};"
+                    f"sam/sgd={r['sam'] / r['sgd']:.3f}")
+    timed("fig4_time_vs_acc",
+          lambda: fig4_time_vs_acc.run(steps=steps),
+          lambda r: f"async_final={r['async_sam'].val_acc:.4f}")
+    timed("fig5_landscape",
+          lambda: fig5_landscape.run(steps=steps),
+          lambda r: f"adv_sharp_sgd={r['sgd'][1]:.3f};"
+                    f"async={r['async_sam'][1]:.3f}")
+    timed("roofline_table",
+          lambda: roofline.build_table(),
+          lambda rows: f"cells={sum(1 for r in rows if r['status'] == 'ok')}")
+
+    print("\nname,us_per_call,derived")
+    for line in summary:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

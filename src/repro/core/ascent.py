@@ -1,0 +1,178 @@
+"""Ascent-gradient channel: batch slicing, sync modes, and lossy compression.
+
+The asynchronous ascent gradient is the piece of state AsyncSAM carries across
+steps. This module owns:
+
+* how the b'-sized ascent batch is derived from (or supplied with) the step
+  batch (paper §3.3, system-aware b'),
+* how the ascent gradient is synchronized across data-parallel workers
+  (`local` / `global` semantics — see DESIGN.md §2), and
+* lossy compression for the exchange (int8 / top-k with error feedback) —
+  the perturbation *direction* tolerates quantization noise by the same
+  argument (Theorem 3.1's sigma^2/b' term) that tolerates b' < b.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import trees
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Ascent batch derivation
+# ---------------------------------------------------------------------------
+
+def slice_ascent_batch(batch: Pytree, fraction: float) -> Pytree:
+    """Take the leading `fraction` of the batch axis as the ascent batch.
+
+    Used when the data pipeline does not supply a dedicated `ascent` sub-batch.
+    Sizes are rounded up so fraction>0 always yields >=1 sample, and to the
+    data-parallel-friendly multiple handled upstream by the pipeline.
+    """
+    def f(x):
+        b = x.shape[0]
+        bp = max(1, int(round(b * fraction)))
+        return x[:bp]
+
+    return jax.tree.map(f, batch)
+
+
+def split_batch(batch: dict) -> tuple[dict, Optional[dict]]:
+    """Split a pipeline batch into (descent, ascent-or-None)."""
+    if isinstance(batch, dict) and "ascent" in batch:
+        descent = {k: v for k, v in batch.items() if k != "ascent"}
+        return descent, batch["ascent"]
+    return batch, None
+
+
+def system_aware_ascent_fraction(t_fast: float, t_slow: float,
+                                 floor: float = 0.05, cap: float = 1.0) -> float:
+    """Paper §3.3:  b' = (T_f / T_s) * b  from measured per-sample grad times.
+
+    `t_fast` is the per-sample gradient time on the resource running descent,
+    `t_slow` the per-sample time on the resource running ascent. Clipped to
+    [floor, cap] so a pathological measurement never stalls training.
+    """
+    if t_slow <= 0 or t_fast <= 0:
+        return cap
+    return float(min(cap, max(floor, t_fast / t_slow)))
+
+
+# ---------------------------------------------------------------------------
+# Compression (error-feedback quantizers for the ascent exchange)
+# ---------------------------------------------------------------------------
+
+class CompressionState(NamedTuple):
+    """Residual error-feedback memory, one leaf per parameter leaf."""
+    error: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Lossy pytree compressor with error feedback.
+
+    kind: "none" | "int8" | "topk"
+    topk_fraction: fraction of elements kept per leaf for kind="topk".
+    """
+    kind: str = "none"
+    topk_fraction: float = 0.01
+
+    def init(self, params: Pytree) -> CompressionState:
+        if self.kind == "none":
+            return CompressionState(error=())
+        return CompressionState(error=trees.tree_zeros_like(params, jnp.float32))
+
+    def compress(self, grad: Pytree, state: CompressionState
+                 ) -> tuple[Pytree, CompressionState]:
+        """Return (decompressed lossy gradient, new residual state).
+
+        The returned tree is the value the *receiver* reconstructs; callers use
+        it in place of the exact gradient. Residual (g - Q(g+e)) is carried so
+        the quantization error is unbiased over time (error feedback / EF21).
+        """
+        if self.kind == "none":
+            return grad, state
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grad, state.error)
+        if self.kind == "int8":
+            quant = jax.tree.map(_int8_roundtrip, corrected)
+        elif self.kind == "topk":
+            quant = jax.tree.map(
+                lambda x: _topk_roundtrip(x, self.topk_fraction), corrected)
+        else:
+            raise ValueError(f"unknown compressor kind {self.kind!r}")
+        new_err = jax.tree.map(jnp.subtract, corrected, quant)
+        quant = jax.tree.map(lambda q, g: q.astype(g.dtype), quant, grad)
+        return quant, CompressionState(error=new_err)
+
+    def wire_bytes(self, grad: Pytree) -> int:
+        """Bytes on the wire for one exchange (for the roofline/collective term)."""
+        n = trees.tree_size(grad)
+        if self.kind == "none":
+            return 4 * n
+        if self.kind == "int8":
+            return n + 8 * len(jax.tree.leaves(grad))  # payload + per-leaf scale
+        if self.kind == "topk":
+            k = max(1, int(n * self.topk_fraction))
+            return 8 * k  # (index, fp32 value) pairs
+        raise ValueError(self.kind)
+
+
+def _int8_roundtrip(x: jax.Array) -> jax.Array:
+    """Symmetric per-leaf int8 quantize->dequantize."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(x: jax.Array, fraction: float) -> jax.Array:
+    """Keep the top-|fraction| magnitude entries, zero the rest."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * fraction))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Staleness ledger (host-side bookkeeping for the hetero executor)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StalenessLedger:
+    """Tracks the age (tau) of the ascent gradient currently in use.
+
+    The paper fixes tau=1; the executor lets tau grow up to `max_staleness`
+    under stragglers, after which the step degrades gracefully to SGD
+    (no perturbation) — an AsyncSAM-specific straggler-mitigation policy.
+    """
+    max_staleness: int = 4
+    tau: int = 0            # age of the held ascent gradient, in steps
+    refreshes: int = 0      # how many fresh ascent grads were consumed
+    stale_reuses: int = 0   # steps that reused an old gradient (tau grew)
+    sgd_fallbacks: int = 0  # steps that ran without perturbation
+
+    def on_fresh(self) -> None:
+        self.tau = 1
+        self.refreshes += 1
+
+    def on_reuse(self) -> bool:
+        """Advance age; return True if the gradient is still usable."""
+        self.tau += 1
+        if self.tau > self.max_staleness:
+            self.sgd_fallbacks += 1
+            return False
+        self.stale_reuses += 1
+        return True
+
+    def summary(self) -> dict:
+        return dict(tau=self.tau, refreshes=self.refreshes,
+                    stale_reuses=self.stale_reuses,
+                    sgd_fallbacks=self.sgd_fallbacks)

@@ -1,0 +1,56 @@
+"""Normalized model perturbation — the primitive shared by the whole SAM family.
+
+`perturb(params, grad, rho)` implements   w + rho * g / ||g||   (paper Eq. 1-3).
+On TPU the fused Pallas kernel (repro.kernels.sam_perturb) performs the
+norm-scale-axpy in one HBM pass; this module is the jnp composition used on CPU
+and as the autodiff-friendly default.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import trees
+
+Pytree = Any
+_EPS = 1e-12
+
+
+def perturbation_scale(grad: Pytree, rho: float | jax.Array,
+                       grad_norm: Optional[jax.Array] = None) -> jax.Array:
+    """Scalar rho/||g|| with a zero-safe denominator."""
+    if grad_norm is None:
+        grad_norm = trees.global_norm(grad)
+    return jnp.asarray(rho, jnp.float32) / (grad_norm + _EPS)
+
+
+def perturb(params: Pytree, grad: Pytree, rho: float | jax.Array,
+            grad_norm: Optional[jax.Array] = None) -> Pytree:
+    """Return w + rho * g/||g|| without modifying dtypes of `params`."""
+    scale = perturbation_scale(grad, rho, grad_norm)
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      + scale * g.astype(jnp.float32)).astype(p.dtype),
+        params, grad)
+
+
+def perturb_masked(params: Pytree, grad: Pytree, rho: float | jax.Array,
+                   mask: Pytree) -> Pytree:
+    """ESAM-style partial perturbation: only leaves elements where mask==1.
+
+    The norm is taken over the *masked* gradient so the realized perturbation
+    radius stays rho (matches ESAM's 1/sqrt(beta) rescaling intent).
+    """
+    masked = jax.tree.map(lambda g, m: g * m, grad, mask)
+    return perturb(params, masked, rho)
+
+
+def gradient_norm_penalty_direction(grad_w: Pytree, grad_pert: Pytree,
+                                    alpha: float) -> Pytree:
+    """Generalized-SAM mixing  (1-alpha)*∇L(w) + alpha*∇L(ŵ)  (Zhao et al. 22)."""
+    return jax.tree.map(
+        lambda gw, gp: ((1.0 - alpha) * gw.astype(jnp.float32)
+                        + alpha * gp.astype(jnp.float32)).astype(gw.dtype),
+        grad_w, grad_pert)

@@ -1,0 +1,3 @@
+from repro.data.mmap_dataset import MmapTokenDataset  # noqa: F401
+from repro.data.pipeline import PipelineConfig, TokenPipeline  # noqa: F401
+from repro.data.synthetic import ClassificationTask, TokenTask  # noqa: F401

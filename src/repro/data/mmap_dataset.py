@@ -1,0 +1,47 @@
+"""Memory-mapped token dataset (the production data path).
+
+File format: a flat little-endian int32 token file (MaxText/llm.c style) plus
+a small JSON sidecar ({"vocab_size": V}). Sequences are drawn by deterministic
+strided addressing from (seed, stream) so the pipeline's restart/sharding
+semantics match the synthetic source exactly.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class MmapTokenDataset:
+    def __init__(self, path: str | pathlib.Path, seed: int = 0):
+        path = pathlib.Path(path)
+        meta = json.loads(path.with_suffix(".json").read_text())
+        self.vocab_size = int(meta["vocab_size"])
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def batch(self, n: int, seq_len: int, stream: int) -> dict:
+        """Deterministic (seed, stream)-addressed batch of n sequences."""
+        usable = len(self.tokens) - seq_len - 1
+        assert usable > 0, "token file shorter than one sequence"
+        rng = np.random.default_rng((self.seed, stream))
+        starts = rng.integers(0, usable, size=n)
+        idx = starts[:, None] + np.arange(seq_len + 1)[None, :]
+        window = self.tokens[idx]
+        return {"tokens": jnp.asarray(window[:, :-1]),
+                "labels": jnp.asarray(window[:, 1:])}
+
+    @staticmethod
+    def write(path: str | pathlib.Path, tokens: np.ndarray,
+              vocab_size: int) -> None:
+        """Write a dataset file (used by tests and the data-prep example)."""
+        path = pathlib.Path(path)
+        tokens.astype(np.int32).tofile(path)
+        path.with_suffix(".json").write_text(json.dumps(
+            {"vocab_size": int(vocab_size), "n_tokens": int(tokens.size)}))

@@ -1,0 +1,6 @@
+"""TPU Pallas kernels (flash attention, SAM perturb, Mamba2 SSD, RWKV6 wkv).
+
+Models call through repro.kernels.ops which dispatches TPU->Pallas,
+CPU/dry-run->the jnp mirrors in repro.kernels.ref.
+"""
+from repro.kernels import ops, ref  # noqa: F401

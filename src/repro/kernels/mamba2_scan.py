@@ -1,0 +1,120 @@
+"""Pallas TPU chunked SSD (Mamba2) sequence-mixing kernel.
+
+Blocking (zamba2: P=64, N=64, chunk T=128 — MXU-aligned):
+* grid (B, H, n_chunks); the chunk axis is innermost and sequential
+  ("arbitrary"), carrying the (P, N) state in fp32 VMEM scratch;
+* per step the kernel loads x (T,P), dt (T,1), b/c (T,N) tiles and computes
+    intra-chunk:  y  = (tril(C Bᵀ) ⊙ decay) (dt ⊙ x)      3 MXU matmuls
+    state in/out: y += (exp(cum) ⊙ C) h_inᵀ ;  h_out = exp(total) h_in + ...
+  entirely in VMEM; only y (T,P) returns to HBM per step.
+
+The jnp mirror (ref.mamba2_chunked_jnp) is the oracle; decode steps use the
+sequential reference (single token, no kernel needed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_out_ref,
+                h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # (T, P)
+    dt = dt_ref[0, 0, 0, :, 0].astype(jnp.float32)  # (T,)
+    b = b_ref[0, 0, 0].astype(jnp.float32)       # (T, N)
+    c = c_ref[0, 0, 0].astype(jnp.float32)       # (T, N)
+    a = a_ref[0]                                 # scalar decay rate (<0)
+    d = d_ref[0]                                 # scalar skip
+
+    la = dt * a                                  # (T,) log decay per step
+    cum = jnp.cumsum(la)                         # inclusive
+    total = cum[-1]
+
+    xd = x * dt[:, None]                         # (T, P)
+    # intra-chunk decay matrix: exp(cum_t - cum_s) masked to s <= t
+    seg = cum[:, None] - cum[None, :]            # (T, T)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    gmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))   # (T, T)
+    y = jax.lax.dot(cb * gmat, xd)                             # (T, P)
+
+    # contribution of the entering state
+    h_in = h_ref[...]                                          # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, h_in, (((1,), (1,)), ((), ())))                     # (T, P)
+
+    # next chunk state: h = exp(total) h_in + (sdecay ⊙ xd)ᵀ b
+    sdecay = jnp.exp(total - cum)                              # (T,)
+    h_ref[...] = (jnp.exp(total) * h_in
+                  + jax.lax.dot_general(xd * sdecay[:, None], b,
+                                        (((0,), (0,)), ((), ()))))  # (P, N)
+
+    y_ref[0, 0, 0] = (y + d * x).astype(y_ref.dtype)
+    h_out_ref[0, 0] = h_ref[...]   # revisited each chunk; final chunk wins
+
+
+def mamba2_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                   c: jax.Array, d: jax.Array, *, chunk: int = 128,
+                   init_state: Optional[jax.Array] = None,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,H,P); dt (B,S,H); a,d (H,); b,c (B,S,G,N). Returns (y, h_final).
+
+    Grid semantics match ref.mamba2_chunked_jnp (G groups broadcast onto H).
+    init_state is consumed by the jnp path only (serving); training starts
+    from zero state.
+    """
+    from repro.kernels import ref
+
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    if S % chunk != 0 or init_state is not None:
+        return ref.mamba2_chunked_jnp(x, dt, a, b, c, d, chunk=chunk,
+                                      init_state=init_state)
+    nc = S // chunk
+    rep = H // G
+    # (B,S,H,*) -> (B,H,nc,T,*) tiles
+    xt = jnp.moveaxis(x, 2, 1).reshape(B, H, nc, chunk, P)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(B, H, nc, chunk, 1)
+    bh = jnp.repeat(jnp.moveaxis(b, 2, 1), rep, axis=1).reshape(B, H, nc, chunk, N)
+    ch = jnp.repeat(jnp.moveaxis(c, 2, 1), rep, axis=1).reshape(B, H, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, a.astype(jnp.float32), bh, ch, d.astype(jnp.float32))
+
+    y = jnp.moveaxis(y.reshape(B, H, S, P), 1, 2)
+    return y, h_final

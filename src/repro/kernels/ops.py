@@ -1,0 +1,103 @@
+"""Kernel dispatch layer: TPU -> Pallas, CPU/dry-run -> jnp reference.
+
+Models call these entry points only; the backend choice is per-call overridable
+(`impl=`) and defaults to the platform: the Mosaic kernels on TPU, the
+FLOP-equivalent jnp paths everywhere else (including the 512-fake-device CPU
+dry-run, which cannot lower TPU Pallas). `interpret=True` Pallas execution is
+reserved for the correctness tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_FORCED_IMPL: Optional[str] = None  # test hook: "jnp" | "pallas" | "pallas_interpret"
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _FORCED_IMPL
+    _FORCED_IMPL = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    if _FORCED_IMPL is not None:
+        return _FORCED_IMPL
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "jnp"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Blocked attention. q (B,Sq,H,hd); k/v (B,Sk,K,hd) with GQA K<=H."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.flash_attention_jnp(q, k, v, causal=causal, window=window)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=(mode == "pallas_interpret"))
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, *, window: Optional[int] = None,
+                     impl: Optional[str] = None) -> jax.Array:
+    """One-token attention over a KV cache (flash-decode combine under pjit)."""
+    mode = _resolve(impl)
+    # decode is bandwidth-bound and already lowers to partial-reduce + psum on
+    # sharded caches; the jnp path is used on all platforms unless profiling
+    # shows a kernel win (EXPERIMENTS §Perf).
+    del mode
+    return ref.decode_attention_jnp(q, k, v, valid_len, window=window)
+
+
+def mamba2_mix(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, d: jax.Array, *, chunk: int = 128,
+               init_state: Optional[jax.Array] = None,
+               impl: Optional[str] = None) -> tuple[jax.Array, jax.Array]:
+    """Mamba2/SSD sequence mixing. Returns (y, final_state)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.mamba2_chunked_jnp(x, dt, a, b, c, d, chunk=chunk,
+                                      init_state=init_state)
+    from repro.kernels import mamba2_scan as m2
+    return m2.mamba2_chunked(x, dt, a, b, c, d, chunk=chunk,
+                             init_state=init_state,
+                             interpret=(mode == "pallas_interpret"))
+
+
+def mamba2_decode_step(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                       c: jax.Array, d: jax.Array,
+                       state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD update (serving): state (B,H,P,N)."""
+    y, new_state = ref.mamba2_scan_ref(x, dt, a, b, c, d, init_state=state)
+    return y, new_state
+
+
+def rwkv6_mix(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, *, init_state: Optional[jax.Array] = None,
+              impl: Optional[str] = None) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 wkv recurrence. Returns (y, final_state)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, init_state=init_state)
+    from repro.kernels import rwkv6_scan as r6
+    return r6.rwkv6_chunked(r, k, v, w, u, init_state=init_state,
+                            interpret=(mode == "pallas_interpret"))
+
+
+def sam_perturb(w_flat: jax.Array, g_flat: jax.Array, rho, sq_norm, *,
+                impl: Optional[str] = None) -> jax.Array:
+    """Fused  w + rho * g / ||g||  over a flat fp32 vector."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.sam_perturb_flat_jnp(w_flat, g_flat, rho, sq_norm)
+    from repro.kernels import sam_perturb as sp
+    return sp.sam_perturb(w_flat, g_flat, rho, sq_norm,
+                          interpret=(mode == "pallas_interpret"))

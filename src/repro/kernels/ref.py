@@ -1,0 +1,283 @@
+"""Pure-jnp reference oracles for every kernel in repro.kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes with assert_allclose) and the
+implementation used on CPU — including the 512-device dry-run, where the
+Mosaic TPU backend is unavailable. They are written to be FLOP-equivalent to
+the kernels so the roofline compute term is meaningful on either path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _gqa_expand(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,K,hd) -> (B,S,H,hd) by repeating kv heads for GQA."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int | jax.Array = 0,
+                  kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Naive materialized attention. q (B,Sq,H,hd); k/v (B,Sk,K,hd).
+
+    `q_offset`: absolute position of q[0] (decode: pos). `kv_valid_len`: number
+    of valid cache entries (decode masking).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kx = _gqa_expand(k, h).astype(jnp.float32)
+    vx = _gqa_expand(v, h).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(sq) + q_offset          # (Sq,)
+    kpos = jnp.arange(sk)                     # (Sk,)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_valid_len is not None:
+        mask &= kpos[None, :] < kv_valid_len
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx)
+    return out.astype(q.dtype)
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        kv_block: int = 512) -> jax.Array:
+    """Online-softmax (flash) attention as a kv-block lax.scan.
+
+    Memory is O(Sq * kv_block) instead of O(Sq * Sk); this is the path the
+    512-device dry-run lowers (prefill_32k would otherwise materialize
+    multi-TB score tensors). FLOP-equivalent to mha_reference up to masked
+    blocks.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if sk % kv_block != 0:
+        return mha_reference(q, k, v, causal=causal, window=window)
+    n_blocks = sk // kv_block
+    n_kv = k.shape[2]
+    g = h // n_kv
+    hd_v = v.shape[-1]                       # may differ from qk dim (MLA)
+    qg = q.reshape(b, sq, n_kv, g, hd).astype(jnp.float32)
+    qg = qg / jnp.sqrt(jnp.float32(hd))
+    kb = k.reshape(b, n_blocks, kv_block, n_kv, hd)
+    vb = v.reshape(b, n_blocks, kv_block, n_kv, hd_v)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        blk_idx, kblk, vblk = inputs
+        kpos = blk_idx * kv_block + jnp.arange(kv_block)
+        # grouped GQA: contract per kv head without materializing the repeat
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk.astype(jnp.float32))
+        mask = jnp.ones((sq, kv_block), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, n_kv, g, sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.arange(n_blocks), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)            # (B,K,G,Sq,hdv)
+    out = jnp.moveaxis(out.reshape(b, h, sq, hd_v), 1, 2)   # -> (B,Sq,H,hdv)
+    return out.astype(q.dtype)
+
+
+def decode_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array, *,
+                         window: Optional[int] = None) -> jax.Array:
+    """Single-position attention over a (possibly seq-sharded) KV cache.
+
+    q (B,1,H,hd); k/v (B,S_max,K,hd). Reductions over S_max lower to partial
+    reduce + psum under pjit when the cache's seq dim is sharded (flash-decode
+    pattern, DESIGN.md §5).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    kpos = jnp.arange(sk)
+    mask = kpos[None, :] < valid_len                      # (1, Sk)
+    if window is not None:
+        mask &= kpos[None, :] > valid_len - 1 - window
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SAM perturbation (fused axpy-normalize) reference
+# ---------------------------------------------------------------------------
+
+def sam_perturb_flat_jnp(w: jax.Array, g: jax.Array, rho: jax.Array,
+                         sq_norm: jax.Array) -> jax.Array:
+    """w + rho * g / sqrt(sq_norm) over flat fp32 vectors."""
+    scale = rho / (jnp.sqrt(sq_norm) + 1e-12)
+    return w + scale * g
+
+
+def sq_norm_jnp(g: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) reference: sequential scan
+# ---------------------------------------------------------------------------
+
+def mamba2_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, d: jax.Array,
+                    init_state: Optional[jax.Array] = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (oracle for the chunked kernel).
+
+    x  (B,S,H,P)   input per head
+    dt (B,S,H)     softplus'd timestep
+    a  (H,)        negative decay rate (A = -exp(a_log))
+    b  (B,S,G,N)   input gate (G groups broadcast over heads)
+    c  (B,S,G,N)   output gate
+    d  (H,)        skip
+    returns y (B,S,H,P), final state (B,H,P,N)
+    """
+    B, S, H, P = x.shape
+    G = b.shape[2]
+    N = b.shape[3]
+    rep = H // G
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)      # (B,S,H,N)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a[None, None, :])                  # (B,S,H)  a<0
+
+    def step(h_prev, inp):
+        xt, bt, ct, dk, dtt = inp                            # (B,H,P),(B,H,N),...
+        h_new = h_prev * dk[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, ct)
+        return h_new, y
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(bb, 1, 0), jnp.moveaxis(cc, 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dtf, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def mamba2_chunked_jnp(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                       c: jax.Array, d: jax.Array, chunk: int = 128,
+                       init_state: Optional[jax.Array] = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: intra-chunk dense (MXU-friendly) + inter-chunk carry.
+
+    Same math as mamba2_scan_ref; this is the jnp mirror of the Pallas kernel's
+    blocking strategy and the training path used on CPU/dry-run.
+    """
+    B, S, H, P = x.shape
+    if S % chunk != 0:
+        return mamba2_scan_ref(x, dt, a, b, c, d, init_state)
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    nc = S // chunk
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    xf = (x.astype(jnp.float32)
+          * dt.astype(jnp.float32)[..., None]).reshape(B, nc, chunk, H, P)  # dt-scaled input
+    dtc = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    la = dtc * a[None, None, None, :]                        # log decay per step (<0)
+    cum = jnp.cumsum(la, axis=2)                             # (B,nc,chunk,H)
+    total = cum[:, :, -1]                                    # (B,nc,H)
+
+    # Intra-chunk: y_intra[t] = sum_{s<=t} exp(cum[t]-cum[s]) * (C_t . B_s) * x_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,T,Sc,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    gmat = jnp.exp(seg)                                      # decay matrix
+    cb = jnp.einsum("bntHm,bnsHm->bntsH", cc, bb)            # (B,nc,T,Sc,H)
+    y_intra = jnp.einsum("bntsH,bntsH,bnsHp->bntHp", cb, gmat, xf)
+
+    # Chunk states: state_n = sum_s exp(total - cum[s]) * B_s x_s
+    sdecay = jnp.exp(total[:, :, None, :] - cum)             # (B,nc,Sc,H)
+    chunk_state = jnp.einsum("bnsHm,bnsH,bnsHp->bnHpm", bb, sdecay, xf)
+
+    # Inter-chunk recurrence over nc chunks
+    def carry_fn(h_prev, inp):
+        st, tot = inp                                        # (B,H,P,N), (B,H)
+        h_new = h_prev * jnp.exp(tot)[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        carry_fn, h0, (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,nc,H,P,N) entering states
+
+    # Contribution of the entering state to each position
+    y_inter = jnp.einsum("bntHm,bntH,bnHpm->bntHp", cc, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + x.astype(jnp.float32) * d[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) reference: sequential wkv scan
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, init_state: Optional[jax.Array] = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 recurrence with data-dependent decay.
+
+    r,k,w (B,S,H,K); v (B,S,H,V); u (H,K) bonus. w is the *log* decay (<0).
+      y_t   = (S_{t-1} + (u ⊙ k_t) ⊗ v_t)ᵀ r_t
+      S_t   = diag(exp(w_t)) S_{t-1} + k_t ⊗ v_t
+    returns y (B,S,H,V), final state (B,H,K,V).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+
+    def step(s_prev, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,K),(B,H,V),(B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s_prev + u[None, :, :, None] * kv)
+        s_new = jnp.exp(wt)[..., None] * s_prev + kv
+        return s_new, y
+
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_final

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the RWKV6 ("Finch") wkv recurrence.
+
+The recurrence  S_t = diag(exp(w_t)) S_{t-1} + k_t v_tᵀ ;  y_t = r_t·(S_{t-1}
++ u∘k_t ⊗ v_t)  is sequential in t with per-channel data-dependent decay, so
+the MXU-friendly "chunked matmul" form needs exp(-cum) rescaling that
+overflows fp32 for realistic decay magnitudes. This kernel instead keeps the
+(K, V) state resident in VMEM and walks the sequence in chunks:
+
+* grid (B, H, n_chunks), chunk axis sequential, state (K,V) fp32 in scratch;
+* per chunk, r/k/v/w (T,K|V) tiles are loaded once from HBM; the T inner
+  steps are VPU rank-1 updates on the VMEM state — HBM traffic is O(S·K)
+  instead of O(S·K·V) for a naive per-token implementation.
+
+Oracle: ref.rwkv6_scan_ref (tests sweep shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0, 0].astype(jnp.float32)        # (T, K)
+    k = k_ref[0, 0, 0].astype(jnp.float32)        # (T, K)
+    v = v_ref[0, 0, 0].astype(jnp.float32)        # (T, V)
+    w = w_ref[0, 0, 0].astype(jnp.float32)        # (T, K) log decay (<0)
+    u = u_ref[0].astype(jnp.float32)              # (K,)
+
+    def step(t, carry):
+        s, y = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]   # (K,),(K,),(V,),(K,)
+        kv = kt[:, None] * vt[None, :]            # (K, V) rank-1
+        yt = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)  # (V,)
+        s = jnp.exp(wt)[:, None] * s + kv
+        y = jax.lax.dynamic_update_slice(y, yt[None], (t, 0))
+        return s, y
+
+    y0 = jnp.zeros((chunk, v.shape[-1]), jnp.float32)
+    s_final, y = jax.lax.fori_loop(0, chunk, step, (s_ref[...], y0))
+    s_ref[...] = s_final
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    s_out_ref[0, 0] = s_final                     # final chunk's write wins
+
+
+def rwkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, *, chunk: int = 64,
+                  init_state: Optional[jax.Array] = None,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """r,k,w (B,S,H,K); v (B,S,H,V); u (H,K). Returns (y (B,S,H,V), state)."""
+    from repro.kernels import ref
+
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if S % chunk != 0 or init_state is not None:
+        return ref.rwkv6_scan_ref(r, k, v, w, u, init_state=init_state)
+    nc = S // chunk
+
+    def tile(x, d):
+        return jnp.moveaxis(x, 2, 1).reshape(B, H, nc, chunk, d)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, K), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, K), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, V), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, K), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, K), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, V), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, chunk, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile(r, K), tile(k, K), tile(v, V), tile(w, K), u)
+
+    y = jnp.moveaxis(y.reshape(B, H, S, V), 1, 2)
+    return y, s_final

@@ -1,0 +1,127 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs per arch.
+
+Strategy (DESIGN.md §5): 2-axis FSDP x TP.
+  * matmul weights (..., d_in, d_out): d_in -> dp (FSDP), d_out -> "model" (TP);
+    output-projection weights (wo / wo_mlp / w_out / wv_c) transpose the rule so
+    the contraction stays sharded.
+  * embed (V, D): vocab -> "model", d -> dp. unembed follows the generic rule
+    (vocab -> "model").
+  * expert stacks (L, E, d_in, d_out): experts -> "model" when E divides the
+    model axis (EP; deepseek 64e), else TP over d_out (mixtral 8e < 16).
+  * biases / per-head vectors: last dim -> "model" when it is a sharded output
+    dim; norm scales replicate.
+  * any rule whose dim does not divide its mesh axes is dropped (replicated on
+    that dim) — e.g. whisper's vocab 51865.
+
+"dp" is ("pod","data") on the multi-pod mesh, ("data",) single-pod, so FSDP
+spans pods while TP stays intra-pod (ICI-local).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+def param_spec(path: str, shape: tuple, mesh, cfg: ModelConfig):
+    """PartitionSpec for one parameter leaf (delegates to the shared table in
+    repro.models.partitioning so scan-body re-constraints stay consistent)."""
+    from repro.models.partitioning import make_rules, param_partition_spec
+    return param_partition_spec(path, shape, make_rules(mesh))
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _maybe(spec_axes, dim, mesh):
+    """Return spec entry if divisible else None (replicate)."""
+    if spec_axes is None:
+        return None
+    return spec_axes if _fits(dim, mesh, spec_axes) else None
+
+
+def batch_spec_tree(batch_shapes: Pytree, mesh) -> Pytree:
+    """Shard every batch leaf's leading (batch) dim over dp when divisible."""
+    dp = dp_axes(mesh)
+
+    def f(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        lead = _maybe(dp, b, mesh)
+        return P(lead, *((None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(f, batch_shapes)
+
+
+def cache_spec_tree(cache_shapes: Pytree, cfg: ModelConfig, mesh) -> Pytree:
+    """Decode/prefill cache sharding (DESIGN.md §5).
+
+    Attention K/V (L, B, S, K, hd) and MLA latents (L, B, S, R): batch -> dp
+    when divisible; the *sequence* dim -> "model" (flash-decode LSE-combine
+    emerges from pjit's partial reductions); for batch=1 long-context cells the
+    seq dim additionally takes the idle dp axes.
+    States (ssm/wkv/conv/shift): heads/channels -> "model", batch -> dp.
+    """
+    dp = dp_axes(mesh)
+
+    def f(path, leaf):
+        name = path.split("/")[-1]
+        if leaf.ndim == 0:
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v", "c_kv", "k_rope"):
+            # stacked (L,B,S,...) vs per-dense-layer (B,S,...)
+            if name in ("k", "v", "cross_k", "cross_v"):
+                off = 1 if leaf.ndim == 5 else 0
+            else:  # MLA latents: (L,B,S,R) stacked, (B,S,R) unstacked
+                off = 1 if leaf.ndim == 4 else 0
+            b, s = leaf.shape[off], leaf.shape[off + 1]
+            b_ax = _maybe(dp, b, mesh)
+            if b_ax is None:
+                seq_axes = dp + ("model",)
+                s_ax = _maybe(seq_axes, s, mesh) or _maybe("model", s, mesh)
+            else:
+                s_ax = _maybe("model", s, mesh)
+            spec = [None] * leaf.ndim
+            spec[off], spec[off + 1] = b_ax, s_ax
+            return P(*spec)
+        if name in ("ssm", "wkv"):
+            # (L, B, H, P, N)
+            spec = [None] * leaf.ndim
+            spec[1] = _maybe(dp, leaf.shape[1], mesh)
+            spec[2] = _maybe("model", leaf.shape[2], mesh)
+            return P(*spec)
+        if name in ("conv_x", "conv_bc", "tm_shift", "cm_shift"):
+            # (L, B, W-1|1, C)
+            spec = [None] * leaf.ndim
+            spec[1] = _maybe(dp, leaf.shape[1], mesh)
+            spec[-1] = _maybe("model", leaf.shape[-1], mesh)
+            return P(*spec)
+        return P(*([None] * leaf.ndim))
+
+    from repro.utils.trees import tree_map_with_path
+    return tree_map_with_path(f, cache_shapes)
+
+
+def state_spec_tree(state_shapes: Pytree, cfg: ModelConfig, mesh) -> Pytree:
+    """TrainState sharding: params/grad-like trees via param rules (matched by
+    path suffix, so optimizer mirrors inherit), scalars replicated."""
+    from repro.utils.trees import tree_map_with_path
+
+    def f(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return param_spec(path, leaf.shape, mesh, cfg)
+
+    return tree_map_with_path(f, state_shapes)
+
+
+def to_named(spec_tree: Pytree, mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,57 @@
+"""Step builders: train_step (SAM-family) and serve steps (prefill/decode).
+
+These close over a ModelBundle + method + optimizer and return pure functions
+ready for jax.jit with the shardings from launch.sharding. The same builders
+serve the CPU smoke tests, the benchmarks, and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Method, MethodConfig, TrainState, init_train_state, make_method
+from repro.models.registry import ModelBundle
+from repro.optim import GradientTransform, make_optimizer
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    bundle: ModelBundle
+    method: Method
+    method_cfg: MethodConfig
+    optimizer: GradientTransform
+    step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
+
+    def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
+        return init_train_state(params, self.optimizer, self.method, rng)
+
+
+def make_train_setup(bundle: ModelBundle,
+                     method_cfg: Optional[MethodConfig] = None,
+                     optimizer: Optional[GradientTransform] = None,
+                     lr: float = 1e-3) -> TrainSetup:
+    method_cfg = method_cfg or MethodConfig()
+    method = make_method(method_cfg)
+    optimizer = optimizer or make_optimizer("adamw", lr)
+    step_fn = method.make_step(bundle.loss_fn, optimizer)
+    return TrainSetup(bundle=bundle, method=method, method_cfg=method_cfg,
+                      optimizer=optimizer, step_fn=step_fn)
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill_step(params: Pytree, batch: dict):
+        return bundle.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle) -> Callable:
+    def decode_step(params: Pytree, cache: Pytree, batch: dict):
+        return bundle.decode(params, cache, batch)
+
+    return decode_step

@@ -1,0 +1,198 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a stub per the assignment: `input_specs` supplies
+precomputed frame embeddings (B, S_enc, d_model); a learned adapter keeps a
+parameterized frontend boundary. Positions are sinusoidal (no rope), norms are
+LayerNorm, MLPs are plain GELU — whisper's layout. The decoder carries a self-
+attention KV cache plus per-layer cross-attention K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.partitioning import constrain_param_tree
+from repro.models.transformer import _remat, _stack_layers
+
+Pytree = Any
+
+
+def _sinusoid(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> Pytree:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "ln2": L.norm_init(cfg, cfg.d_model),
+            "attn": L.attention_init(k1, cfg), "mlp": L.mlp_init(k2, cfg)}
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> Pytree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "ln2": L.norm_init(cfg, cfg.d_model),
+            "ln3": L.norm_init(cfg, cfg.d_model),
+            "self_attn": L.attention_init(k1, cfg),
+            "cross_attn": L.attention_init(k2, cfg),
+            "mlp": L.mlp_init(k3, cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "frontend_adapter": L.dense_init(k1, cfg.d_model, cfg.d_model, L.pdtype(cfg)),
+        "enc_blocks": _stack_layers(k2, cfg.encdec.n_encoder_layers,
+                                    lambda k: _enc_block_init(k, cfg)),
+        "enc_norm": L.norm_init(cfg, cfg.d_model),
+        "embedding": L.embedding_init(k3, cfg),
+        "dec_blocks": _stack_layers(k4, cfg.n_layers,
+                                    lambda k: _dec_block_init(k, cfg)),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def encode(params: Pytree, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = L.cdtype(cfg)
+    x = jnp.einsum("bsd,de->bse", frames.astype(dt),
+                   params["frontend_adapter"].astype(dt))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(dt)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(xc, blk):
+        blk = constrain_param_tree(blk)
+        h, _ = L.attention_apply(blk["attn"], L.norm_apply(blk["ln1"], xc, cfg),
+                                 cfg, positions=positions, causal=False,
+                                 use_rope=False)
+        xc = xc + h
+        xc = xc + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], xc, cfg), cfg)
+        return xc, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(body, cfg), x,
+                            constrain_param_tree(params["enc_blocks"]))
+    else:
+        n = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+        for i in range(n):
+            blk = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = _remat(body, cfg)(x, blk)
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def _dec_block_apply(blk: Pytree, x: jax.Array, enc_out: Optional[jax.Array],
+                     cfg: ModelConfig, *, positions,
+                     cache: Optional[dict] = None):
+    """Returns (y, new_self_kv, cross_kv). `cache` holds {"k","v","pos",
+    "cross_k","cross_v"} in decode; None at train/prefill (cross kv derived)."""
+    self_cache = None if cache is None else {
+        "k": cache["k"], "v": cache["v"], "pos": cache["pos"]}
+    h, self_kv = L.attention_apply(blk["self_attn"],
+                                   L.norm_apply(blk["ln1"], x, cfg), cfg,
+                                   positions=positions, cache=self_cache,
+                                   use_rope=False)
+    x = x + h
+    xn = L.norm_apply(blk["ln2"], x, cfg)
+    if cache is None:
+        h, cross_kv = L.attention_apply(blk["cross_attn"], xn, cfg,
+                                        positions=positions, causal=False,
+                                        use_rope=False, x_cross=enc_out)
+    else:
+        # decode: attend over the stored cross k/v (no growth, no mask)
+        from repro.kernels import ops
+        q, _, _ = L._project_qkv(blk["cross_attn"], xn, xn, cfg)
+        kx, vx = cache["cross_k"], cache["cross_v"]
+        h = ops.decode_attention(q, kx, vx, jnp.asarray(kx.shape[1], jnp.int32))
+        h = h.reshape(*h.shape[:-2], cfg.n_heads * cfg.resolved_head_dim)
+        h = jnp.einsum("...h,hd->...d", h,
+                       blk["cross_attn"]["wo"].astype(L.cdtype(cfg)))
+        cross_kv = None
+    x = x + h
+    x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln3"], x, cfg), cfg)
+    return x, self_kv, cross_kv
+
+
+def forward(params: Pytree, batch: dict, cfg: ModelConfig):
+    """Training forward: (logits over decoder positions, aux=0)."""
+    enc_out = encode(params, batch["enc_frames"], cfg)
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(xc, blk):
+        blk = constrain_param_tree(blk)
+        y, _, _ = _dec_block_apply(blk, xc, enc_out, cfg, positions=positions)
+        return y, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(body, cfg), x,
+                            constrain_param_tree(params["dec_blocks"]))
+    else:
+        n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+        for i in range(n):
+            blk = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            x, _ = _remat(body, cfg)(x, blk)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return L.logits_apply(params["embedding"], x, cfg), jnp.float32(0.0)
+
+
+def prefill(params: Pytree, batch: dict, cfg: ModelConfig, pad_to: int = 0):
+    enc_out = encode(params, batch["enc_frames"], cfg)
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    B, S, D = x.shape
+    max_len = max(S, pad_to)
+    positions = jnp.arange(S)[None, :]
+
+    def pad_seq(kv):
+        if max_len == S:
+            return kv
+        pad = [(0, 0)] * kv.ndim
+        pad[1] = (0, max_len - S)
+        return jnp.pad(kv, pad)
+
+    def body(xc, blk):
+        y, self_kv, cross_kv = _dec_block_apply(blk, xc, enc_out, cfg,
+                                                positions=positions)
+        return y, {"k": pad_seq(self_kv["k"]), "v": pad_seq(self_kv["v"]),
+                   "cross_k": cross_kv["k"], "cross_v": cross_kv["v"]}
+
+    x, layers = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.logits_apply(params["embedding"], x[:, -1:], cfg)
+    return logits, {"layers": layers, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode(params: Pytree, cache: Pytree, batch: dict, cfg: ModelConfig):
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+    B, S_new, D = x.shape
+    pos = cache["pos"]
+    # sinusoidal position of the new token
+    x = x + _sinusoid_at(pos, cfg.d_model, S_new).astype(x.dtype)
+    positions = pos + jnp.arange(S_new)[None, :]
+
+    def body(xc, scanned):
+        blk, c = scanned
+        y, self_kv, _ = _dec_block_apply(blk, xc, None, cfg, positions=positions,
+                                         cache={**c, "pos": pos})
+        return y, {"k": self_kv["k"], "v": self_kv["v"],
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, layers = jax.lax.scan(body, x, (params["dec_blocks"], cache["layers"]))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.logits_apply(params["embedding"], x, cfg)
+    return logits, {"layers": layers, "pos": pos + S_new}
+
+
+def _sinusoid_at(pos: jax.Array, d: int, n: int) -> jax.Array:
+    p = (pos + jnp.arange(n))[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (d // 2))
+    ang = p * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[None]

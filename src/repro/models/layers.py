@@ -1,0 +1,255 @@
+"""Core neural-net layers (pure-functional, dict-parameterized).
+
+Conventions:
+* every module is an (init, apply) pair of free functions;
+* parameter leaves are named so `repro.launch.sharding` can assign
+  PartitionSpecs by path suffix (wq/wk/wv/wo/wi/wg/wo_mlp/embed/...);
+* compute runs in `cfg.compute_dtype` (bf16 on TPU), parameters are stored in
+  `cfg.param_dtype` (fp32 master copies) and cast at use.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.partitioning import constrain, constrain_first_fit
+
+Pytree = Any
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> jax.Array:
+    """Truncated-normal fan-in init (0.02-style for embeddings handled separately)."""
+    std = scale / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int) -> Pytree:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), pdtype(cfg)),
+                "bias": jnp.zeros((d,), pdtype(cfg))}
+    if cfg.norm == "nonparam_ln":      # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(params: Pytree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + 1e-6)
+        y = y * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        if cfg.norm == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x: jax.Array) -> jax.Array:
+    """Parameter-free RMS over the trailing (head) dim — qwen3 qk_norm."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + 1e-6)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Pytree:
+    p = {"embed": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                   * 0.02).astype(pdtype(cfg))}
+    if not cfg.tie_embeddings:
+        key2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(key2, cfg.d_model, cfg.vocab_size, pdtype(cfg))
+    return p
+
+
+def embed_tokens(params: Pytree, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"].astype(cdtype(cfg))[tokens]
+    return x
+
+
+def logits_apply(params: Pytree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cdtype(cfg)).T
+    else:
+        w = params["unembed"].astype(cdtype(cfg))
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c).astype(logits.dtype)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Pytree:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, cfg.d_model, d_ff, pdtype(cfg)),
+         "wo_mlp": dense_init(k2, d_ff, cfg.d_model, pdtype(cfg))}
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(k3, cfg.d_model, d_ff, pdtype(cfg))
+    return p
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+def mlp_apply(params: Pytree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = cdtype(cfg)
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+    h = constrain(h, ("batch", "model", None) if cfg.sharding_profile == "fsdp_sp"
+                  else ("batch", None, "model"))
+    h = _act(h, cfg.act)
+    if cfg.mlp_gated:
+        h = h * jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+    return jnp.einsum("...f,fd->...d", h, params["wo_mlp"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Attention (MHA / GQA / MQA) with optional cache
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, d_model: Optional[int] = None,
+                   cross: bool = False) -> Pytree:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"wq": dense_init(k1, d, cfg.n_heads * hd, pdtype(cfg)),
+         "wk": dense_init(k2, d, cfg.n_kv_heads * hd, pdtype(cfg)),
+         "wv": dense_init(k3, d, cfg.n_kv_heads * hd, pdtype(cfg)),
+         "wo": dense_init(k4, cfg.n_heads * hd, d, pdtype(cfg),
+                          scale=1.0 / math.sqrt(2 * cfg.n_layers))}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), pdtype(cfg))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), pdtype(cfg))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), pdtype(cfg))
+    return p
+
+
+def _project_qkv(params: Pytree, xq: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("...d,dh->...h", xq, params["wq"].astype(dt))
+    k = jnp.einsum("...d,dh->...h", xkv, params["wk"].astype(dt))
+    v = jnp.einsum("...d,dh->...h", xkv, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    # prefer head TP; fall back to query-sequence (context) parallelism when
+    # the head count does not divide the model axis (e.g. 40 heads on 16)
+    q = q.reshape(*q.shape[:-1], cfg.n_heads, hd)
+    k = k.reshape(*k.shape[:-1], cfg.n_kv_heads, hd)
+    v = v.reshape(*v.shape[:-1], cfg.n_kv_heads, hd)
+    if cfg.sharding_profile == "fsdp_sp":
+        # context parallelism: queries sharded on seq, kv full-seq (flash
+        # streams all kv blocks); kv gathers are one layer at a time
+        q = constrain(q, ("batch", "model", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    else:
+        q = constrain(q, ("batch", None, "model", None))
+        k = constrain(k, ("batch", None, "model", None))
+        v = constrain(v, ("batch", None, "model", None))
+    return q, k, v
+
+
+def attention_apply(params: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    causal: bool = True,
+                    use_rope: bool = True,
+                    cache: Optional[dict] = None,
+                    x_cross: Optional[jax.Array] = None) -> tuple[jax.Array, Optional[dict]]:
+    """Self- or cross-attention.
+
+    x: (B, S, D). `cache` (decode): {"k": (B, S_max, K, hd), "v": ..., "pos": scalar}
+    — new k/v are written at `pos`, attention runs over the full cache with a
+    validity mask. Returns (out, updated_cache_or_None).
+    """
+    from repro.kernels import ops  # local import to avoid cycles
+
+    xkv = x if x_cross is None else x_cross
+    q, k, v = _project_qkv(params, x, xkv, cfg)
+    if cfg.qk_norm:
+        q, k = rms_norm_headwise(q), rms_norm_headwise(k)
+    if use_rope and x_cross is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None and x_cross is None:
+        # decode: append new kv at cache["pos"], attend over cache
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                                 cache["pos"], axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                                 cache["pos"], axis=1)
+        out = ops.decode_attention(q, kc, vc, cache["pos"] + x.shape[1],
+                                   window=cfg.sliding_window)
+        new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + x.shape[1]}
+    else:
+        out = ops.flash_attention(q, k, v, causal=causal and x_cross is None,
+                                  window=cfg.sliding_window)
+        # expose this segment's k/v so prefill can build the decode cache
+        # (dead-code-eliminated by XLA in the train path)
+        new_cache = {"k": k, "v": v}
+
+    if cfg.sharding_profile == "fsdp_sp":
+        out = constrain(out, ("batch", "model", None, None))
+    else:
+        out = constrain(out, ("batch", None, "model", None))
+    out = out.reshape(*out.shape[:-2], cfg.n_heads * cfg.resolved_head_dim)
+    out = jnp.einsum("...h,hd->...d", out, params["wo"].astype(cdtype(cfg)))
+    return out, new_cache

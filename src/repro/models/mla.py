@@ -1,0 +1,114 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed-KV decode.
+
+Training/prefill decompress the latent into full per-head K/V and run flash
+attention (FLOP-dominant path). Decode uses the *absorbed* form: queries are
+projected into the latent space so the cache stays (S, kv_lora + rope_dim)
+per token — the memory win MLA exists for — and attention runs directly
+against the compressed cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, cdtype, dense_init, pdtype
+
+Pytree = Any
+
+
+def mla_init(key, cfg: ModelConfig) -> Pytree:
+    m = cfg.mla
+    d = cfg.d_model
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    keys = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(keys[0], d, cfg.n_heads * qk_dim, pdtype(cfg)),
+        "w_dkv": dense_init(keys[1], d, m.kv_lora_rank + m.qk_rope_head_dim, pdtype(cfg)),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), pdtype(cfg)),
+        "w_uk": dense_init(keys[2], m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim,
+                           pdtype(cfg)),
+        "w_uv": dense_init(keys[3], m.kv_lora_rank, cfg.n_heads * m.v_head_dim,
+                           pdtype(cfg)),
+        "wo": dense_init(keys[4], cfg.n_heads * m.v_head_dim, d, pdtype(cfg),
+                         scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _latent(params: Pytree, x: jax.Array, cfg: ModelConfig):
+    """Project to (normalized compressed kv latent, rope key)."""
+    m = cfg.mla
+    dt = cdtype(cfg)
+    ckv = jnp.einsum("...d,dr->...r", x, params["w_dkv"].astype(dt))
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    cf = c_kv.astype(jnp.float32)
+    cf = cf * jax.lax.rsqrt(jnp.mean(jnp.square(cf), -1, keepdims=True) + 1e-6)
+    c_kv = (cf * params["kv_norm_scale"].astype(jnp.float32)).astype(dt)
+    return c_kv, k_rope
+
+
+def _queries(params: Pytree, x: jax.Array, positions, cfg: ModelConfig):
+    m = cfg.mla
+    dt = cdtype(cfg)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("...d,dh->...h", x, params["wq"].astype(dt))
+    q = q.reshape(*q.shape[:-1], cfg.n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(params: Pytree, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array,
+              cache: Optional[dict] = None) -> tuple[jax.Array, Optional[dict]]:
+    from repro.kernels import ops
+
+    m = cfg.mla
+    dt = cdtype(cfg)
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    c_kv, k_rope_raw = _latent(params, x, cfg)
+    k_rope = apply_rope(k_rope_raw[..., None, :], positions, cfg.rope_theta)
+
+    if cache is None:
+        # train/prefill: decompress latent to per-head K/V, run flash attention
+        S = x.shape[1]
+        k_nope = jnp.einsum("...r,rh->...h", c_kv, params["w_uk"].astype(dt))
+        k_nope = k_nope.reshape(*x.shape[:-1], H, m.qk_nope_head_dim)
+        v = jnp.einsum("...r,rh->...h", c_kv, params["w_uv"].astype(dt))
+        v = v.reshape(*x.shape[:-1], H, m.v_head_dim)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (*k_nope.shape[:-1], m.qk_rope_head_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.flash_attention(q, k, v, causal=True)
+        # compressed-latent cache material for prefill (DCE'd in training)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    else:
+        # decode (absorbed): score against the compressed cache directly.
+        pos = cache["pos"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), pos, axis=1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[..., 0, :].astype(cache["k_rope"].dtype), pos, axis=1)
+        # absorb w_uk into the query: q_lat (B,1,H,R)
+        wuk = params["w_uk"].astype(dt).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, wuk)
+        scores = (jnp.einsum("bthr,bsr->bhts", q_lat.astype(jnp.float32),
+                             ckv_c.astype(jnp.float32))
+                  + jnp.einsum("bthn,bsn->bhts", q_rope.astype(jnp.float32),
+                               krope_c.astype(jnp.float32)))
+        scores = scores / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+        valid = jnp.arange(ckv_c.shape[1])[None, :] < pos + x.shape[1]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", probs, ckv_c.astype(jnp.float32))
+        wuv = params["w_uv"].astype(dt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bthr,rhv->bthv", o_lat.astype(dt), wuv)
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c, "pos": pos + x.shape[1]}
+
+    out = out.reshape(*x.shape[:-1], H * m.v_head_dim)
+    out = jnp.einsum("...h,hd->...d", out, params["wo"].astype(dt))
+    return out, new_cache

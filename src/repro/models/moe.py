@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based grouped dispatch.
+
+Dispatch follows the t5x/MaxText "dropping" scheme: tokens are grouped (group =
+batch row), each group routes into per-expert capacity buffers via one-hot
+einsums. This form shards cleanly under pjit — with the expert dimension on the
+"model" mesh axis the dispatch/combine einsums lower to all-to-alls (EP), and
+with experts replicated the expert GEMMs are plain TP over d_ff (mixtral's
+8 experts cannot split 16 ways; see launch/sharding.py).
+
+The dispatch einsums cost ~S/(3*d_ff) of the expert GEMM FLOPs (~10-20%);
+EXPERIMENTS.md §Roofline reports this overhead and §Perf tracks the capacity
+factor as a tuning knob.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers import _act, cdtype, dense_init, pdtype
+
+Pytree = Any
+
+
+def moe_init(key, cfg: ModelConfig) -> Pytree:
+    moe = cfg.moe
+    keys = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, moe.expert_d_ff, moe.n_experts
+    p = {
+        "router": dense_init(keys[0], d, e, pdtype(cfg)),
+        # stacked expert weights: (E, d, f) / (E, f, d)
+        "we_in": _stack_init(keys[1], e, d, f, pdtype(cfg)),
+        "we_gate": _stack_init(keys[2], e, d, f, pdtype(cfg)),
+        "we_out": _stack_init(keys[3], e, f, d, pdtype(cfg)),
+    }
+    if moe.n_shared_experts:
+        fs = moe.expert_d_ff * moe.n_shared_experts
+        ks = jax.random.split(keys[4], 3)
+        p["shared"] = {"wi": dense_init(ks[0], d, fs, pdtype(cfg)),
+                       "wg": dense_init(ks[1], d, fs, pdtype(cfg)),
+                       "wo_mlp": dense_init(ks[2], fs, d, pdtype(cfg))}
+    return p
+
+
+def _stack_init(key, e, d_in, d_out, dtype):
+    keys = jax.random.split(key, e)
+    return jnp.stack([dense_init(k, d_in, d_out, dtype) for k in keys])
+
+
+def _capacity(moe: MoEConfig, group_size: int) -> int:
+    c = int(group_size * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(moe.top_k, min(group_size, (c + 3) // 4 * 4))  # pad to multiple of 4
+
+
+def moe_apply(params: Pytree, x: jax.Array, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Group == batch row."""
+    moe = cfg.moe
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    C = _capacity(moe, S)
+
+    router_logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                               params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)                 # (G,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                  # (G,S,K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # position of each (token, slot) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)          # (G,S,K,E)
+    slot_flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(slot_flat, axis=1) - slot_flat                # 0-based rank
+    pos = pos.reshape(B, S, K, E)
+    within = (pos < C) & (onehot > 0)
+    pos_onehot = jax.nn.one_hot(jnp.where(within, pos, C), C + 1,
+                                dtype=dt)[..., :C]                 # (G,S,K,E,C)
+
+    combine = pos_onehot * gate_vals[..., None, None].astype(dt)   # (G,S,K,E,C)
+    combine = jnp.sum(combine, axis=2)                             # (G,S,E,C)
+    dispatch = jnp.sum(pos_onehot, axis=2)                         # (G,S,E,C) 0/1
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x.astype(dt))      # (G,E,C,D)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["we_in"].astype(dt))
+    h = _act(h, cfg.act)
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["we_gate"].astype(dt))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["we_out"].astype(dt))
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    if moe.n_shared_experts:
+        sp = params["shared"]
+        hs = _act(jnp.einsum("gsd,df->gsf", x, sp["wi"].astype(dt)), cfg.act)
+        hs = hs * jnp.einsum("gsd,df->gsf", x, sp["wg"].astype(dt))
+        y = y + jnp.einsum("gsf,fd->gsd", hs, sp["wo_mlp"].astype(dt))
+
+    # load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    assign_frac = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = moe.router_aux_weight * E * jnp.sum(assign_frac / K * mean_prob)
+    return y.astype(x.dtype), aux

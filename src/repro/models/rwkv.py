@@ -1,0 +1,157 @@
+"""RWKV6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+The wkv recurrence delegates to repro.kernels.ops.rwkv6_mix. Token-shift
+lerps use static per-channel mix coefficients (RWKV5 form); the decay w is
+data-dependent through a low-rank MLP — the RWKV6 signature feature called out
+in the assignment. Decode carries shift states and the per-head wkv state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+from repro.models.partitioning import constrain
+
+Pytree = Any
+
+
+def _dims(cfg: ModelConfig):
+    r = cfg.rwkv
+    n_heads = cfg.d_model // r.head_dim
+    return r, n_heads
+
+
+def timemix_init(key, cfg: ModelConfig) -> Pytree:
+    r, n_heads = _dims(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    return {
+        "mix_r": jnp.full((d,), 0.5, pdtype(cfg)),
+        "mix_k": jnp.full((d,), 0.5, pdtype(cfg)),
+        "mix_v": jnp.full((d,), 0.5, pdtype(cfg)),
+        "mix_w": jnp.full((d,), 0.5, pdtype(cfg)),
+        "mix_g": jnp.full((d,), 0.5, pdtype(cfg)),
+        "wr": dense_init(keys[0], d, d, pdtype(cfg)),
+        "wk": dense_init(keys[1], d, d, pdtype(cfg)),
+        "wv": dense_init(keys[2], d, d, pdtype(cfg)),
+        "wg": dense_init(keys[3], d, d, pdtype(cfg)),
+        "wo": dense_init(keys[4], d, d, pdtype(cfg),
+                         scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x @ A) @ B))
+        "w0": jnp.full((d,), -2.0, pdtype(cfg)),
+        "decay_a": dense_init(keys[5], d, r.decay_lora_rank, pdtype(cfg)),
+        "decay_b": dense_init(keys[6], r.decay_lora_rank, d, pdtype(cfg), scale=0.1),
+        "bonus_u": (jax.random.normal(keys[7], (n_heads, r.head_dim), jnp.float32)
+                    * 0.1).astype(pdtype(cfg)),
+        "ln_scale": jnp.ones((d,), pdtype(cfg)),  # per-head groupnorm scale
+    }
+
+
+def channelmix_init(key, cfg: ModelConfig) -> Pytree:
+    d = cfg.d_model
+    f = cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, pdtype(cfg)),
+        "mix_r": jnp.full((d,), 0.5, pdtype(cfg)),
+        "wk_c": dense_init(k1, d, f, pdtype(cfg)),
+        "wv_c": dense_init(k2, f, d, pdtype(cfg)),
+        "wr_c": dense_init(k3, d, d, pdtype(cfg)),
+    }
+
+
+def _token_shift(x: jax.Array, shift_state: Optional[jax.Array]
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Previous-token tensor; shift_state (B,1,D) is the last token of the
+    previous segment (decode). Returns (x_prev, new_shift_state)."""
+    if shift_state is None:
+        shift_state = jnp.zeros((x.shape[0], 1, x.shape[-1]), x.dtype)
+    prev = jnp.concatenate([shift_state, x[:, :-1]], axis=1)
+    return prev, x[:, -1:]
+
+
+def _lerp(x, prev, mix):
+    return x + (prev - x) * mix.astype(x.dtype)
+
+
+def timemix_apply(params: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                  cache: Optional[dict] = None
+                  ) -> tuple[jax.Array, Optional[dict]]:
+    """cache: {"shift": (B,1,D), "wkv": (B,H,K,V)}."""
+    from repro.kernels import ops
+
+    r, n_heads = _dims(cfg)
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    prev, new_shift = _token_shift(x, cache["shift"] if cache else None)
+
+    xr = _lerp(x, prev, params["mix_r"])
+    xk = _lerp(x, prev, params["mix_k"])
+    xv = _lerp(x, prev, params["mix_v"])
+    xw = _lerp(x, prev, params["mix_w"])
+    xg = _lerp(x, prev, params["mix_g"])
+
+    sp = cfg.sharding_profile == "fsdp_sp"
+    wide = ("batch", "model", None) if sp else ("batch", None, "model")
+    rr = constrain(jnp.einsum("bsd,dk->bsk", xr, params["wr"].astype(dt)), wide)
+    kk = constrain(jnp.einsum("bsd,dk->bsk", xk, params["wk"].astype(dt)), wide)
+    vv = constrain(jnp.einsum("bsd,dk->bsk", xv, params["wv"].astype(dt)), wide)
+    gg = constrain(jnp.einsum("bsd,dk->bsk", xg, params["wg"].astype(dt)), wide)
+    # data-dependent log decay (<0): -exp(w0 + tanh(xw A) B)
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                   params["decay_a"].astype(jnp.float32))),
+        params["decay_b"].astype(jnp.float32))
+    logw = -jnp.exp(params["w0"].astype(jnp.float32) + dd)       # (B,S,D)
+
+    hs = r.head_dim
+    rr = rr.reshape(B, S, n_heads, hs)
+    kk = kk.reshape(B, S, n_heads, hs)
+    vv = vv.reshape(B, S, n_heads, hs)
+    ww = logw.reshape(B, S, n_heads, hs)
+
+    y, new_wkv = ops.rwkv6_mix(rr, kk, vv, ww, params["bonus_u"].astype(jnp.float32),
+                               init_state=cache["wkv"] if cache else None)
+    # per-head groupnorm then silu(g) gate
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(yf - mu), axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+    yf = yf.reshape(B, S, D) * params["ln_scale"].astype(jnp.float32)
+    y = (yf * jax.nn.silu(gg.astype(jnp.float32))).astype(dt)
+    out = jnp.einsum("bsd,dk->bsk", y, params["wo"].astype(dt))
+    return out, {"shift": new_shift, "wkv": new_wkv}
+
+
+def channelmix_apply(params: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                     cache: Optional[dict] = None
+                     ) -> tuple[jax.Array, Optional[dict]]:
+    """cache: {"shift": (B,1,D)}."""
+    dt = cdtype(cfg)
+    prev, new_shift = _token_shift(x, cache["shift"] if cache else None)
+    xk = _lerp(x, prev, params["mix_k"])
+    xr = _lerp(x, prev, params["mix_r"])
+    sp = cfg.sharding_profile == "fsdp_sp"
+    k = constrain(jnp.einsum("bsd,df->bsf", xk, params["wk_c"].astype(dt)),
+                  ("batch", "model", None) if sp else ("batch", None, "model"))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, params["wv_c"].astype(dt))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr,
+                                      params["wr_c"].astype(dt)).astype(jnp.float32))
+    out = (rgate * v.astype(jnp.float32)).astype(dt)
+    return out, {"shift": new_shift}
+
+
+def rwkv_cache_shape(cfg: ModelConfig, batch: int) -> dict:
+    r, n_heads = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "tm_shift": jnp.zeros((batch, 1, cfg.d_model), cdt),
+        "wkv": jnp.zeros((batch, n_heads, r.head_dim, r.head_dim), jnp.float32),
+        "cm_shift": jnp.zeros((batch, 1, cfg.d_model), cdt),
+    }

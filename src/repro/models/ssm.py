@@ -1,0 +1,136 @@
+"""Mamba2 (SSD) block for the zamba2 hybrid architecture.
+
+Sequence mixing delegates to repro.kernels.ops.mamba2_mix (chunked SSD —
+Pallas on TPU, jnp mirror elsewhere). The input projection is split per
+segment (z / x / BC / dt) so tensor-parallel sharding never straddles segment
+boundaries; the depthwise causal conv uses explicit shifts so the decode path
+can carry a (width-1)-deep conv cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype
+from repro.models.partitioning import constrain
+
+Pytree = Any
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    bc_dim = 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, bc_dim
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Pytree:
+    s, d_inner, n_heads, bc_dim = _dims(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(keys[0], cfg.d_model, d_inner, pdtype(cfg)),
+        "wx": dense_init(keys[1], cfg.d_model, d_inner, pdtype(cfg)),
+        "wbc": dense_init(keys[2], cfg.d_model, bc_dim, pdtype(cfg)),
+        "wdt": dense_init(keys[3], cfg.d_model, n_heads, pdtype(cfg)),
+        "conv_x_w": (jax.random.normal(keys[4], (s.d_conv, d_inner), jnp.float32)
+                     / math.sqrt(s.d_conv)).astype(pdtype(cfg)),
+        "conv_x_b": jnp.zeros((d_inner,), pdtype(cfg)),
+        "conv_bc_w": (jax.random.normal(jax.random.fold_in(keys[4], 1),
+                                        (s.d_conv, bc_dim), jnp.float32)
+                      / math.sqrt(s.d_conv)).astype(pdtype(cfg)),
+        "conv_bc_b": jnp.zeros((bc_dim,), pdtype(cfg)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(pdtype(cfg)),
+        "d_skip": jnp.ones((n_heads,), pdtype(cfg)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01))).astype(pdtype(cfg)),
+        "gate_norm_scale": jnp.ones((d_inner,), pdtype(cfg)),
+        "w_out": dense_init(keys[5], d_inner, cfg.d_model, pdtype(cfg),
+                            scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(xin: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via explicit shifts. xin (B,S,C); w (W,C).
+
+    conv_state (B,W-1,C) holds the previous W-1 inputs (decode). Returns
+    (silu(conv(x)+b), new_conv_state)."""
+    W = w.shape[0]
+    B, S, C = xin.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), xin.dtype)
+    padded = jnp.concatenate([conv_state, xin], axis=1)      # (B, S+W-1, C)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        y = y + padded[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32)).astype(xin.dtype)
+    new_state = padded[:, S:]                                # last W-1 inputs
+    return y, new_state
+
+
+def mamba2_apply(params: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                 cache: Optional[dict] = None
+                 ) -> tuple[jax.Array, dict]:
+    """x (B,S,D) -> (y, cache'). cache: {"conv_x","conv_bc","ssm"}."""
+    from repro.kernels import ops
+
+    s, d_inner, n_heads, bc_dim = _dims(cfg)
+    dt_c = cdtype(cfg)
+    B, S, D = x.shape
+    sp = cfg.sharding_profile == "fsdp_sp"
+    # fsdp_sp: sequence-sharded activations, full channels (weights gathered
+    # per layer); tp: d_inner/channel tensor parallelism (Megatron-style)
+    x = constrain(x, ("batch", "model", None) if sp else ("batch", None, None))
+    wide = ("batch", "model", None) if sp else ("batch", None, "model")
+    z = constrain(jnp.einsum("bsd,dk->bsk", x, params["wz"].astype(dt_c)), wide)
+    xs = constrain(jnp.einsum("bsd,dk->bsk", x, params["wx"].astype(dt_c)), wide)
+    bc = constrain(jnp.einsum("bsd,dk->bsk", x, params["wbc"].astype(dt_c)), wide)
+    dt_raw = constrain(jnp.einsum("bsd,dk->bsk", x, params["wdt"].astype(dt_c)),
+                       wide)
+
+    xs, new_conv_x = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"],
+                                  cache["conv_x"] if cache else None)
+    bc, new_conv_bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"],
+                                   cache["conv_bc"] if cache else None)
+    b, c = jnp.split(bc, 2, axis=-1)
+    b = b.reshape(B, S, s.n_groups, s.d_state)
+    c = c.reshape(B, S, s.n_groups, s.d_state)
+    xh = xs.reshape(B, S, n_heads, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if cache is None:
+        y, final_state = ops.mamba2_mix(xh, dt, a, b, c,
+                                        params["d_skip"].astype(jnp.float32),
+                                        chunk=s.chunk_size)
+    else:
+        y, final_state = ops.mamba2_decode_step(
+            xh, dt, a, b, c, params["d_skip"].astype(jnp.float32),
+            state=cache["ssm"])
+    # final state + conv tails double as the prefill cache (DCE'd in training)
+    new_cache = {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": final_state}
+
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (Mamba2's norm-before-out-proj)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+    y = (yf * params["gate_norm_scale"].astype(jnp.float32)).astype(dt_c)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(dt_c))
+    return out, new_cache
+
+
+def mamba2_cache_shape(cfg: ModelConfig, batch: int) -> dict:
+    """Abstract zero-cache spec for one mamba layer."""
+    s, d_inner, n_heads, bc_dim = _dims(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_inner), cdt),
+        "conv_bc": jnp.zeros((batch, s.d_conv - 1, bc_dim), cdt),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,501 @@
+"""Unified decoder-LM assembly for the dense / moe / hybrid / ssm / vlm families.
+
+Layers are stacked (leading L dim) and executed with lax.scan so 64-layer
+configs compile one block body; `cfg.remat` wraps the body with jax.checkpoint.
+Each family provides three entry points used by launch/steps.py:
+
+    forward(params, batch)              -> (logits, aux_loss)      [train]
+    prefill(params, batch)              -> (last_logits, cache)    [serving]
+    decode(params, cache, tokens)       -> (logits, cache)         [serving]
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models.partitioning import (constrain, constrain_param_tree,
+                                       stream_cast)
+
+Pytree = Any
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save only block boundaries
+
+
+def _stack_layers(key, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Block definitions (dense / moe attention blocks; rwkv / mamba mixers)
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key, cfg: ModelConfig, use_moe: bool) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.norm_init(cfg, cfg.d_model), "ln2": L.norm_init(cfg, cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = MLA.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attention_init(k1, cfg)
+    if use_moe:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def _carry_dims(cfg: ModelConfig):
+    return (("batch", "model", None) if cfg.sharding_profile == "fsdp_sp"
+            else ("batch", None, None))
+
+
+def attn_block_apply(p: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                     positions, cache: Optional[dict] = None
+                     ) -> tuple[jax.Array, jax.Array, Optional[dict]]:
+    x = constrain(x, _carry_dims(cfg))
+    if cfg.mla is not None:
+        h, new_cache = MLA.mla_apply(p["attn"], L.norm_apply(p["ln1"], x, cfg), cfg,
+                                     positions=positions, cache=cache)
+    else:
+        h, new_cache = L.attention_apply(p["attn"], L.norm_apply(p["ln1"], x, cfg),
+                                         cfg, positions=positions, cache=cache)
+    x = x + h
+    h2in = L.norm_apply(p["ln2"], x, cfg)
+    if "moe" in p:
+        h2, aux = MOE.moe_apply(p["moe"], h2in, cfg)
+    else:
+        h2, aux = L.mlp_apply(p["mlp"], h2in, cfg), jnp.float32(0.0)
+    return x + h2, aux, new_cache
+
+
+def rwkv_block_init(key, cfg: ModelConfig) -> Pytree:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "ln2": L.norm_init(cfg, cfg.d_model),
+            "tm": RWKV.timemix_init(k1, cfg), "cm": RWKV.channelmix_init(k2, cfg)}
+
+
+def rwkv_block_apply(p: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                     cache: Optional[dict] = None
+                     ) -> tuple[jax.Array, Optional[dict]]:
+    tm_cache = None if cache is None else {"shift": cache["tm_shift"], "wkv": cache["wkv"]}
+    h, tm_new = RWKV.timemix_apply(p["tm"], L.norm_apply(p["ln1"], x, cfg), cfg,
+                                   cache=tm_cache)
+    x = x + h
+    cm_cache = None if cache is None else {"shift": cache["cm_shift"]}
+    h2, cm_new = RWKV.channelmix_apply(p["cm"], L.norm_apply(p["ln2"], x, cfg), cfg,
+                                       cache=cm_cache)
+    new_cache = {"tm_shift": tm_new["shift"], "wkv": tm_new["wkv"],
+                 "cm_shift": cm_new["shift"]}
+    return x + h2, new_cache
+
+
+def mamba_block_init(key, cfg: ModelConfig) -> Pytree:
+    return {"ln": L.norm_init(cfg, cfg.d_model), "mixer": SSM.mamba2_init(key, cfg)}
+
+
+def mamba_block_apply(p: Pytree, x: jax.Array, cfg: ModelConfig, *,
+                      cache: Optional[dict] = None
+                      ) -> tuple[jax.Array, Optional[dict]]:
+    h, new_cache = SSM.mamba2_apply(p["mixer"], L.norm_apply(p["ln"], x, cfg), cfg,
+                                    cache=cache)
+    return x + h, new_cache
+
+
+# zamba2 shared attention block with per-invocation LoRA on wq / wo ------------
+
+def shared_block_init(key, cfg: ModelConfig) -> Pytree:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_init(cfg, cfg.d_model), "ln2": L.norm_init(cfg, cfg.d_model),
+            "attn": L.attention_init(k1, cfg), "mlp": L.mlp_init(k2, cfg)}
+
+
+def shared_lora_init(key, cfg: ModelConfig, n_invocations: int) -> Pytree:
+    """Per-invocation low-rank adapters on the shared block's attn and mlp
+    branches (zamba2's depth-specialization of the shared weights; DESIGN.md
+    notes the simplified adapter placement)."""
+    r = cfg.hybrid.lora_rank
+    d = cfg.d_model
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn_a": L.dense_init(k1, d, r, L.pdtype(cfg)),
+                "attn_b": jnp.zeros((r, d), L.pdtype(cfg)),
+                "mlp_a": L.dense_init(k2, d, r, L.pdtype(cfg)),
+                "mlp_b": jnp.zeros((r, d), L.pdtype(cfg))}
+
+    return _stack_layers(key, n_invocations, one)
+
+
+def shared_block_apply(shared: Pytree, lora: Pytree, x: jax.Array,
+                       cfg: ModelConfig, *, positions,
+                       cache: Optional[dict] = None
+                       ) -> tuple[jax.Array, Optional[dict]]:
+    dt = L.cdtype(cfg)
+    xn = L.norm_apply(shared["ln1"], x, cfg)
+    h, new_cache = L.attention_apply(shared["attn"], xn, cfg,
+                                     positions=positions, cache=cache)
+    h = h + jnp.einsum("...d,dr,re->...e", xn, lora["attn_a"].astype(dt),
+                       lora["attn_b"].astype(dt))
+    x = x + h
+    x2n = L.norm_apply(shared["ln2"], x, cfg)
+    h2 = L.mlp_apply(shared["mlp"], x2n, cfg)
+    h2 = h2 + jnp.einsum("...d,dr,re->...e", x2n, lora["mlp_a"].astype(dt),
+                         lora["mlp_b"].astype(dt))
+    return x + h2, new_cache
+
+
+# ===========================================================================
+# Model-level assembly
+# ===========================================================================
+
+def init_params(key, cfg: ModelConfig) -> Pytree:
+    """Full parameter pytree for the decoder-LM families (not enc-dec)."""
+    k_embed, k_blocks, k_extra = jax.random.split(key, 3)
+    params: dict = {"embedding": L.embedding_init(k_embed, cfg),
+                    "final_norm": L.norm_init(cfg, cfg.d_model)}
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_layers(
+            k_blocks, cfg.n_layers, lambda k: attn_block_init(k, cfg, use_moe=False))
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            dense_cfg = cfg
+            keys = jax.random.split(k_extra, nd)
+            # leading dense layers use dense_d_ff
+            import dataclasses as _dc
+            dcfg = _dc.replace(cfg, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+            params["dense_blocks"] = [attn_block_init(k, dcfg, use_moe=False)
+                                      for k in keys]
+        params["blocks"] = _stack_layers(
+            k_blocks, cfg.n_layers - nd, lambda k: attn_block_init(k, cfg, use_moe=True))
+    elif cfg.family == "ssm":  # rwkv6
+        params["blocks"] = _stack_layers(
+            k_blocks, cfg.n_layers, lambda k: rwkv_block_init(k, cfg))
+    elif cfg.family == "hybrid":  # zamba2
+        params["blocks"] = _stack_layers(
+            k_blocks, cfg.n_layers, lambda k: mamba_block_init(k, cfg))
+        k_sh, k_lora = jax.random.split(k_extra)
+        n_inv = _n_shared_invocations(cfg)
+        params["shared"] = shared_block_init(k_sh, cfg)
+        params["lora"] = shared_lora_init(k_lora, cfg, n_inv)
+    else:
+        raise ValueError(f"init_params does not handle family {cfg.family!r}")
+
+    if cfg.vision is not None:
+        params["projector"] = L.dense_init(
+            jax.random.fold_in(k_extra, 7), cfg.vision.clip_dim, cfg.d_model,
+            L.pdtype(cfg))
+    return params
+
+
+def _n_shared_invocations(cfg: ModelConfig) -> int:
+    return (cfg.n_layers + cfg.hybrid.period - 1) // cfg.hybrid.period
+
+
+def _embed_inputs(params: Pytree, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+    if cfg.vision is not None and "patch_embeds" in batch:
+        patches = jnp.einsum("bnc,cd->bnd", batch["patch_embeds"].astype(L.cdtype(cfg)),
+                             params["projector"].astype(L.cdtype(cfg)))
+        x = jax.lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+    return x
+
+
+# --- train/prefill forward --------------------------------------------------
+
+def forward(params: Pytree, batch: dict, cfg: ModelConfig,
+            return_caches: bool = False, cache_len: int = 0):
+    """Full-sequence forward. Returns (logits, aux_loss[, caches])."""
+    params = {**params, "blocks": stream_cast(params["blocks"], cfg)}
+    x = _embed_inputs(params, batch, cfg)
+    x = constrain(x, _carry_dims(cfg))
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.float32(0.0)
+    caches = {}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.moe.first_dense_layers:
+            for p in params["dense_blocks"]:
+                import dataclasses as _dc
+                dcfg = _dc.replace(cfg, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+                x, aux, kv = attn_block_apply(p, x, dcfg, positions=positions,
+                                              cache=None)
+                aux_total += aux
+
+        def body(carry, blk):
+            xc, auxc = carry
+            blk = constrain_param_tree(blk)  # keep FSDP gathers per-layer
+            y, aux, _ = attn_block_apply(blk, xc, cfg, positions=positions)
+            return (y, auxc + aux), None
+
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(_remat(body, cfg), (x, aux_total),
+                                             constrain_param_tree(params["blocks"]))
+        else:
+            # unrolled: exact per-layer HLO (roofline cost analysis mode)
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            for i in range(n):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                (x, aux_total), _ = _remat(body, cfg)((x, aux_total), blk)
+    elif cfg.family == "ssm":
+        def body(carry, blk):
+            blk = constrain_param_tree(blk)
+            y, _ = rwkv_block_apply(blk, carry, cfg)
+            return y, None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(_remat(body, cfg), x,
+                                constrain_param_tree(params["blocks"]))
+        else:
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            for i in range(n):
+                blk = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, _ = _remat(body, cfg)(x, blk)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, x, cfg, positions)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.logits_apply(params["embedding"], x, cfg)
+    logits = constrain(logits, ("batch", None, "model"))
+    return logits, aux_total
+
+
+def _hybrid_forward(params: Pytree, x: jax.Array, cfg: ModelConfig, positions):
+    period = cfg.hybrid.period
+    n_inv = _n_shared_invocations(cfg)
+
+    def mamba_body(carry, blk):
+        blk = constrain_param_tree(blk)
+        y, _ = mamba_block_apply(blk, carry, cfg)
+        return y, None
+
+    body = _remat(mamba_body, cfg)
+    for g in range(n_inv):
+        lora_g = jax.tree.map(lambda a: a[g], params["lora"])
+        x, _ = shared_block_apply(params["shared"], lora_g, x, cfg,
+                                  positions=positions)
+        lo, hi = g * period, min((g + 1) * period, cfg.n_layers)
+        seg = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, constrain_param_tree(seg))
+        else:
+            for i in range(hi - lo):
+                blk = jax.tree.map(lambda a: a[i], seg)
+                x, _ = body(x, blk)
+    return x
+
+
+# --- serving: prefill + single-token decode ---------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, pos: int = 0) -> Pytree:
+    """Concrete zero cache (tests / serving). Structure mirrors what prefill
+    emits; launch.input_specs builds the abstract twin for the dry-run."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+
+    def attn_kv():
+        return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), cdt),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), cdt)}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            layer = {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), cdt),
+                     "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), cdt)}
+        else:
+            layer = attn_kv()
+        n_scan = cfg.n_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+        layers = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_scan, *a.shape)), layer)
+        cache = {"layers": layers, "pos": jnp.asarray(pos, jnp.int32)}
+        if cfg.moe and cfg.moe.first_dense_layers:
+            # the leading dense layers share the attention kind (MLA for
+            # deepseek), so their cache mirrors the scanned-layer structure
+            cache["dense_layers"] = [jax.tree.map(jnp.copy, layer)
+                                     for _ in range(cfg.moe.first_dense_layers)]
+        return cache
+    if cfg.family == "ssm":
+        from repro.models.rwkv import rwkv_cache_shape
+        layer = rwkv_cache_shape(cfg, batch)
+        layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+                              layer)
+        return {"layers": layers, "pos": jnp.asarray(pos, jnp.int32)}
+    if cfg.family == "hybrid":
+        from repro.models.ssm import mamba2_cache_shape
+        layer = mamba2_cache_shape(cfg, batch)
+        layers = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+                              layer)
+        n_inv = _n_shared_invocations(cfg)
+        shared = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_inv, *a.shape)),
+                              attn_kv())
+        return {"layers": layers, "shared": shared, "pos": jnp.asarray(pos, jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+
+def prefill(params: Pytree, batch: dict, cfg: ModelConfig, pad_to: int = 0):
+    """Run the prompt; return (logits, cache) with cache length max(S, pad_to).
+
+    Mixers always emit their cache material on the no-cache path (k/v, latent,
+    ssm/conv state, shift states); prefill pads attention k/v into max_len
+    buffers and stamps pos = S.
+    """
+    params = {**params, "blocks": stream_cast(params["blocks"], cfg)}
+    x = _embed_inputs(params, batch, cfg)
+    B, S, D = x.shape
+    max_len = max(S, pad_to)
+    positions = jnp.arange(S)[None, :]
+
+    def pad_seq(kv):
+        """(B, S, ...) -> (B, max_len, ...) zero-padded on the seq axis."""
+        if max_len == S:
+            return kv
+        pad = [(0, 0)] * kv.ndim
+        pad[1] = (0, max_len - S)
+        return jnp.pad(kv, pad)
+
+    cache: dict = {"pos": jnp.asarray(S, jnp.int32)}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.moe.first_dense_layers:
+            import dataclasses as _dc
+            dcfg = _dc.replace(cfg, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+            dense_caches = []
+            for p in params["dense_blocks"]:
+                x, _, kv = attn_block_apply(p, x, dcfg, positions=positions)
+                dense_caches.append(jax.tree.map(pad_seq, kv))
+            cache["dense_layers"] = dense_caches
+
+        def body(xc, blk):
+            blk = constrain_param_tree(blk)
+            y, _, kv = attn_block_apply(blk, xc, cfg, positions=positions)
+            return y, jax.tree.map(pad_seq, kv)
+
+        x, layer_caches = jax.lax.scan(body, x,
+                                       constrain_param_tree(params["blocks"]))
+        cache["layers"] = layer_caches
+    elif cfg.family == "ssm":
+        def body(xc, blk):
+            y, c = rwkv_block_apply(blk, xc, cfg)
+            return y, c
+
+        x, layer_caches = jax.lax.scan(body, x, params["blocks"])
+        cache["layers"] = layer_caches
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid.period
+        n_inv = _n_shared_invocations(cfg)
+
+        def body(xc, blk):
+            y, c = mamba_block_apply(blk, xc, cfg)
+            return y, c
+
+        seg_caches, shared_caches = [], []
+        for g in range(n_inv):
+            lora_g = jax.tree.map(lambda a: a[g], params["lora"])
+            x, kv = shared_block_apply(params["shared"], lora_g, x, cfg,
+                                       positions=positions)
+            shared_caches.append(jax.tree.map(pad_seq, kv))
+            lo, hi = g * period, min((g + 1) * period, cfg.n_layers)
+            seg = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+            x, cseg = jax.lax.scan(body, x, seg)
+            seg_caches.append(cseg)
+        cache["layers"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *seg_caches)
+        cache["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_caches)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.logits_apply(params["embedding"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode(params: Pytree, cache: Pytree, batch: dict, cfg: ModelConfig):
+    """One decode step: batch["tokens"] (B, 1) -> (logits (B,1,V), new cache)."""
+    params = {**params, "blocks": stream_cast(params["blocks"], cfg)}
+    x = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+    B, S_new, D = x.shape
+    pos = cache["pos"]
+    positions = pos + jnp.arange(S_new)[None, :]
+    new_cache: dict = {"pos": pos + S_new}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.moe.first_dense_layers:
+            import dataclasses as _dc
+            dcfg = _dc.replace(cfg, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+            new_dense = []
+            for p, c in zip(params["dense_blocks"], cache["dense_layers"]):
+                x, _, cn = attn_block_apply(p, x, dcfg, positions=positions,
+                                            cache={**c, "pos": pos})
+                new_dense.append({k: cn[k] for k in c})
+            new_cache["dense_layers"] = new_dense
+
+        def body(xc, scanned):
+            blk, c = scanned
+            blk = constrain_param_tree(blk)
+            y, _, cn = attn_block_apply(blk, xc, cfg, positions=positions,
+                                        cache={**c, "pos": pos})
+            return y, {k: cn[k] for k in c}
+
+        x, layers = jax.lax.scan(
+            body, x, (constrain_param_tree(params["blocks"]), cache["layers"]))
+        new_cache["layers"] = layers
+    elif cfg.family == "ssm":
+        def body(xc, scanned):
+            blk, c = scanned
+            y, cn = rwkv_block_apply(blk, xc, cfg, cache=c)
+            return y, cn
+
+        x, layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        new_cache["layers"] = layers
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid.period
+        n_inv = _n_shared_invocations(cfg)
+
+        def body(xc, scanned):
+            blk, c = scanned
+            y, cn = mamba_block_apply(blk, xc, cfg, cache=c)
+            return y, cn
+
+        seg_caches, shared_caches = [], []
+        for g in range(n_inv):
+            lora_g = jax.tree.map(lambda a: a[g], params["lora"])
+            shc = jax.tree.map(lambda a: a[g], cache["shared"])
+            x, shn = shared_block_apply(params["shared"], lora_g, x, cfg,
+                                        positions=positions,
+                                        cache={**shc, "pos": pos})
+            shared_caches.append({k: shn[k] for k in shc})
+            lo, hi = g * period, min((g + 1) * period, cfg.n_layers)
+            seg_p = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+            seg_c = jax.tree.map(lambda a: a[lo:hi], cache["layers"])
+            x, cseg = jax.lax.scan(body, x, (seg_p, seg_c))
+            seg_caches.append(cseg)
+        new_cache["layers"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *seg_caches)
+        new_cache["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0),
+                                           *shared_caches)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.logits_apply(params["embedding"], x, cfg)
+    return logits, new_cache

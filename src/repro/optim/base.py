@@ -1,0 +1,244 @@
+"""Minimal optax-style gradient-transform substrate.
+
+optax is not available in this environment, so the framework carries its own
+composable transform layer. The interface is deliberately optax-compatible
+(init/update pairs, chain) so the SAM family in `repro.core` composes with any
+inner optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import trees
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class GradientTransform(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]  # (grads, state, params) -> (updates, state)
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    """Compose transforms left-to-right (optax.chain semantics)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+def identity() -> GradientTransform:
+    return GradientTransform(lambda p: (), lambda g, s, p=None: (g, s))
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup_steps: int = 0,
+                    final_fraction: float = 0.0) -> Schedule:
+    """Linear warmup then cosine decay to `final_fraction * peak`."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        decay_steps = jnp.maximum(1.0, total_steps - warmup_steps)
+        frac = jnp.clip((step - warmup_steps) / decay_steps, 0.0, 1.0)
+        cos = final_fraction + (1.0 - final_fraction) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak * cos)
+
+    return sched
+
+
+def step_decay_schedule(peak: float, boundaries: Sequence[int],
+                        factor: float = 0.1) -> Schedule:
+    """Piecewise-constant decay (the paper's CIFAR recipes use this shape)."""
+    bounds = jnp.asarray(list(boundaries), jnp.float32)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        n = jnp.sum(step >= bounds)
+        return peak * factor ** n
+
+    return sched
+
+
+def as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant_schedule(float(lr))
+
+
+# ---------------------------------------------------------------------------
+# Core transforms
+# ---------------------------------------------------------------------------
+
+class ScaleByScheduleState(NamedTuple):
+    step: jax.Array
+
+
+def scale_by_learning_rate(lr) -> GradientTransform:
+    sched = as_schedule(lr)
+
+    def init(params):
+        return ScaleByScheduleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        eta = sched(state.step)
+        updates = trees.tree_scale(grads, -eta)
+        return updates, ScaleByScheduleState(step=state.step + 1)
+
+    return GradientTransform(init, update)
+
+
+class TraceState(NamedTuple):
+    momentum: Pytree
+
+
+def trace(decay: float, nesterov: bool = False) -> GradientTransform:
+    """Heavy-ball / Nesterov momentum."""
+
+    def init(params):
+        return TraceState(momentum=trees.tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda mi, gi: decay * mi + gi.astype(jnp.float32),
+                         state.momentum, grads)
+        if nesterov:
+            out = jax.tree.map(lambda mi, gi: decay * mi + gi.astype(jnp.float32), m, grads)
+        else:
+            out = m
+        out = jax.tree.map(lambda o, g: o.astype(g.dtype), out, grads)
+        return out, TraceState(momentum=m)
+
+    return GradientTransform(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransform:
+    def init(params):
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=trees.tree_zeros_like(params, jnp.float32),
+                         nu=trees.tree_zeros_like(params, jnp.float32))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, g: ((m / c1) / (jnp.sqrt(v / c2) + eps)).astype(g.dtype),
+            mu, nu, grads)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return GradientTransform(init, update)
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask_fn: Optional[Callable[[str], bool]] = None) -> GradientTransform:
+    """Decoupled weight decay; `mask_fn(path)` selects decayed leaves (skip norms/bias)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        if mask_fn is None:
+            out = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        else:
+            paths = trees.tree_paths(grads)
+            flat, treedef = jax.tree.flatten(grads)
+            flat_p = jax.tree.leaves(params)
+            new = [g + weight_decay * p.astype(g.dtype) if mask_fn(path) else g
+                   for path, g, p in zip(paths, flat, flat_p)]
+            out = jax.tree.unflatten(treedef, new)
+        return out, state
+
+    return GradientTransform(init, update)
+
+
+class ClipState(NamedTuple):
+    last_norm: jax.Array
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def init(params):
+        return ClipState(last_norm=jnp.zeros((), jnp.float32))
+
+    def update(grads, state, params=None):
+        gnorm = trees.global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        out = trees.tree_scale(grads, scale)
+        out = jax.tree.map(lambda o, g: o.astype(g.dtype), out, grads)
+        return out, ClipState(last_norm=gnorm)
+
+    return GradientTransform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# User-facing optimizers
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0, clip_norm: Optional[float] = None) -> GradientTransform:
+    parts = []
+    if clip_norm is not None:
+        parts.append(clip_by_global_norm(clip_norm))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    if momentum:
+        parts.append(trace(momentum, nesterov=nesterov))
+    parts.append(scale_by_learning_rate(lr))
+    return chain(*parts)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01, clip_norm: Optional[float] = None,
+          decay_mask: Optional[Callable[[str], bool]] = None) -> GradientTransform:
+    parts = []
+    if clip_norm is not None:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, decay_mask))
+    parts.append(scale_by_learning_rate(lr))
+    return chain(*parts)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def make_optimizer(name: str, lr, **kw) -> GradientTransform:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

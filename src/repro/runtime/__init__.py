@@ -1,0 +1,8 @@
+from repro.runtime.async_executor import AsyncSamExecutor, ExecutorConfig  # noqa: F401
+from repro.runtime.elastic import reshard_state, state_shardings  # noqa: F401
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    InjectedFailure,
+    ResilienceConfig,
+    RunReport,
+    run_resilient,
+)

@@ -1,0 +1,188 @@
+"""Heterogeneous asynchronous executor — the paper's two-process scheme.
+
+Faithful port of the MPI design (paper §3.3/§3.4) onto host threads + a
+depth-1 queue:
+
+* the DESCENT lane (fast resource) runs `descent_fn` — one model update per
+  step, perturbing with whatever ascent gradient is currently held;
+* the ASCENT lane (slow resource, dedicated thread) runs `ascent_fn` on b'
+  samples against a *snapshot* of the parameters — by construction one step
+  old when consumed: tau = 1 (Algorithm 1);
+* if the ascent lane has not delivered by the time the descent lane needs it,
+  the held gradient is reused and its age grows (tau = 2, 3, ...) up to
+  `max_staleness`, after which the step degrades to plain SGD — the
+  AsyncSAM-specific straggler mitigation (a straggling helper can slow
+  convergence but can never stall training);
+* `calibrate()` measures per-sample gradient times on both lanes and returns
+  the system-aware b' = (T_f / T_s) * b of paper §3.3.
+
+Lanes may live on different jax devices (CPU + accelerator on real machines;
+two CPU streams in this container). All queue hand-offs are host arrays, so
+the scheme also models the PCIe hop of the paper's CPU<->GPU setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import (Compressor, MethodConfig, StalenessLedger, TrainState,
+                        make_ascent_fn, make_descent_fn, split_batch,
+                        system_aware_ascent_fraction)
+from repro.core.api import LossFn
+from repro.optim import GradientTransform
+from repro.utils import trees
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ExecutorConfig:
+    max_staleness: int = 4
+    ascent_device: Optional[jax.Device] = None   # the "slow" resource
+    descent_device: Optional[jax.Device] = None  # the "fast" resource
+    ascent_delay_s: float = 0.0                  # test hook: straggler injection
+
+
+class AsyncSamExecutor:
+    def __init__(self, loss_fn: LossFn, method_cfg: MethodConfig,
+                 optimizer: GradientTransform,
+                 exec_cfg: Optional[ExecutorConfig] = None):
+        self.cfg = method_cfg
+        self.xcfg = exec_cfg or ExecutorConfig()
+        self.ledger = StalenessLedger(max_staleness=self.xcfg.max_staleness)
+        # lossy compression of the cross-resource hand-off (the perturbation
+        # direction tolerates quantization by the same sigma^2/b' argument
+        # that tolerates b' < b; DESIGN.md §2)
+        self._compressor = Compressor(kind=method_cfg.compressor,
+                                      topk_fraction=method_cfg.topk_fraction)
+        self._comp_state = None
+        self.wire_bytes_per_exchange = 0
+        self._ascent_raw = jax.jit(make_ascent_fn(loss_fn))
+        self._descent = jax.jit(make_descent_fn(method_cfg, loss_fn, optimizer),
+                                donate_argnums=(0,))
+        self._jobs: queue.Queue = queue.Queue(maxsize=1)
+        self._results: queue.Queue = queue.Queue(maxsize=1)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._ascent_worker, daemon=True)
+        self._thread.start()
+        # held perturbation direction (host-side fp32 pytree)
+        self._held: Optional[tuple[Pytree, jax.Array]] = None
+        self.timings = {"ascent": [], "descent": []}
+
+    # --- ascent lane -----------------------------------------------------------
+    def _place(self, tree: Pytree, device) -> Pytree:
+        if device is None:
+            return tree
+        return jax.tree.map(lambda x: jax.device_put(x, device), tree)
+
+    def _ascent_worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                params, batch, rng = self._jobs.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            t0 = time.perf_counter()
+            if self.xcfg.ascent_delay_s:
+                time.sleep(self.xcfg.ascent_delay_s)  # injected straggle
+            params = self._place(params, self.xcfg.ascent_device)
+            batch = self._place(batch, self.xcfg.ascent_device)
+            g, norm, _ = self._ascent_raw(params, batch, rng)
+            if self._compressor.kind != "none":
+                if self._comp_state is None:
+                    self._comp_state = self._compressor.init(g)
+                g, self._comp_state = self._compressor.compress(g, self._comp_state)
+                import jax.numpy as _jnp
+                norm = float(jax.numpy.sqrt(sum(
+                    float(_jnp.sum(_jnp.square(x))) for x in jax.tree.leaves(g))))
+            else:
+                norm = float(norm)
+            self.wire_bytes_per_exchange = self._compressor.wire_bytes(g)
+            g = jax.device_get(g)           # model the cross-resource hop
+            self.timings["ascent"].append(time.perf_counter() - t0)
+            try:
+                self._results.put((g, norm), timeout=1.0)
+            except queue.Full:
+                pass                         # consumer lagging: drop (stale anyway)
+
+    # --- step ------------------------------------------------------------------
+    def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        descent_batch, ascent_batch = split_batch(batch)
+        if ascent_batch is None:
+            from repro.core import slice_ascent_batch
+            ascent_batch = slice_ascent_batch(descent_batch,
+                                              self.cfg.ascent_fraction)
+
+        # harvest a finished ascent gradient (fresh => tau resets to 1)
+        try:
+            g, norm = self._results.get_nowait()
+            self._held = (g, norm)
+            self.ledger.on_fresh()
+            have = True
+        except queue.Empty:
+            have = self._held is not None and self.ledger.on_reuse()
+
+        # submit the next ascent job against the CURRENT params (it will be
+        # one step old when used — Algorithm 1 line 3)
+        if not self._jobs.full():
+            rng = jax.random.fold_in(state.rng, state.step)
+            self._jobs.put_nowait((jax.device_get(state.params), ascent_batch, rng))
+
+        t0 = time.perf_counter()
+        if self._held is not None:
+            g, norm = self._held
+        else:
+            g, norm = trees.tree_zeros_like(state.params), 0.0
+        new_state, metrics = self._descent(
+            state, descent_batch, g, np.float32(norm), np.bool_(have))
+        jax.block_until_ready(new_state.params)
+        self.timings["descent"].append(time.perf_counter() - t0)
+        metrics = dict(metrics)
+        metrics["tau"] = self.ledger.tau
+        metrics["perturbed"] = float(have)
+        return new_state, metrics
+
+    # --- system-aware b' (paper §3.3) -------------------------------------------
+    def calibrate(self, state: TrainState, batch: dict, probes: int = 3) -> float:
+        """Measure per-sample grad times on both lanes; return suggested b'/b."""
+        descent_batch, ascent_batch = split_batch(batch)
+        if ascent_batch is None:
+            ascent_batch = descent_batch
+        rng = state.rng
+        # warmup + timed runs on the ascent (slow) lane
+        a_in = self._place(state.params, self.xcfg.ascent_device)
+        b_in = self._place(ascent_batch, self.xcfg.ascent_device)
+        jax.block_until_ready(self._ascent_raw(a_in, b_in, rng)[0])
+        t0 = time.perf_counter()
+        for _ in range(probes):
+            if self.xcfg.ascent_delay_s:
+                time.sleep(self.xcfg.ascent_delay_s)
+            jax.block_until_ready(self._ascent_raw(a_in, b_in, rng)[0])
+        n_asc = jax.tree.leaves(ascent_batch)[0].shape[0]
+        t_slow = (time.perf_counter() - t0) / probes / n_asc
+
+        # descent lane per-sample time (reuse ascent_fn as the probe kernel)
+        d_in = self._place(state.params, self.xcfg.descent_device)
+        db_in = self._place(descent_batch, self.xcfg.descent_device)
+        jax.block_until_ready(self._ascent_raw(d_in, db_in, rng)[0])
+        t0 = time.perf_counter()
+        for _ in range(probes):
+            jax.block_until_ready(self._ascent_raw(d_in, db_in, rng)[0])
+        n_desc = jax.tree.leaves(descent_batch)[0].shape[0]
+        t_fast = (time.perf_counter() - t0) / probes / n_desc
+        return system_aware_ascent_fraction(t_fast, t_slow)
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,38 @@
+"""Elastic scaling: move a training state between meshes of different size.
+
+A checkpoint written on one mesh restores onto another because the manager
+stores full (unsharded) host arrays; this module provides the in-memory
+equivalent — `reshard_state(state, cfg, new_mesh)` re-device_puts every leaf
+against the sharding rules evaluated on the new mesh. Combined with the
+fault-tolerant driver this implements shrink/grow recovery: lose a pod ->
+restore the last checkpoint onto the surviving 16x16 mesh and keep training
+(global batch is preserved; per-device batch grows).
+
+tests/test_elastic.py round-trips 1-device -> 8-device(2x4) -> 4-device(2x2)
+and asserts loss-trajectory equality against an unresharded run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.launch.sharding import state_spec_tree, to_named
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+
+def state_shardings(state_like: Pytree, cfg: ModelConfig, mesh) -> Pytree:
+    """NamedShardings for a TrainState(-like) pytree on `mesh`."""
+    return to_named(state_spec_tree(state_like, cfg, mesh), mesh)
+
+
+def reshard_state(state: Pytree, cfg: ModelConfig, new_mesh) -> Pytree:
+    """Re-place every leaf of `state` onto `new_mesh` under the arch rules."""
+    shardings = state_shardings(jax.eval_shape(lambda: state), cfg, new_mesh)
+    flat_s, treedef = jax.tree.flatten(state)
+    flat_sh = jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
+    out = [jax.device_put(jax.device_get(x), sh)
+           for x, sh in zip(flat_s, flat_sh)]
+    return jax.tree.unflatten(treedef, out)

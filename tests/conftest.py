@@ -1,0 +1,39 @@
+"""Shared pytest fixtures.
+
+Device count stays 1 here (the dry-run sets its own XLA_FLAGS in a subprocess;
+smoke tests and benches must see the real single CPU device). Mesh-dependent
+tests spawn subprocesses via `run_py` with their own device-count flags.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="session")
+def repo_root() -> pathlib.Path:
+    return REPO
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run `code` in a fresh python with a fake multi-device CPU platform."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.fixture
+def subprocess_py():
+    return run_py

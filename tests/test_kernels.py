@@ -1,0 +1,192 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs the pure-jnp oracles.
+
+Each kernel is swept over shapes and dtypes per the deliverable requirement;
+the jnp "fast paths" used on CPU (flash scan, chunked SSD) are themselves
+validated against the naive references.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_scan import mamba2_chunked
+from repro.kernels.rwkv6_scan import rwkv6_chunked
+from repro.kernels.sam_perturb import sam_perturb, sq_norm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA
+    (1, 128, 8, 1, 128),    # MQA, bigger head
+    (2, 128, 4, 4, 32),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64), (False, None)])
+def test_flash_attention_pallas_vs_reference(b, s, h, kv, hd, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("s,kv_block", [(256, 64), (512, 128)])
+def test_flash_jnp_scan_vs_naive(s, kv_block):
+    """The CPU/dry-run fast path is FLOP- and value-equivalent to naive."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, 4, 64))
+    k = jax.random.normal(ks[1], (2, s, 2, 64))
+    v = jax.random.normal(ks[2], (2, s, 2, 64))
+    out = ref.flash_attention_jnp(q, k, v, causal=True, kv_block=kv_block)
+    expect = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_mla_unequal_value_dim():
+    """MLA decompressed attention: qk dim 48, v dim 32."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 48))
+    k = jax.random.normal(ks[1], (2, 128, 4, 48))
+    v = jax.random.normal(ks[2], (2, 128, 4, 32))
+    out = ref.flash_attention_jnp(q, k, v, causal=True, kv_block=64)
+    expect = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_masked_reference():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 64))
+    k = jax.random.normal(ks[1], (2, 64, 2, 64))
+    v = jax.random.normal(ks[2], (2, 64, 2, 64))
+    valid = jnp.asarray(40)
+    out = ref.decode_attention_jnp(q, k, v, valid)
+    expect = ref.mha_reference(q, k[:, :40], v[:, :40], causal=False)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# sam perturb
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1000, 65536, 200_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sam_perturb_kernel(n, dtype):
+    ks = jax.random.split(KEY, 2)
+    w = jax.random.normal(ks[0], (n,), dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    sn = sq_norm(g, interpret=True)
+    assert float(sn) == pytest.approx(float(jnp.sum(g * g)), rel=1e-5)
+    out = sam_perturb(w, g, 0.1, sn, interpret=True)
+    expect = ref.sam_perturb_flat_jnp(w.astype(jnp.float32), g,
+                                      jnp.float32(0.1), sn).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# mamba2 chunked SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64)])
+@pytest.mark.parametrize("h,p,g,n", [(4, 32, 1, 16), (2, 16, 2, 16)])
+def test_mamba2_pallas_vs_sequential(s, chunk, h, p, g, n):
+    ks = jax.random.split(KEY, 4)
+    B = 2
+    x = jax.random.normal(ks[0], (B, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, h)))
+    a = -jnp.exp(jnp.linspace(-1.0, 1.0, h))
+    b = jax.random.normal(ks[2], (B, s, g, n)) * 0.3
+    c = jax.random.normal(ks[3], (B, s, g, n)) * 0.3
+    d = jnp.full((h,), 0.5)
+    y_k, h_k = mamba2_chunked(x, dt, a, b, c, d, chunk=chunk, interpret=True)
+    y_r, h_r = ref.mamba2_scan_ref(x, dt, a, b, c, d)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h_k, h_r, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_chunked_jnp_vs_sequential():
+    ks = jax.random.split(KEY, 4)
+    B, s, h, p, g, n = 2, 128, 4, 16, 1, 8
+    x = jax.random.normal(ks[0], (B, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, h)))
+    a = -jnp.exp(jnp.linspace(-1.0, 1.0, h))
+    b = jax.random.normal(ks[2], (B, s, g, n)) * 0.3
+    c = jax.random.normal(ks[3], (B, s, g, n)) * 0.3
+    d = jnp.full((h,), 0.5)
+    y_c, h_c = ref.mamba2_chunked_jnp(x, dt, a, b, c, d, chunk=32)
+    y_r, h_r = ref.mamba2_scan_ref(x, dt, a, b, c, d)
+    np.testing.assert_allclose(y_c, y_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h_c, h_r, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_state_continuation():
+    """Splitting a sequence across two scans with carried state == one scan."""
+    ks = jax.random.split(KEY, 4)
+    B, s, h, p, g, n = 1, 64, 2, 8, 1, 8
+    x = jax.random.normal(ks[0], (B, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, h)))
+    a = -jnp.exp(jnp.linspace(-1.0, 0.0, h))
+    b = jax.random.normal(ks[2], (B, s, g, n)) * 0.3
+    c = jax.random.normal(ks[3], (B, s, g, n)) * 0.3
+    d = jnp.zeros((h,))
+    y_full, h_full = ref.mamba2_scan_ref(x, dt, a, b, c, d)
+    y1, h1 = ref.mamba2_scan_ref(x[:, :32], dt[:, :32], a, b[:, :32], c[:, :32], d)
+    y2, h2 = ref.mamba2_scan_ref(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
+                                 d, init_state=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h2, h_full, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32)])
+@pytest.mark.parametrize("k,v", [(16, 16), (32, 32)])
+def test_rwkv6_pallas_vs_sequential(s, chunk, k, v):
+    ks = jax.random.split(KEY, 5)
+    B, H = 2, 2
+    r = jax.random.normal(ks[0], (B, s, H, k)) * 0.5
+    kk = jax.random.normal(ks[1], (B, s, H, k)) * 0.5
+    vv = jax.random.normal(ks[2], (B, s, H, v)) * 0.5
+    w = -jnp.exp(jax.random.normal(ks[3], (B, s, H, k)) * 0.5 - 2.0)
+    u = jax.random.normal(ks[4], (H, k)) * 0.1
+    y_k, s_k = rwkv6_chunked(r, kk, vv, w, u, chunk=chunk, interpret=True)
+    y_r, s_r = ref.rwkv6_scan_ref(r, kk, vv, w, u)
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_state_continuation():
+    ks = jax.random.split(KEY, 5)
+    B, s, H, k = 1, 64, 2, 8
+    r = jax.random.normal(ks[0], (B, s, H, k)) * 0.5
+    kk = jax.random.normal(ks[1], (B, s, H, k)) * 0.5
+    vv = jax.random.normal(ks[2], (B, s, H, k)) * 0.5
+    w = -jnp.exp(jax.random.normal(ks[3], (B, s, H, k)) * 0.3 - 2.0)
+    u = jax.random.normal(ks[4], (H, k)) * 0.1
+    y_full, s_full = ref.rwkv6_scan_ref(r, kk, vv, w, u)
+    y1, s1 = ref.rwkv6_scan_ref(r[:, :32], kk[:, :32], vv[:, :32], w[:, :32], u)
+    y2, s2 = ref.rwkv6_scan_ref(r[:, 32:], kk[:, 32:], vv[:, 32:], w[:, 32:], u,
+                                init_state=s1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s2, s_full, rtol=1e-5, atol=1e-5)

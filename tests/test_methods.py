@@ -1,0 +1,216 @@
+"""Semantics of the SAM family (the paper's core, Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (MethodConfig, init_train_state, make_method, perturb)
+from repro.utils import trees
+
+
+def quad_loss(params, batch, rng):
+    """L(w) = 0.5 * w' A w with fixed PSD A — gradients are exact: A w."""
+    A = batch["A"]
+    w = params["w"]
+    return 0.5 * w @ A @ w, {"logits": w[None, :]}
+
+
+def _setup(name, rho=0.1, lr=0.05, **kw):
+    cfg = MethodConfig(name=name, rho=rho, **kw)
+    method = make_method(cfg)
+    opt = optim.sgd(lr)
+    return cfg, method, opt
+
+
+def _quad_batch(dim=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    M = jax.random.normal(key, (dim, dim))
+    return {"A": M @ M.T / dim + jnp.eye(dim)}
+
+
+def test_sam_step_matches_closed_form():
+    """One SAM step on the quadratic equals the hand-derived update (Eq. 1)."""
+    batch = _quad_batch()
+    A = batch["A"]
+    w0 = jnp.arange(1.0, 7.0)
+    cfg, method, opt = _setup("sam", rho=0.1, lr=0.05)
+    state = init_train_state({"w": w0}, opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    state, metrics = step(state, batch)
+
+    g = A @ w0
+    w_hat = w0 + 0.1 * g / jnp.linalg.norm(g)
+    expected = w0 - 0.05 * (A @ w_hat)
+    np.testing.assert_allclose(state.params["w"], expected, rtol=1e-5)
+
+
+def test_async_sam_first_step_is_sgd_then_uses_stale_gradient():
+    """Algorithm 1: step 0 unperturbed; step 1 perturbs with a_0 (tau=1)."""
+    batch = _quad_batch()
+    A = batch["A"]
+    w0 = jnp.arange(1.0, 7.0)
+    cfg, method, opt = _setup("async_sam", rho=0.1, lr=0.05,
+                              ascent_fraction=1.0, same_batch_ascent=True)
+    state = init_train_state({"w": w0}, opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+
+    state, m0 = step(state, batch)
+    assert m0["perturbed"] == 0.0                       # line 8: plain SGD
+    w1_expected = w0 - 0.05 * (A @ w0)
+    np.testing.assert_allclose(state.params["w"], w1_expected, rtol=1e-5)
+
+    a0 = A @ w0                                         # the stored a_{t-1}
+    state, m1 = step(state, batch)
+    assert m1["perturbed"] == 1.0
+    w1 = w1_expected
+    w_hat = w1 + 0.1 * a0 / jnp.linalg.norm(a0)         # stale direction!
+    w2_expected = w1 - 0.05 * (A @ w_hat)
+    np.testing.assert_allclose(state.params["w"], w2_expected, rtol=1e-5)
+
+
+def test_async_sam_tracks_sam_when_gradients_stable():
+    """On a quadratic with a small lr, consecutive gradients are nearly
+    parallel (paper Fig. 1 regime) => AsyncSAM trajectory stays close to SAM."""
+    batch = _quad_batch()
+    w0 = {"w": jnp.arange(1.0, 7.0)}
+
+    def run(name):
+        cfg, method, opt = _setup(name, rho=0.05, lr=0.01,
+                                  ascent_fraction=1.0, same_batch_ascent=True)
+        state = init_train_state(w0, opt, method, jax.random.PRNGKey(1))
+        step = jax.jit(method.make_step(quad_loss, opt))
+        for _ in range(50):
+            state, m = step(state, batch)
+        return state.params["w"], float(m["loss"])
+
+    w_sam, loss_sam = run("sam")
+    w_async, loss_async = run("async_sam")
+    assert jnp.linalg.norm(w_sam - w_async) / jnp.linalg.norm(w_sam) < 0.02
+    assert loss_async == pytest.approx(loss_sam, rel=0.05)
+
+
+def test_async_sam_cosine_metric_reports_stability():
+    batch = _quad_batch()
+    cfg, method, opt = _setup("async_sam", rho=0.05, lr=0.01,
+                              ascent_fraction=1.0, same_batch_ascent=True)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    for _ in range(3):
+        state, m = step(state, batch)
+    assert float(m["ascent_cosine"]) > 0.95   # the paper's >0.8 observation
+
+
+@pytest.mark.parametrize("name", ["sgd", "sam", "gsam", "async_sam",
+                                  "looksam", "esam", "aesam", "mesa"])
+def test_all_methods_descend_on_quadratic(name):
+    batch = _quad_batch()
+    # ascent_fraction=1: the quadratic batch has no batch axis to slice
+    cfg, method, opt = _setup(name, rho=0.05, lr=0.03, mesa_start_step=5,
+                              ascent_fraction=1.0)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    state, m_first = step(state, batch)
+    for _ in range(40):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < float(m_first["loss"]) * 0.3
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_perturbation_radius():
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (17,)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (3, 5))}
+    g = {"a": jax.random.normal(jax.random.fold_in(key, 2), (17,)),
+         "b": jax.random.normal(jax.random.fold_in(key, 3), (3, 5))}
+    w_hat = perturb(params, g, rho=0.37)
+    delta = trees.tree_sub(w_hat, params)
+    assert float(trees.global_norm(delta)) == pytest.approx(0.37, rel=1e-4)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """n_microbatches=4 must reproduce the full-batch gradient step."""
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (16, 8))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+
+    def loss_fn(params, batch, rng):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    batch = {"x": X, "y": y}
+    w0 = {"w": jnp.zeros(8)}
+    outs = []
+    for nm in (1, 4):
+        cfg = MethodConfig(name="async_sam", rho=0.05, n_microbatches=nm,
+                           ascent_fraction=0.25)
+        method = make_method(cfg)
+        opt = optim.sgd(0.1)
+        state = init_train_state(w0, opt, method, jax.random.PRNGKey(2))
+        step = jax.jit(method.make_step(loss_fn, opt))
+        for _ in range(3):
+            state, m = step(state, batch)
+        outs.append(state.params["w"])
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=2e-6)
+
+
+def test_aesam_takes_sgd_steps_in_flat_regions():
+    batch = _quad_batch()
+    cfg = MethodConfig(name="aesam", rho=0.05, aesam_lambda_hi=10.0)  # high bar
+    method = make_method(cfg)
+    opt = optim.sgd(0.01)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    sam_steps = []
+    for _ in range(20):
+        state, m = step(state, batch)
+        sam_steps.append(float(m["sam_step"]))
+    # after the 8-step warmup, a huge threshold means pure SGD
+    assert sum(sam_steps[10:]) == 0.0
+
+
+def test_looksam_only_refreshes_every_k():
+    batch = _quad_batch()
+    cfg = MethodConfig(name="looksam", rho=0.05, looksam_k=3)
+    method = make_method(cfg)
+    opt = optim.sgd(0.02)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    fresh = []
+    for _ in range(9):
+        state, m = step(state, batch)
+        fresh.append(float(m["fresh"]))
+    assert fresh == [1.0, 0.0, 0.0] * 3
+
+
+def test_async_sam_interval_staleness_cycles():
+    """ascent_interval=3: tau cycles 1->2->3 and the held direction is reused."""
+    batch = _quad_batch()
+    cfg, method, opt = _setup("async_sam", rho=0.05, lr=0.01,
+                              ascent_fraction=1.0, ascent_interval=3)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    taus = []
+    for _ in range(7):
+        state, m = step(state, batch)
+        taus.append(int(state.method_state.staleness))
+    # refreshes at steps 0,3,6 -> staleness observed after each step
+    assert taus == [1, 2, 3, 1, 2, 3, 1]
+
+
+def test_async_sam_interval_still_descends():
+    batch = _quad_batch()
+    cfg, method, opt = _setup("async_sam", rho=0.05, lr=0.03,
+                              ascent_fraction=1.0, ascent_interval=4)
+    state = init_train_state({"w": jnp.arange(1.0, 7.0)}, opt, method,
+                             jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(quad_loss, opt))
+    state, first = step(state, batch)
+    for _ in range(40):
+        state, m = step(state, batch)
+    assert float(m["loss"]) < float(first["loss"]) * 0.3

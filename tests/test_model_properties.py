@@ -1,0 +1,127 @@
+"""Deeper model-layer properties: rope, MLA absorption, MoE dispatch."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.models import build_model, synth_batch
+from repro.models.layers import apply_rope
+from repro.models.moe import _capacity, moe_apply, moe_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(KEY, (2, 8, 4, 32))
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos, theta=10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    q = jax.random.normal(KEY, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 32))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]), 10000.0)
+        kj = apply_rope(k, jnp.asarray([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+# --- MLA: absorbed decode == decompressed attention --------------------------
+
+def test_mla_absorbed_decode_matches_decompressed():
+    """The latent-space decode scores must equal decompress-then-attend."""
+    cfg = get_config("deepseek-v2-lite-16b", reduced=True)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    bundle = build_model(cfg)
+    params = bundle.init(KEY)
+    S = 10
+    batch = synth_batch(cfg, 2, S, jax.random.fold_in(KEY, 2))
+    full, _ = bundle.forward(params, batch)
+    pre = {k: (v[:, :S - 1] if v.ndim >= 2 and v.shape[1] == S else v)
+           for k, v in batch.items()}
+    _, cache = bundle.prefill(params, pre, pad_to=S)
+    logits, _ = bundle.decode(params, cache,
+                              {"tokens": batch["tokens"][:, S - 1:S]})
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, S - 1]))) / scale < 3e-3
+
+
+# --- MoE dispatch properties --------------------------------------------------
+
+def _moe_cfg(capacity_factor=8.0):
+    cfg = get_config("mixtral-8x7b", reduced=True)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor))
+
+
+def test_moe_capacity_helper_bounds():
+    cfg = _moe_cfg()
+    c = _capacity(cfg.moe, group_size=64)
+    assert cfg.moe.top_k <= c <= 64
+
+
+def test_moe_outputs_are_convex_combinations_when_no_drops():
+    """With ample capacity every token is routed: output magnitude bounded by
+    the max expert response (no token silently zeroed)."""
+    cfg = _moe_cfg(capacity_factor=8.0)
+    params = moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 0.0
+    # with capacity slack, no token may map to exactly zero (dropped)
+    norms = jnp.linalg.norm(y.reshape(-1, cfg.d_model), axis=-1)
+    assert float(jnp.min(norms)) > 0.0
+
+
+def test_moe_dropping_reduces_output_energy():
+    """Tiny capacity drops tokens -> strictly less routed mass."""
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 32, 64), jnp.float32)
+    big = _moe_cfg(8.0)
+    small = dataclasses.replace(
+        big, moe=dataclasses.replace(big.moe, capacity_factor=0.25))
+    params = moe_init(KEY, big)
+    y_big, _ = moe_apply(params, x, big)
+    y_small, _ = moe_apply(params, x, small)
+    assert float(jnp.linalg.norm(y_small)) < float(jnp.linalg.norm(y_big))
+
+
+def test_moe_aux_loss_balanced_router_is_minimal():
+    """A uniform router gives aux ~ weight (the analytic minimum of E*f.p)."""
+    cfg = _moe_cfg()
+    params = moe_init(KEY, cfg)
+    params = dict(params)
+    params["router"] = jnp.zeros_like(params["router"])  # uniform probs
+    x = jax.random.normal(KEY, (4, 32, cfg.d_model), jnp.float32)
+    _, aux = moe_apply(params, x, cfg)
+    assert float(aux) == pytest.approx(cfg.moe.router_aux_weight, rel=0.1)
+
+
+# --- sliding-window + qk-norm interactions ------------------------------------
+
+def test_qk_norm_bounds_attention_logits():
+    cfg = get_config("qwen3-8b", reduced=True)
+    bundle = build_model(cfg)
+    params = bundle.init(KEY)
+    batch = synth_batch(cfg, 2, 16, jax.random.fold_in(KEY, 5))
+    # scale up embeddings 100x: qk-norm must keep logits finite and moderate
+    params = jax.tree.map(lambda x: x * 100.0, params)
+    logits, _ = bundle.forward(params, batch)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))

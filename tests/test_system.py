@@ -1,0 +1,106 @@
+"""Optimizer substrate + end-to-end behaviours of the public API."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import MethodConfig, available_methods, make_method
+
+
+def test_registry_covers_paper_methods():
+    assert set(available_methods()) == {
+        "sgd", "sam", "gsam", "async_sam", "looksam", "esam", "aesam", "mesa"}
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError, match="unknown method"):
+        make_method(MethodConfig(name="zen-sam"))
+
+
+def test_sgd_momentum_matches_manual():
+    opt = optim.sgd(0.1, momentum=0.9)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    u1, state = opt.update(g, state, params)
+    np.testing.assert_allclose(u1["w"], -0.1 * jnp.asarray([0.5, -1.0]))
+    u2, state = opt.update(g, state, params)
+    # momentum: m2 = 0.9*g + g = 1.9g
+    np.testing.assert_allclose(u2["w"], -0.1 * 1.9 * jnp.asarray([0.5, -1.0]),
+                               rtol=1e-6)
+
+
+def test_adamw_first_step_is_lr_signed():
+    opt = optim.adamw(1e-2, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0, -1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([3.0, -2.0])}
+    u, _ = opt.update(g, state, params)
+    # bias-corrected first Adam step is -lr * sign(g) (up to eps)
+    np.testing.assert_allclose(u["w"], [-1e-2, 1e-2], rtol=1e-4)
+
+
+def test_clip_by_global_norm():
+    opt = optim.chain(optim.clip_by_global_norm(1.0),
+                      optim.scale_by_learning_rate(1.0))
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    g = {"w": jnp.full(4, 10.0)}
+    u, _ = opt.update(g, state, params)
+    assert float(jnp.linalg.norm(u["w"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    sched = optim.cosine_schedule(1.0, total_steps=100, warmup_steps=10)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0, rel=1e-5)
+    assert float(sched(100)) == pytest.approx(0.0, abs=1e-6)
+    assert float(sched(55)) < float(sched(20))
+
+
+def test_step_decay_schedule():
+    sched = optim.step_decay_schedule(0.1, [50, 80], factor=0.1)
+    assert float(sched(10)) == pytest.approx(0.1)
+    assert float(sched(60)) == pytest.approx(0.01)
+    assert float(sched(90)) == pytest.approx(0.001, rel=1e-5)
+
+
+def test_weight_decay_mask():
+    opt = optim.chain(
+        optim.add_decayed_weights(0.1, mask_fn=lambda p: "scale" not in p),
+        optim.scale_by_learning_rate(1.0))
+    params = {"w": jnp.ones(2), "ln": {"scale": jnp.ones(2)}}
+    state = opt.init(params)
+    g = {"w": jnp.zeros(2), "ln": {"scale": jnp.zeros(2)}}
+    u, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(u["w"], -0.1 * jnp.ones(2))
+    np.testing.assert_allclose(u["ln"]["scale"], jnp.zeros(2))
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    """The CLI launcher trains a reduced arch and checkpoints (deliverable b)."""
+    import subprocess, sys, os, pathlib
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "olmo-1b",
+         "--reduced", "--method", "async_sam", "--steps", "12", "--batch", "4",
+         "--seq", "32", "--save-every", "6",
+         "--ckpt-dir", str(tmp_path / "run")],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "done: 12 steps" in proc.stdout
+    assert (tmp_path / "run").exists()
+
+
+def test_serve_launcher_end_to_end():
+    import subprocess, sys, os, pathlib
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "olmo-1b",
+         "--reduced", "--requests", "4", "--prompt-len", "16", "--max-new", "8"],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "decode" in proc.stdout

@@ -1,0 +1,84 @@
+"""Property-based tests for the pytree substrate (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.utils import trees
+
+SHAPES = st.sampled_from([(3,), (2, 4), (5, 1, 2), ()])
+
+
+def _tree(draw, shape):
+    a = draw(hnp.arrays(np.float32, shape,
+                        elements=st.floats(-100, 100, width=32)))
+    b = draw(hnp.arrays(np.float32, shape,
+                        elements=st.floats(-100, 100, width=32)))
+    return {"x": jnp.asarray(a), "nested": {"y": jnp.asarray(b)}}
+
+
+@st.composite
+def tree_pairs(draw):
+    shape = draw(SHAPES)
+    return _tree(draw, shape), _tree(draw, shape)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tree_pairs())
+def test_axpy_matches_manual(pair):
+    t1, t2 = pair
+    out = trees.tree_axpy(2.5, t1, t2)
+    np.testing.assert_allclose(out["x"], 2.5 * t1["x"] + t2["x"], rtol=1e-6)
+    np.testing.assert_allclose(out["nested"]["y"],
+                               2.5 * t1["nested"]["y"] + t2["nested"]["y"],
+                               rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tree_pairs())
+def test_dot_is_bilinear_and_symmetric(pair):
+    t1, t2 = pair
+    d12 = float(trees.tree_dot(t1, t2))
+    d21 = float(trees.tree_dot(t2, t1))
+    assert d12 == pytest.approx(d21, rel=1e-5, abs=1e-4)
+    d_scaled = float(trees.tree_dot(trees.tree_scale(t1, 3.0), t2))
+    assert d_scaled == pytest.approx(3.0 * d12, rel=1e-4, abs=1e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(tree_pairs())
+def test_norm_sq_consistency(pair):
+    t1, _ = pair
+    assert float(trees.tree_sq_norm(t1)) == pytest.approx(
+        float(trees.tree_dot(t1, t1)), rel=1e-5, abs=1e-4)
+    assert float(trees.global_norm(t1)) == pytest.approx(
+        float(np.sqrt(trees.tree_sq_norm(t1))), rel=1e-6, abs=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree_pairs())
+def test_flatten_roundtrip(pair):
+    t1, _ = pair
+    vec = trees.tree_flatten_to_vector(t1)
+    back = trees.tree_unflatten_from_vector(vec, t1)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: jnp.array_equal(a, b), t1, back))
+
+
+def test_cosine_similarity_bounds_and_identity():
+    key = jax.random.PRNGKey(0)
+    t = {"a": jax.random.normal(key, (32,)), "b": jax.random.normal(key, (4, 4))}
+    assert float(trees.tree_cosine_similarity(t, t)) == pytest.approx(1.0, abs=1e-5)
+    neg = trees.tree_scale(t, -1.0)
+    assert float(trees.tree_cosine_similarity(t, neg)) == pytest.approx(-1.0, abs=1e-5)
+
+
+def test_paths_align_with_leaves():
+    t = {"w": jnp.zeros(2), "blocks": {"attn": {"wq": jnp.zeros((2, 2))}}}
+    paths = trees.tree_paths(t)
+    assert "blocks/attn/wq" in paths and "w" in paths
+    assert len(paths) == len(jax.tree.leaves(t))
