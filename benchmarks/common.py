@@ -9,16 +9,16 @@ gradient stability, and the throughput cost of the extra ascent pass.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import MethodConfig, init_train_state, make_method
+from repro.core import MethodConfig
 from repro.data.synthetic import ClassificationTask
+from repro.engine import Engine, EvalCallback, FusedExecutor, ThroughputMeter
 
 TASK = ClassificationTask(n_classes=10, dim=64, margin=1.05, noise=1.0, seed=7)
 
@@ -69,32 +69,26 @@ def train_classifier(method_name: str, *, steps: int = 400, batch: int = 128,
                         ascent_fraction=ascent_fraction,
                         same_batch_ascent=True, mesa_start_step=steps // 4,
                         **(mcfg_extra or {}))
-    method = make_method(mcfg)
     opt = optim.sgd(optim.cosine_schedule(lr, steps), momentum=0.9)
-    params = mlp_init(jax.random.PRNGKey(seed))
-    state = init_train_state(params, opt, method, jax.random.PRNGKey(seed + 1))
-    step = jax.jit(method.make_step(mlp_loss, opt))
     val = task.valid_set()
-
     batches = list(task.train_batches(batch, steps, start=seed * steps))
-    # warmup compile outside the timed region
-    state, m = step(state, batches[0])
-    jax.block_until_ready(state.params)
 
-    t0 = time.perf_counter()
-    curve, times = [], []
-    for i, b in enumerate(batches[1:], start=1):
-        t1 = time.perf_counter()
-        state, m = step(state, b)
-        jax.block_until_ready(state.params)
-        times.append(time.perf_counter() - t1)
-        if i % eval_every == 0 or i == steps - 1:
-            curve.append((time.perf_counter() - t0, accuracy(state.params, val)))
+    meter = ThroughputMeter()
+    evals = EvalCallback(lambda st: accuracy(st.params, val),
+                         every=eval_every, total_steps=steps)
+    with FusedExecutor(mlp_loss, mcfg, opt, donate=False) as ex:
+        state = ex.init_state(mlp_init(jax.random.PRNGKey(seed)),
+                              jax.random.PRNGKey(seed + 1))
+        # warmup=1: compile outside the timed region (as all benches did)
+        report = Engine(ex, batches, [meter, evals]).fit(state, steps, warmup=1)
+
+    final = report.final_state
+    losses = [h["loss"] for h in report.metrics_history if "loss" in h]
     return TrainResult(method=method_name,
-                       val_acc=accuracy(state.params, val),
-                       train_loss=float(m["loss"]),
-                       wall_time_s=time.perf_counter() - t0,
-                       step_times=times, curve=curve)
+                       val_acc=accuracy(final.params, val),
+                       train_loss=losses[-1],
+                       wall_time_s=report.wall_time_s,
+                       step_times=meter.step_times, curve=evals.curve)
 
 
 def mean_std(xs) -> tuple[float, float]:

@@ -4,18 +4,20 @@ The slow resource is emulated by injecting per-call delay into the ascent lane
 of the executor; b' is then set system-aware per paper §3.3. Claims: epoch
 time stays ~flat as the helper slows (ascent fully hidden), accuracy degrades
 gracefully with b/b'. Prints `table_4_2,ratio,epoch_time_s,val_acc,tau_mean`.
+
+Runs through `Engine.fit` with the HeteroExecutor (the same path as
+`--executor hetero` in the launcher).
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import TASK, accuracy, mlp_init, mlp_loss
 from repro import optim
-from repro.core import MethodConfig, init_train_state, make_method
-from repro.runtime import AsyncSamExecutor, ExecutorConfig
+from repro.core import MethodConfig, slice_ascent_batch
+from repro.engine import Engine, HeteroExecutor, ThroughputMeter
+from repro.runtime import ExecutorConfig
 
 RATIOS = [1, 2, 3, 5]     # b / b'
 
@@ -26,26 +28,18 @@ def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
         frac = 1.0 / ratio
         mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac)
         opt = optim.sgd(optim.cosine_schedule(0.05, steps), momentum=0.9)
-        method = make_method(mcfg)
-        params = mlp_init(jax.random.PRNGKey(0))
-        state = init_train_state(params, opt, method, jax.random.PRNGKey(1))
-        # helper slowness proportional to ratio (it computes b/ratio samples
-        # in the time the fast lane does b)
-        xcfg = ExecutorConfig(max_staleness=3)
         val = TASK.valid_set()
-        with AsyncSamExecutor(mlp_loss, mcfg, opt, xcfg) as ex:
-            batches = list(TASK.train_batches(batch, steps))
-            bb = dict(batches[0])
-            bb["ascent"] = {k: v[: max(1, int(batch * frac))] for k, v in bb.items()}
-            state, _ = ex.step(state, bb)   # warmup
-            taus = []
-            t0 = time.perf_counter()
-            for b in batches[1:]:
-                ab = {k: v[: max(1, int(batch * frac))] for k, v in b.items()}
-                state, m = ex.step(state, {**b, "ascent": ab})
-                taus.append(m["tau"])
-            dt = time.perf_counter() - t0
-        acc = accuracy(state.params, val)
+        batches = [{**b, "ascent": slice_ascent_batch(b, frac)}
+                   for b in TASK.train_batches(batch, steps)]
+        meter = ThroughputMeter()
+        with HeteroExecutor(mlp_loss, mcfg, opt,
+                            exec_cfg=ExecutorConfig(max_staleness=3)) as ex:
+            state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
+                                  jax.random.PRNGKey(1))
+            report = Engine(ex, batches, [meter]).fit(state, steps, warmup=1)
+        taus = [h["tau"] for h in report.metrics_history]
+        dt = sum(meter.step_times)
+        acc = accuracy(report.final_state.params, val)
         out[ratio] = (dt, acc, float(np.mean(taus)))
         if verbose:
             print(f"table_4_2,{ratio}x,{dt:.2f},{acc:.4f},{np.mean(taus):.2f}")

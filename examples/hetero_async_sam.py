@@ -1,18 +1,17 @@
 """The paper's headline demo: hide SAM's perturbation cost on a heterogeneous
 system (fast descent lane + slow ascent lane), reproducing Table 4.2's
-mechanics on CPU.
+mechanics on CPU. Both the synchronous baselines and the two-lane runs drive
+the same `Engine.fit`; only the executor differs.
 
     PYTHONPATH=src python examples/hetero_async_sam.py
 """
-import time
-
 import jax
-import numpy as np
 
 from repro import optim
-from repro.core import MethodConfig, init_train_state, make_method
+from repro.core import MethodConfig, slice_ascent_batch
 from repro.data.synthetic import ClassificationTask
-from repro.runtime import AsyncSamExecutor, ExecutorConfig
+from repro.engine import Engine, FusedExecutor, HeteroExecutor, ThroughputMeter
+from repro.runtime import ExecutorConfig
 
 import sys, pathlib
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
@@ -23,42 +22,35 @@ STEPS, BATCH = 60, 1024
 WIDTHS = (64, 1024, 1024, 1024, 10)   # big enough that compute >> queue overhead
 
 
+def _fit(executor, batches):
+    state = executor.init_state(mlp_init(jax.random.PRNGKey(0), WIDTHS),
+                                jax.random.PRNGKey(1))
+    meter = ThroughputMeter()
+    with Engine(executor, batches, [meter]) as eng:
+        report = eng.fit(state, STEPS, warmup=1)   # compile outside the timer
+    return sum(meter.step_times), accuracy(report.final_state.params,
+                                           TASK.valid_set())
+
+
 def run_sync(method_name, frac=1.0):
     mcfg = MethodConfig(name=method_name, rho=0.05, ascent_fraction=frac,
                         same_batch_ascent=True)
-    method = make_method(mcfg)
     opt = optim.sgd(0.05, momentum=0.9)
-    state = init_train_state(mlp_init(jax.random.PRNGKey(0), WIDTHS), opt, method,
-                             jax.random.PRNGKey(1))
-    step = jax.jit(method.make_step(mlp_loss, opt))
     batches = list(TASK.train_batches(BATCH, STEPS))
-    state, _ = step(state, batches[0])
-    t0 = time.perf_counter()
-    for b in batches[1:]:
-        state, m = step(state, b)
-    jax.block_until_ready(state.params)
-    return time.perf_counter() - t0, accuracy(state.params, TASK.valid_set())
+    ex = FusedExecutor(mlp_loss, mcfg, opt, donate=False)
+    return _fit(ex, batches)
 
 
 def run_hetero(delay_s, frac):
     """Slow ascent resource emulated with injected per-call delay."""
     mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac)
-    method = make_method(mcfg)
     opt = optim.sgd(0.05, momentum=0.9)
-    state = init_train_state(mlp_init(jax.random.PRNGKey(0), WIDTHS), opt, method,
-                             jax.random.PRNGKey(1))
-    batches = list(TASK.train_batches(BATCH, STEPS))
-    bp = max(1, int(BATCH * frac))
-    with AsyncSamExecutor(mlp_loss, mcfg, opt,
-                          ExecutorConfig(ascent_delay_s=delay_s)) as ex:
-        state, _ = ex.step(state, {**batches[0],
-                                   "ascent": {k: v[:bp] for k, v in batches[0].items()}})
-        t0 = time.perf_counter()
-        for b in batches[1:]:
-            state, m = ex.step(state, {**b, "ascent": {k: v[:bp] for k, v in b.items()}})
-        dt = time.perf_counter() - t0
-        ledger = ex.ledger.summary()
-    return dt, accuracy(state.params, TASK.valid_set()), ledger
+    batches = [{**b, "ascent": slice_ascent_batch(b, frac)}
+               for b in TASK.train_batches(BATCH, STEPS)]
+    ex = HeteroExecutor(mlp_loss, mcfg, opt,
+                        exec_cfg=ExecutorConfig(ascent_delay_s=delay_s))
+    dt, acc = _fit(ex, batches)
+    return dt, acc, ex.ledger.summary()
 
 
 def main():

@@ -1,4 +1,4 @@
-"""Quickstart: train a small LM with AsyncSAM in ~40 lines.
+"""Quickstart: train a small LM with AsyncSAM through the Engine in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,8 +6,9 @@ import jax
 
 from repro import optim
 from repro.configs import get_config
-from repro.core import MethodConfig, init_train_state, make_method
+from repro.core import MethodConfig
 from repro.data import PipelineConfig, TokenPipeline
+from repro.engine import Engine, FusedExecutor, LoggingCallback
 from repro.models import build_model
 
 
@@ -19,24 +20,21 @@ def main():
     # 2. choose the training method — AsyncSAM is the paper's contribution:
     #    rho is the perturbation radius, ascent_fraction is b'/b (paper §3.3)
     mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.25)
-    method = make_method(mcfg)
     optimizer = optim.adamw(optim.cosine_schedule(3e-3, 200))
 
-    # 3. init state and jit the step
-    params = bundle.init(jax.random.PRNGKey(0))
-    state = init_train_state(params, optimizer, method, jax.random.PRNGKey(1))
-    step = jax.jit(method.make_step(bundle.loss_fn, optimizer))
+    # 3. an executor owns init/jit/step; the Engine owns the loop + callbacks.
+    #    Swap FusedExecutor for HeteroExecutor to run the two-lane schedule —
+    #    nothing else changes.
+    executor = FusedExecutor(bundle.loss_fn, mcfg, optimizer)
+    state = executor.init_state(bundle.init(jax.random.PRNGKey(0)),
+                                jax.random.PRNGKey(1))
 
     # 4. stream data (the pipeline emits the b'-sized ascent sub-batch too)
     pipe = TokenPipeline(cfg, PipelineConfig(global_batch=8, seq_len=64,
                                              ascent_fraction=0.25))
-    it = iter(pipe)
-    for i in range(200):
-        state, metrics = step(state, next(it))
-        if i % 25 == 0:
-            print(f"step {i:4d}  loss={float(metrics['loss']):.4f}  "
-                  f"ascent_cos={float(metrics['ascent_cosine']):.3f}")
-    print("final loss:", float(metrics["loss"]))
+    with Engine(executor, pipe, [LoggingCallback(every=25)]) as eng:
+        report = eng.fit(state, steps=200)
+    print("final loss:", report.metrics_history[-1]["loss"])
 
 
 if __name__ == "__main__":

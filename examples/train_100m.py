@@ -1,5 +1,6 @@
 """End-to-end driver: train a ~100M-parameter qwen3-family model with AsyncSAM
-for a few hundred steps, with checkpointing and restart (deliverable b).
+for a few hundred steps, with checkpointing and restart (deliverable b) —
+all through `Engine.fit` with a CheckpointCallback.
 
 Defaults are sized for this CPU container (~100M params, 300 steps); on a pod
 the same driver runs the full config via --full.
@@ -7,18 +8,18 @@ the same driver runs the full config via --full.
     PYTHONPATH=src python examples/train_100m.py --steps 300
 """
 import argparse
-import dataclasses
 
 import jax
 
 from repro import optim
 from repro.checkpoint import CheckpointManager
-from repro.configs import get_config
-from repro.core import MethodConfig, init_train_state, make_method
+from repro.core import MethodConfig
 from repro.data import PipelineConfig, TokenPipeline
+from repro.engine import (CheckpointCallback, Engine, FusedExecutor,
+                          LoggingCallback)
 from repro.models import analytic_param_count, build_model
 from repro.models.config import ModelConfig
-from repro.runtime import ResilienceConfig, run_resilient
+from repro.runtime import ResilienceConfig
 
 CFG_100M = ModelConfig(
     name="qwen3-100m", family="dense",
@@ -42,27 +43,22 @@ def main():
     print(f"params: {analytic_param_count(cfg) / 1e6:.1f}M")
 
     mcfg = MethodConfig(name=args.method, rho=0.05, ascent_fraction=0.25)
-    method = make_method(mcfg)
     opt = optim.adamw(optim.cosine_schedule(3e-4, args.steps,
                                             warmup_steps=20), clip_norm=1.0)
-    params = bundle.init(jax.random.PRNGKey(0))
-    state = init_train_state(params, opt, method, jax.random.PRNGKey(1))
-    raw_step = jax.jit(method.make_step(bundle.loss_fn, opt),
-                       donate_argnums=(0,))
-
-    def step(st, batch):
-        st, m = raw_step(st, batch)
-        if int(st.step) % 20 == 0:
-            print(f"step {int(st.step):4d}  loss={float(m['loss']):.4f}  "
-                  f"grad_norm={float(m['grad_norm']):.3f}")
-        return st, m
+    executor = FusedExecutor(bundle.loss_fn, mcfg, opt)
+    state = executor.init_state(bundle.init(jax.random.PRNGKey(0)),
+                                jax.random.PRNGKey(1))
 
     pipe = TokenPipeline(cfg, PipelineConfig(global_batch=args.batch,
                                              seq_len=args.seq,
                                              ascent_fraction=0.25))
-    manager = CheckpointManager(args.ckpt_dir, keep=2)
-    report = run_resilient(step, state, pipe, manager, args.steps,
-                           ResilienceConfig(save_every=100))
+    callbacks = [
+        LoggingCallback(every=20, total_steps=args.steps),
+        CheckpointCallback(CheckpointManager(args.ckpt_dir, keep=2),
+                           ResilienceConfig(save_every=100)),
+    ]
+    with Engine(executor, pipe, callbacks) as eng:
+        report = eng.fit(state, args.steps)
     losses = [h["loss"] for h in report.metrics_history if "loss" in h]
     print(f"done: steps={report.steps_done} restarts={report.restarts} "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: one invocation, correct PYTHONPATH, from any cwd.
+#   ./scripts/tier1.sh            # whole suite
+#   ./scripts/tier1.sh tests/test_engine.py -k parity
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

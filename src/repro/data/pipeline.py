@@ -64,6 +64,14 @@ class TokenPipeline:
         assert state["seed"] == self.pcfg.seed, "pipeline seed changed across restart"
         self._step = int(state["step"])
 
+    def peek(self) -> dict:
+        """Synthesize the next batch WITHOUT advancing the cursor.
+
+        Used by the Engine's pre-fit hooks (hetero calibration probes) so a
+        timing probe never perturbs the restart-deterministic sample stream.
+        """
+        return self._make(self._step)
+
     # --- batch synthesis -------------------------------------------------------
     def _make(self, step: int) -> dict:
         # stream ids: (step, rank, lane) — descent lane 0, ascent lane 1
@@ -100,11 +108,14 @@ class TokenPipeline:
         def worker(start_step: int):
             s = start_step
             while not stop.is_set():
-                try:
-                    q.put((s, self._make(s)), timeout=0.2)
-                    s += 1
-                except queue.Full:
-                    continue
+                batch = self._make(s)        # synthesize once ...
+                while not stop.is_set():
+                    try:
+                        q.put((s, batch), timeout=0.2)
+                        s += 1
+                        break                # ... retry only the hand-off
+                    except queue.Full:
+                        continue
 
         t = threading.Thread(target=worker, args=(self._step,), daemon=True)
         t.start()
@@ -115,6 +126,15 @@ class TokenPipeline:
                 yield batch
         finally:
             stop.set()
+            # wake a blocked put(), then wait the worker out: a daemon thread
+            # left inside jnp.asarray at interpreter exit aborts the process
+            # (std::terminate from native thread teardown)
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=5.0)
 
 
 def _family_extras(cfg: ModelConfig, n: int, s: int, stream: int) -> dict:

@@ -1,0 +1,30 @@
+"""repro.engine — one execution API over every training schedule.
+
+Executor matrix:
+
+    FusedExecutor   Form A  one SPMD program; mesh/sharding/jit/donation
+    HeteroExecutor  Form B  two lanes (slow ascent thread + fast descent),
+                            staleness ledger, system-aware calibration
+
+Both satisfy the `StepExecutor` protocol and the `ENGINE_METRIC_KEYS`
+contract; `Engine.fit` drives either one with the same callbacks.
+"""
+from repro.engine.api import (  # noqa: F401
+    ENGINE_METRIC_KEYS,
+    FitReport,
+    StepExecutor,
+    cost_analysis_dict,
+    ensure_metric_contract,
+    mesh_context,
+)
+from repro.engine.callbacks import (  # noqa: F401
+    Callback,
+    CheckpointCallback,
+    EvalCallback,
+    LoggingCallback,
+    StalenessTelemetry,
+    ThroughputMeter,
+)
+from repro.engine.engine import Engine  # noqa: F401
+from repro.engine.fused import FusedExecutor  # noqa: F401
+from repro.engine.hetero import HeteroExecutor  # noqa: F401

@@ -1,0 +1,103 @@
+"""Engine API: one execution contract for every training schedule.
+
+The paper's two realizations of AsyncSAM — the fused SPMD step (Form A,
+`core/async_sam.py`) and the heterogeneous two-lane executor (Form B,
+`runtime/async_executor.py`) — used to expose incompatible interfaces, so the
+launcher, benchmarks, and examples each hand-rolled their own
+jit/sharding/logging/checkpoint loop. This module defines the single seam they
+all plug into:
+
+    executor.init_state(params, rng)  -> TrainState       (placed + ready)
+    executor.step(state, batch)       -> (state, metrics)
+    executor.pre_fit(state, batch)    -> dict | None      (optional: calibration)
+    executor.close()                                       (idempotent)
+
+plus the *metric contract*: every executor's step metrics include at least
+`ENGINE_METRIC_KEYS` (loss, grad_norm, tau, perturbed), so callbacks,
+benchmarks, and parity tests never special-case the schedule. Future
+schedules (elastic meshes, multi-host lanes, new SAM variants) are new
+`StepExecutor` implementations, not new training loops.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+
+from repro.core import TrainState
+
+Pytree = Any
+
+#: Keys every executor guarantees in its step metrics.
+#:   loss       — descent-lane loss at the (possibly perturbed) point
+#:   grad_norm  — global norm of the applied gradient
+#:   tau        — age (steps) of the ascent gradient used for the perturbation
+#:                (0 = none/synchronous, 1 = paper steady state, >1 = straggler)
+#:   perturbed  — 1.0 if the step used a SAM perturbation, 0.0 if it degraded
+#:                to (or is) plain SGD
+ENGINE_METRIC_KEYS = ("loss", "grad_norm", "tau", "perturbed")
+
+
+@runtime_checkable
+class StepExecutor(Protocol):
+    """Uniform execution surface over training schedules (see module doc)."""
+
+    name: str
+
+    def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
+        """Build the TrainState, placed/sharded for this executor."""
+        ...
+
+    def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        """One optimizer step; metrics satisfy ENGINE_METRIC_KEYS."""
+        ...
+
+    def close(self) -> None:
+        """Release resources (threads, mesh contexts). Must be idempotent."""
+        ...
+
+
+@dataclasses.dataclass
+class FitReport:
+    """What Engine.fit returns; field-compatible with runtime.RunReport."""
+    final_state: TrainState
+    steps_done: int
+    restarts: int
+    metrics_history: list
+    wall_time_s: float
+    pre_fit: Optional[dict] = None   # executor pre-fit telemetry (calibration)
+
+
+def ensure_metric_contract(metrics: dict, *, tau, perturbed) -> dict:
+    """Fill contract keys an executor's raw step did not already emit."""
+    metrics = dict(metrics)
+    metrics.setdefault("tau", tau)
+    metrics.setdefault("perturbed", perturbed)
+    return metrics
+
+
+def mesh_context(mesh) -> contextlib.AbstractContextManager:
+    """Version-portable 'make `mesh` the ambient mesh' context.
+
+    jax >= 0.6 spells this `jax.set_mesh`; on older releases (this container
+    ships 0.4.37) `Mesh` itself is the context manager that scopes
+    `with_sharding_constraint(PartitionSpec(...))`.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Version-portable `compiled.cost_analysis()`.
+
+    jax <= 0.4 returns a [per-device dict]; newer releases return the dict
+    directly. Always returns a (possibly empty) dict.
+    """
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

@@ -1,0 +1,145 @@
+"""Engine callbacks: logging, throughput, eval curves, checkpoints, telemetry.
+
+A callback observes the fit loop; it never owns it. The hooks are
+
+    on_fit_start(engine, state)
+    on_step(engine, state, metrics, step_time_s)
+    on_fit_end(engine, report)
+
+All hooks default to no-ops, so a callback implements only what it needs.
+`CheckpointCallback` is the one callback the Engine inspects: its presence
+routes the loop through `runtime.run_resilient` (periodic async saves +
+checkpoint-restart on failure) with its manager and resilience policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.checkpoint import CheckpointManager
+from repro.core import TrainState
+from repro.runtime import ResilienceConfig
+from repro.utils import scalar_metrics
+
+
+class Callback:
+    def on_fit_start(self, engine, state: TrainState) -> None:  # noqa: D401
+        pass
+
+    def on_step(self, engine, state: TrainState, metrics: dict,
+                step_time_s: float) -> None:
+        pass
+
+    def on_fit_end(self, engine, report) -> None:
+        pass
+
+
+class LoggingCallback(Callback):
+    """Print scalar metrics every `every` steps (and at the final step)."""
+
+    def __init__(self, every: int = 10, total_steps: Optional[int] = None):
+        self.every = max(1, every)
+        self.total_steps = total_steps
+
+    def on_step(self, engine, state, metrics, step_time_s):
+        step = int(state.step)
+        if step % self.every == 0 or step == self.total_steps:
+            scal = {k: f"{v:.4f}" for k, v in scalar_metrics(metrics).items()}
+            print(f"step {step:5d}  {scal}")
+
+
+class ThroughputMeter(Callback):
+    """Collect per-step wall times; summarize tokens/s (or samples/s).
+
+    The first recorded step is dropped from the steady-state mean (it may
+    still carry compile/warmup cost when the Engine ran with warmup=0).
+    """
+
+    def __init__(self, tokens_per_batch: Optional[int] = None):
+        self.tokens_per_batch = tokens_per_batch
+        self.step_times: list[float] = []
+
+    def on_step(self, engine, state, metrics, step_time_s):
+        self.step_times.append(step_time_s)
+
+    @property
+    def steady_times(self) -> list[float]:
+        return self.step_times[1:] or self.step_times
+
+    def summary(self) -> dict:
+        if not self.step_times:
+            return {}
+        steady = self.steady_times
+        mean = sum(steady) / len(steady)
+        out = {"mean_step_s": mean, "steps_timed": len(self.step_times)}
+        if self.tokens_per_batch:
+            out["tokens_per_s"] = self.tokens_per_batch / mean
+        return out
+
+
+class EvalCallback(Callback):
+    """Run `eval_fn(state) -> float` every `every` steps; keep a (t, value) curve."""
+
+    def __init__(self, eval_fn: Callable[[TrainState], float], every: int = 50,
+                 total_steps: Optional[int] = None):
+        self.eval_fn = eval_fn
+        self.every = max(1, every)
+        self.total_steps = total_steps
+        self.curve: list[tuple[float, float]] = []
+        self._t0 = None
+
+    def on_fit_start(self, engine, state):
+        self._t0 = time.perf_counter()
+
+    def on_step(self, engine, state, metrics, step_time_s):
+        step = int(state.step)
+        if step % self.every == 0 or step == self.total_steps:
+            self.curve.append((time.perf_counter() - (self._t0 or 0.0),
+                               float(self.eval_fn(state))))
+
+
+@dataclasses.dataclass
+class CheckpointCallback(Callback):
+    """Periodic save/restore via CheckpointManager.
+
+    The Engine detects this callback and runs its loop under
+    `run_resilient`, which owns the save cadence, the step-0 baseline
+    checkpoint, and restore-and-continue on failure; `shardings` (if set)
+    lets a restore re-place state on the current mesh (elastic restart).
+    """
+    manager: CheckpointManager
+    resilience: ResilienceConfig = dataclasses.field(
+        default_factory=ResilienceConfig)
+    shardings: Optional[object] = None
+
+
+class StalenessTelemetry(Callback):
+    """Aggregate the hetero lane's τ ledger: histogram + SGD-fallback count.
+
+    Works against the metric contract (tau/perturbed), so it is attachable to
+    the fused executor too, where it simply records the constant τ=1 regime.
+    """
+
+    def __init__(self, print_summary: bool = True):
+        self.print_summary = print_summary
+        self.tau_hist: dict[int, int] = {}
+        self.sgd_fallbacks = 0
+        self.perturbed_steps = 0
+
+    def on_step(self, engine, state, metrics, step_time_s):
+        tau = int(metrics.get("tau", 0))
+        self.tau_hist[tau] = self.tau_hist.get(tau, 0) + 1
+        if float(metrics.get("perturbed", 0.0)):
+            self.perturbed_steps += 1
+        else:
+            self.sgd_fallbacks += 1
+
+    def summary(self) -> dict:
+        return {"tau_hist": dict(sorted(self.tau_hist.items())),
+                "perturbed_steps": self.perturbed_steps,
+                "sgd_fallbacks": self.sgd_fallbacks}
+
+    def on_fit_end(self, engine, report):
+        if self.print_summary:
+            print(f"staleness: {self.summary()}")

@@ -1,0 +1,147 @@
+"""Engine — the single fit loop every entrypoint drives.
+
+    executor = FusedExecutor(loss_fn, mcfg, opt)            # or HeteroExecutor
+    state = executor.init_state(params, rng)
+    with Engine(executor, pipeline, callbacks=[LoggingCallback()]) as eng:
+        report = eng.fit(state, steps=1000)
+
+The Engine owns iteration, timing, callback dispatch, and the optional
+pre-fit hook (hetero calibration); a `CheckpointCallback` routes the loop
+through `runtime.run_resilient` so checkpoint-restart fault tolerance is the
+same code path with or without the Engine. `data` is any iterable of batches;
+the resilient path additionally needs the pipeline `state()/restore()`
+protocol (see repro.data.pipeline).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Iterable, Optional, Sequence
+
+from repro.core import TrainState
+from repro.engine.api import FitReport, StepExecutor
+from repro.engine.callbacks import Callback, CheckpointCallback
+from repro.runtime import run_resilient
+from repro.utils import scalar_metrics
+
+Pytree = Any
+
+
+class Engine:
+    def __init__(self, executor: StepExecutor, data: Iterable[dict],
+                 callbacks: Sequence[Callback] = ()):
+        self.executor = executor
+        self.data = data
+        self.callbacks = list(callbacks)
+        self.pre_fit_report: Optional[dict] = None
+
+    # --- plumbing -------------------------------------------------------------
+    def _probe_batch(self) -> dict:
+        """A batch for calibration probes, without advancing the cursor when
+        the pipeline supports peek() (lists/tuples are naturally re-iterable;
+        a bare generator loses the probe batch — give it peek() if that
+        matters for restart determinism)."""
+        peek = getattr(self.data, "peek", None)
+        if peek is not None:
+            return peek()
+        it = iter(self.data)
+        try:
+            return next(it)
+        finally:
+            if hasattr(it, "close"):
+                it.close()
+
+    def _wrapped_step(self):
+        def step(state: TrainState, batch: dict):
+            t0 = time.perf_counter()
+            state, metrics = self.executor.step(state, batch)
+            dt = time.perf_counter() - t0
+            for cb in self.callbacks:
+                cb.on_step(self, state, metrics, dt)
+            return state, metrics
+
+        return step
+
+    # --- the loop -------------------------------------------------------------
+    def fit(self, state: TrainState, steps: int, *, warmup: int = 0,
+            failure_injector=None) -> FitReport:
+        """Train until `state.step == steps`; returns a FitReport.
+
+        warmup: steps executed before the clock starts and before
+        `on_fit_start` fires (benchmarks exclude compile time this way).
+        """
+        hook = getattr(self.executor, "pre_fit", None)
+        if hook is not None and getattr(self.executor, "wants_pre_fit", True):
+            self.pre_fit_report = hook(state, self._probe_batch())
+
+        ckpt = next((c for c in self.callbacks
+                     if isinstance(c, CheckpointCallback)), None)
+        if warmup and ckpt is not None:
+            # run_resilient re-iterates the pipeline from its cursor; a
+            # separate warmup iterator would replay (list data) or orphan a
+            # prefetch worker (pipeline data)
+            raise ValueError("warmup is not supported with CheckpointCallback")
+
+        it = None
+        if warmup:
+            it = iter(self.data)
+            try:
+                for _ in range(warmup):
+                    state, _ = self.executor.step(state, next(it))
+            except BaseException:
+                if hasattr(it, "close"):
+                    it.close()   # don't leak the prefetch worker on a
+                raise            # failing warmup step
+
+        try:
+            for cb in self.callbacks:
+                cb.on_fit_start(self, state)
+        except BaseException:
+            if it is not None and hasattr(it, "close"):
+                it.close()   # a raising callback must not orphan the
+            raise            # warmup iterator's prefetch worker
+        wrapped = self._wrapped_step()
+        if ckpt is not None:
+            rep = run_resilient(wrapped, state, self.data, ckpt.manager, steps,
+                                ckpt.resilience, failure_injector,
+                                shardings=ckpt.shardings,
+                                on_restore=getattr(self.executor,
+                                                   "on_restore", None))
+            report = FitReport(final_state=rep.final_state,
+                               steps_done=rep.steps_done,
+                               restarts=rep.restarts,
+                               metrics_history=rep.metrics_history,
+                               wall_time_s=rep.wall_time_s,
+                               pre_fit=self.pre_fit_report)
+        else:
+            t0 = time.time()
+            history: list = []
+            it = it if it is not None else iter(self.data)
+            try:
+                while int(state.step) < steps:
+                    try:
+                        batch = next(it)
+                    except StopIteration:
+                        break
+                    state, metrics = wrapped(state, batch)
+                    history.append(scalar_metrics(metrics))
+            finally:
+                if hasattr(it, "close"):
+                    it.close()   # stop a prefetching pipeline's worker now
+            report = FitReport(final_state=state, steps_done=int(state.step),
+                               restarts=0, metrics_history=history,
+                               wall_time_s=time.time() - t0,
+                               pre_fit=self.pre_fit_report)
+
+        for cb in self.callbacks:
+            cb.on_fit_end(self, report)
+        return report
+
+    # --- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        self.executor.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

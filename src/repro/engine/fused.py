@@ -1,0 +1,123 @@
+"""FusedExecutor — Form A: one jitted SPMD step per training iteration.
+
+Wraps `Method.make_step` together with the mesh/sharding/jit/donation plumbing
+that used to be inlined in `launch/train.py`: with a mesh it enters the
+ambient-mesh + activation-sharding contexts, shards the TrainState by
+`launch.sharding.state_spec_tree`, and jits with donated input state and
+explicit out_shardings; without a mesh it is a plain single-device jit, which
+is what the CPU benchmarks and unit tests use. Either way the caller sees only
+the `StepExecutor` surface.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Method, MethodConfig, TrainState, init_train_state, make_method
+from repro.core.api import LossFn
+from repro.core.async_sam import AsyncSamState
+from repro.engine.api import ensure_metric_contract, mesh_context
+from repro.optim import GradientTransform
+
+Pytree = Any
+
+
+class FusedExecutor:
+    """Single-resource executor: the whole step is one XLA program.
+
+    Args:
+      loss_fn: framework loss callback `(params, batch, rng) -> (loss, aux)`.
+      method: a `MethodConfig` (name-dispatched) or an already-built `Method`.
+      optimizer: inner gradient transform.
+      mesh: when given, run under this mesh with sharded state + donation
+        (the pod/production path); when None, plain jit (CPU smoke path).
+      model_cfg: ModelConfig used by the sharding rules; required with `mesh`.
+      donate: donate the input TrainState buffers to the step (in-place
+        update at scale; safe because callers rebind `state` every step).
+      block: block on the updated params each step so host-side timing and
+        callbacks see real step latency (all previous loops did this).
+    """
+
+    name = "fused"
+
+    def __init__(self, loss_fn: LossFn,
+                 method: Union[Method, MethodConfig, None] = None,
+                 optimizer: Optional[GradientTransform] = None, *,
+                 mesh=None, model_cfg=None, donate: bool = True,
+                 block: bool = True):
+        if isinstance(method, Method):
+            self.method = method
+        else:
+            self.method = make_method(method or MethodConfig())
+        assert optimizer is not None, "FusedExecutor needs an optimizer"
+        self.optimizer = optimizer
+        self.mesh = mesh
+        self.model_cfg = model_cfg
+        self.donate = donate
+        self.block = block
+        self._step_raw = self.method.make_step(loss_fn, optimizer)
+        self._jitted = None
+        self._closed = False
+        if mesh is not None:
+            assert model_cfg is not None, "mesh sharding needs the ModelConfig"
+
+    def _scope(self) -> contextlib.AbstractContextManager:
+        """Ambient mesh + activation-sharding rules, entered per call.
+
+        Scoping each init/step call (instead of holding the process-global
+        contexts from __init__ to close) means an error before the Engine
+        takes ownership can never leak a stale mesh into later jax work, and
+        two live executors never interleave their context frames.
+        """
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.models.partitioning import activation_sharding
+        stack = contextlib.ExitStack()
+        stack.enter_context(mesh_context(self.mesh))
+        stack.enter_context(activation_sharding(self.mesh))
+        return stack
+
+    # --- StepExecutor ---------------------------------------------------------
+    def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
+        donate = (0,) if self.donate else ()
+        with self._scope():
+            state = init_train_state(params, self.optimizer, self.method, rng)
+            if self.mesh is None:
+                self._jitted = jax.jit(self._step_raw, donate_argnums=donate)
+                return state
+            from repro.launch.sharding import state_spec_tree, to_named
+            state_sh = to_named(state_spec_tree(jax.eval_shape(lambda: state),
+                                                self.model_cfg, self.mesh),
+                                self.mesh)
+            state = jax.device_put(state, state_sh)
+            self._jitted = jax.jit(self._step_raw, donate_argnums=donate,
+                                   out_shardings=(state_sh, None))
+            return state
+
+    def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        assert self._jitted is not None, "call init_state before step"
+        assert not self._closed, "executor is closed"
+        with self._scope():
+            state, metrics = self._jitted(state, batch)
+        if self.block:
+            jax.block_until_ready(state.params)
+        ms = state.method_state
+        tau = (ms.staleness if isinstance(ms, AsyncSamState)
+               else jnp.zeros((), jnp.int32))
+        return state, ensure_metric_contract(
+            metrics, tau=tau,
+            perturbed=0.0 if self.method.name == "sgd" else 1.0)
+
+    def close(self) -> None:
+        # nothing held between calls (scopes are per-call); closing only
+        # fences off further step() calls
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

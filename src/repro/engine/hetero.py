@@ -1,0 +1,109 @@
+"""HeteroExecutor — Form B: the paper's two-lane heterogeneous schedule.
+
+Wraps `runtime.AsyncSamExecutor` (descent lane + dedicated ascent thread,
+depth-1 queue, staleness ledger) behind the `StepExecutor` surface, and
+promotes the system-aware calibration of paper §3.3 to a first-class pre-fit
+hook: when constructed with `calibrate=True`, `pre_fit` measures per-sample
+gradient times on both lanes, reports the suggested b'/b, and from then on
+caps the ascent sub-batch the slow lane sees at the calibrated size.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.core import (MethodConfig, TrainState, init_train_state,
+                        make_method, slice_ascent_batch, split_batch)
+from repro.core.api import LossFn
+from repro.optim import GradientTransform
+from repro.runtime.async_executor import AsyncSamExecutor, ExecutorConfig
+
+Pytree = Any
+
+
+class HeteroExecutor:
+    """Two-resource executor: ascent on the slow lane, descent on the fast one."""
+
+    name = "hetero"
+
+    def __init__(self, loss_fn: LossFn, method_cfg: Optional[MethodConfig] = None,
+                 optimizer: Optional[GradientTransform] = None, *,
+                 exec_cfg: Optional[ExecutorConfig] = None,
+                 calibrate: bool = False, calibration_probes: int = 3):
+        method_cfg = method_cfg or MethodConfig()
+        assert method_cfg.name == "async_sam", \
+            f"the hetero lanes realize async_sam only, got {method_cfg.name!r}"
+        assert optimizer is not None, "HeteroExecutor needs an optimizer"
+        self.cfg = method_cfg
+        self.method = make_method(method_cfg)   # init() only; steps run split
+        self.optimizer = optimizer
+        self.calibrate = calibrate
+        self.calibration_probes = calibration_probes
+        self.calibrated_fraction: Optional[float] = None
+        self._inner = AsyncSamExecutor(loss_fn, method_cfg, optimizer, exec_cfg)
+
+    @property
+    def ledger(self):
+        return self._inner.ledger
+
+    @property
+    def timings(self):
+        return self._inner.timings
+
+    # --- StepExecutor ---------------------------------------------------------
+    def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
+        return init_train_state(params, self.optimizer, self.method, rng)
+
+    @property
+    def wants_pre_fit(self) -> bool:
+        """The Engine draws a probe batch only when calibration is enabled."""
+        return self.calibrate
+
+    def pre_fit(self, state: TrainState, batch: dict) -> Optional[dict]:
+        """System-aware b' calibration (paper §3.3); runs before the fit loop."""
+        if not self.calibrate:
+            return None
+        frac = self._inner.calibrate(state, batch,
+                                     probes=self.calibration_probes)
+        self.calibrated_fraction = frac
+        return {"configured_ascent_fraction": self.cfg.ascent_fraction,
+                "calibrated_ascent_fraction": frac}
+
+    def _cap_ascent(self, batch: dict) -> dict:
+        """Trim the ascent sub-batch to the calibrated b' (never grow it).
+
+        Batches without an "ascent" key get one sliced here at the capped
+        fraction — otherwise the inner executor would slice by the
+        *configured* fraction and calibration would silently not apply.
+        """
+        if self.calibrated_fraction is None:
+            return batch
+        descent, ascent = split_batch(batch)
+        if ascent is None:
+            frac = min(self.cfg.ascent_fraction, self.calibrated_fraction)
+            return {**descent, "ascent": slice_ascent_batch(descent, frac)}
+        b = jax.tree.leaves(descent)[0].shape[0]
+        target = max(1, int(round(b * self.calibrated_fraction)))
+        if jax.tree.leaves(ascent)[0].shape[0] <= target:
+            return batch
+        return {**descent, "ascent": jax.tree.map(lambda x: x[:target], ascent)}
+
+    def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        # the inner executor already emits the full metric contract
+        # (loss/grad_norm via _finish, tau/perturbed from the ledger)
+        return self._inner.step(state, self._cap_ascent(batch))
+
+    def on_restore(self, state: TrainState) -> None:
+        """Checkpoint rollback: drop held/in-flight ascent gradients, which
+        were computed against params from the discarded timeline."""
+        self._inner.reset()
+
+    def close(self) -> None:
+        self._inner.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,8 +1,11 @@
 """Step builders: train_step (SAM-family) and serve steps (prefill/decode).
 
-These close over a ModelBundle + method + optimizer and return pure functions
-ready for jax.jit with the shardings from launch.sharding. The same builders
-serve the CPU smoke tests, the benchmarks, and the 512-device dry-run.
+DEPRECATED for training: new code should drive training through
+`repro.engine` (`FusedExecutor` / `HeteroExecutor` + `Engine.fit`), which owns
+the mesh/sharding/jit/donation plumbing that callers of `make_train_setup`
+had to hand-roll. This module remains as a thin shim for the serve path and
+for the dry-run's direct access to the raw (un-jitted) step function; the
+train-setup surface is kept so existing callers and tests keep passing.
 """
 from __future__ import annotations
 
@@ -29,6 +32,12 @@ class TrainSetup:
 
     def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
         return init_train_state(params, self.optimizer, self.method, rng)
+
+    def fused_executor(self, *, mesh=None, model_cfg=None, donate: bool = True):
+        """Bridge to the Engine API: the same pieces as a `StepExecutor`."""
+        from repro.engine import FusedExecutor
+        return FusedExecutor(self.bundle.loss_fn, self.method, self.optimizer,
+                             mesh=mesh, model_cfg=model_cfg, donate=donate)
 
 
 def make_train_setup(bundle: ModelBundle,

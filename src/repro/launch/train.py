@@ -1,34 +1,38 @@
-"""Training launcher: --arch x --method x mesh -> fault-tolerant run.
+"""Training launcher: --arch x --method x mesh -> fault-tolerant Engine run.
 
 CPU-runnable end-to-end (reduced configs); the same launcher drives pod runs —
 mesh construction, sharding, checkpointing and the resilient loop are the
-production code paths exercised by the dry-run at full scale.
+production code paths exercised by the dry-run at full scale. Both executors
+go through the same `Engine.fit`:
+
+  --executor fused   one jitted SPMD step (Form A, pod-scale default)
+  --executor hetero  two-lane heterogeneous executor (Form B, paper §3.3/§3.4);
+                     add --calibrate for the system-aware b' pre-fit probe
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 100 --batch 8 --seq 64
-  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
-      --method sam --steps 50 --ckpt-dir /tmp/run1
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 20 --executor hetero --calibrate
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import MethodConfig, make_method
+from repro.core import MethodConfig
 from repro.checkpoint import CheckpointManager
 from repro.data import PipelineConfig, TokenPipeline
+from repro.engine import (CheckpointCallback, Engine, FusedExecutor,
+                          HeteroExecutor, LoggingCallback, StalenessTelemetry,
+                          ThroughputMeter)
 from repro.launch.mesh import make_host_mesh
-from repro.launch.sharding import batch_spec_tree, state_spec_tree, to_named
-from repro.launch.steps import make_train_setup
 from repro.models import build_model
-from repro.models.partitioning import activation_sharding
 from repro.optim import cosine_schedule, make_optimizer
-from repro.runtime import ResilienceConfig, run_resilient
+from repro.runtime import ResilienceConfig
 
 
 def main() -> None:
@@ -37,6 +41,10 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config (CPU-trainable)")
     ap.add_argument("--method", default="async_sam")
+    ap.add_argument("--executor", choices=("fused", "hetero"), default="fused",
+                    help="fused: one SPMD step; hetero: two-lane async_sam")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="hetero only: measure the system-aware b'/b pre-fit")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -52,6 +60,14 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.executor == "hetero" and args.model_axis != 1:
+        ap.error("--model-axis applies to --executor fused only "
+                 "(the hetero lanes run meshless)")
+    if args.calibrate and args.executor != "hetero":
+        ap.error("--calibrate requires --executor hetero")
+    if args.executor == "hetero" and args.method != "async_sam":
+        ap.error("--executor hetero realizes async_sam only "
+                 f"(got --method {args.method})")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     bundle = build_model(cfg)
@@ -61,58 +77,54 @@ def main() -> None:
     optimizer = make_optimizer(args.optimizer,
                                cosine_schedule(args.lr, args.steps,
                                                warmup_steps=args.steps // 20))
-    setup = make_train_setup(bundle, mcfg, optimizer)
-    mesh = make_host_mesh(model_axis=args.model_axis)
 
     pipe = TokenPipeline(cfg, PipelineConfig(
         global_batch=args.batch, seq_len=args.seq, seed=args.seed,
         ascent_fraction=(args.ascent_fraction
                          if args.method in ("async_sam",) else 0.0)))
 
-    with jax.set_mesh(mesh), activation_sharding(mesh):
-        params = bundle.init(jax.random.PRNGKey(args.seed))
-        state = setup.init_state(params, jax.random.PRNGKey(args.seed + 1))
-        state_sh = to_named(state_spec_tree(jax.eval_shape(lambda: state),
-                                            cfg, mesh), mesh)
-        state = jax.device_put(state, state_sh)
-        jitted = jax.jit(setup.step_fn, donate_argnums=(0,),
-                         out_shardings=(state_sh, None))
+    if args.executor == "hetero":
+        # two host lanes; hand-offs are host arrays, no mesh required
+        executor = HeteroExecutor(bundle.loss_fn, mcfg, optimizer,
+                                  calibrate=args.calibrate)
+    else:
+        mesh = make_host_mesh(model_axis=args.model_axis)
+        executor = FusedExecutor(bundle.loss_fn, mcfg, optimizer,
+                                 mesh=mesh, model_cfg=cfg)
 
-        t0 = time.time()
-        times = []
+    # init_state shards/jits inside the executor's mesh scope (fused) so the
+    # launcher never touches jit/sharding plumbing itself
+    params = bundle.init(jax.random.PRNGKey(args.seed))
+    state = executor.init_state(params, jax.random.PRNGKey(args.seed + 1))
 
-        def logged_step(st, batch):
-            t = time.time()
-            st, metrics = jitted(st, batch)
-            jax.block_until_ready(st.params)
-            times.append(time.time() - t)
-            step = int(st.step)
-            if step % args.log_every == 0 or step == args.steps:
-                scal = {k: f"{float(v):.4f}" for k, v in metrics.items()
-                        if hasattr(v, "__float__")}
-                print(f"step {step:5d}  {scal}")
-            return st, metrics
+    meter = ThroughputMeter(tokens_per_batch=args.batch * args.seq)
+    callbacks = [LoggingCallback(every=args.log_every,
+                                 total_steps=args.steps), meter]
+    if args.executor == "hetero":
+        callbacks.append(StalenessTelemetry())
+    if args.ckpt_dir:
+        callbacks.append(CheckpointCallback(
+            CheckpointManager(args.ckpt_dir, keep=3),
+            ResilienceConfig(save_every=args.save_every)))
 
-        if args.ckpt_dir:
-            manager = CheckpointManager(args.ckpt_dir, keep=3)
-            report = run_resilient(
-                logged_step, state, pipe, manager, args.steps,
-                ResilienceConfig(save_every=args.save_every))
-            state = report.final_state
-            print(f"done: {report.steps_done} steps, {report.restarts} restarts, "
-                  f"{report.wall_time_s:.1f}s")
-        else:
-            it = iter(pipe)
-            while int(state.step) < args.steps:
-                state, _ = logged_step(state, next(it))
+    with Engine(executor, pipe, callbacks) as eng:
+        report = eng.fit(state, args.steps)
 
-        if times:
-            steady = times[1:] or times
-            tok_s = args.batch * args.seq / (sum(steady) / len(steady))
-            print(json.dumps({"arch": cfg.name, "method": args.method,
-                              "steps": int(state.step),
-                              "mean_step_s": sum(steady) / len(steady),
-                              "tokens_per_s": tok_s}))
+    if report.pre_fit:
+        pf = report.pre_fit
+        print(f"calibration: configured b'/b="
+              f"{pf['configured_ascent_fraction']:.3f}  system-aware b'/b="
+              f"{pf['calibrated_ascent_fraction']:.3f}")
+    if args.ckpt_dir:
+        print(f"done: {report.steps_done} steps, {report.restarts} restarts, "
+              f"{report.wall_time_s:.1f}s")
+    summary = meter.summary()
+    if summary:
+        print(json.dumps({"arch": cfg.name, "method": args.method,
+                          "executor": args.executor,
+                          "steps": report.steps_done,
+                          "mean_step_s": summary["mean_step_s"],
+                          "tokens_per_s": summary.get("tokens_per_s")}))
 
 
 if __name__ == "__main__":

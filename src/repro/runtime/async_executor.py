@@ -64,11 +64,14 @@ class AsyncSamExecutor:
         self._comp_state = None
         self.wire_bytes_per_exchange = 0
         self._ascent_raw = jax.jit(make_ascent_fn(loss_fn))
+        self._norm = jax.jit(trees.global_norm)
         self._descent = jax.jit(make_descent_fn(method_cfg, loss_fn, optimizer),
                                 donate_argnums=(0,))
         self._jobs: queue.Queue = queue.Queue(maxsize=1)
         self._results: queue.Queue = queue.Queue(maxsize=1)
+        self._gen = 0            # bumped by reset(): fences off in-flight work
         self._stop = threading.Event()
+        self._closed = False
         self._thread = threading.Thread(target=self._ascent_worker, daemon=True)
         self._thread.start()
         # held perturbation direction (host-side fp32 pytree)
@@ -84,9 +87,11 @@ class AsyncSamExecutor:
     def _ascent_worker(self) -> None:
         while not self._stop.is_set():
             try:
-                params, batch, rng = self._jobs.get(timeout=0.1)
+                gen, params, batch, rng = self._jobs.get(timeout=0.1)
             except queue.Empty:
                 continue
+            if self._stop.is_set():   # shutting down: don't start new compute
+                break
             t0 = time.perf_counter()
             if self.xcfg.ascent_delay_s:
                 time.sleep(self.xcfg.ascent_delay_s)  # injected straggle
@@ -97,16 +102,16 @@ class AsyncSamExecutor:
                 if self._comp_state is None:
                     self._comp_state = self._compressor.init(g)
                 g, self._comp_state = self._compressor.compress(g, self._comp_state)
-                import jax.numpy as _jnp
-                norm = float(jax.numpy.sqrt(sum(
-                    float(_jnp.sum(_jnp.square(x))) for x in jax.tree.leaves(g))))
+                # one fused on-device reduction, one host sync — not a
+                # per-leaf Python float round-trip
+                norm = float(self._norm(g))
             else:
                 norm = float(norm)
             self.wire_bytes_per_exchange = self._compressor.wire_bytes(g)
             g = jax.device_get(g)           # model the cross-resource hop
             self.timings["ascent"].append(time.perf_counter() - t0)
             try:
-                self._results.put((g, norm), timeout=1.0)
+                self._results.put((gen, g, norm), timeout=1.0)
             except queue.Full:
                 pass                         # consumer lagging: drop (stale anyway)
 
@@ -118,12 +123,16 @@ class AsyncSamExecutor:
             ascent_batch = slice_ascent_batch(descent_batch,
                                               self.cfg.ascent_fraction)
 
-        # harvest a finished ascent gradient (fresh => tau resets to 1)
+        # harvest a finished ascent gradient (fresh => tau resets to 1);
+        # results from a pre-reset() generation are discarded
         try:
-            g, norm = self._results.get_nowait()
-            self._held = (g, norm)
-            self.ledger.on_fresh()
-            have = True
+            gen, g, norm = self._results.get_nowait()
+            if gen == self._gen:
+                self._held = (g, norm)
+                self.ledger.on_fresh()
+                have = True
+            else:
+                have = self._held is not None and self.ledger.on_reuse()
         except queue.Empty:
             have = self._held is not None and self.ledger.on_reuse()
 
@@ -131,7 +140,8 @@ class AsyncSamExecutor:
         # one step old when used — Algorithm 1 line 3)
         if not self._jobs.full():
             rng = jax.random.fold_in(state.rng, state.step)
-            self._jobs.put_nowait((jax.device_get(state.params), ascent_batch, rng))
+            self._jobs.put_nowait((self._gen, jax.device_get(state.params),
+                                   ascent_batch, rng))
 
         t0 = time.perf_counter()
         if self._held is not None:
@@ -146,6 +156,21 @@ class AsyncSamExecutor:
         metrics["tau"] = self.ledger.tau
         metrics["perturbed"] = float(have)
         return new_state, metrics
+
+    def reset(self) -> None:
+        """Drop held and in-flight ascent state (e.g. after a checkpoint
+        restore rolled the params back): the next step perturbs only with a
+        gradient computed against post-reset params. The generation fence
+        keeps a result the worker is still computing from being consumed."""
+        self._gen += 1
+        for q in (self._jobs, self._results):
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+        self._held = None
+        self.ledger.tau = 0
 
     # --- system-aware b' (paper §3.3) -------------------------------------------
     def calibrate(self, state: TrainState, batch: dict, probes: int = 3) -> float:
@@ -178,8 +203,24 @@ class AsyncSamExecutor:
         return system_aware_ascent_fraction(t_fast, t_slow)
 
     def close(self) -> None:
+        """Stop the ascent thread. Idempotent: double-close and
+        close-after-thread-death are both no-ops.
+
+        The join budget is generous: exiting the interpreter while the worker
+        is still inside jitted XLA compute aborts the process (std::terminate
+        from native thread teardown), so waiting out an in-flight ascent —
+        even one paying a compile — is the cheap option.
+        """
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
-        self._thread.join(timeout=2.0)
+        try:
+            self._jobs.get_nowait()       # cancel an unstarted job
+        except queue.Empty:
+            pass
+        if self._thread.is_alive():
+            self._thread.join(timeout=30.0)
 
     def __enter__(self):
         return self

@@ -21,6 +21,7 @@ import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrainState
+from repro.utils import scalar_metrics
 
 log = logging.getLogger("repro.fault_tolerance")
 
@@ -54,11 +55,15 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                   n_steps: int,
                   rcfg: Optional[ResilienceConfig] = None,
                   failure_injector: Optional[Callable[[int], None]] = None,
-                  shardings: Optional[Pytree] = None) -> RunReport:
+                  shardings: Optional[Pytree] = None,
+                  on_restore: Optional[Callable[[TrainState], None]] = None
+                  ) -> RunReport:
     """Run `n_steps` of `step_fn`, surviving crashes via checkpoint-restart.
 
     `failure_injector(step)` may raise to simulate a node loss. The pipeline
-    must expose state()/restore() (see repro.data.pipeline).
+    must expose state()/restore() (see repro.data.pipeline). `on_restore`
+    is called with the restored state after every rollback so stateful
+    executors (the hetero lane's held ascent gradient) can reset.
     """
     rcfg = rcfg or ResilienceConfig()
     t_start = time.time()
@@ -70,17 +75,20 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                  blocking=True)
 
     while True:
+        it = iter(pipeline)
         try:
-            it = iter(pipeline)
             step = int(state.step)
             while step < n_steps:
-                batch = next(it)
+                try:
+                    batch = next(it)
+                except StopIteration:
+                    break   # finite data exhausted: clean partial run,
+                            # not a node failure
                 if failure_injector is not None:
                     failure_injector(step)
                 state, metrics = step_fn(state, batch)
                 step = int(state.step)
-                history.append({k: float(v) for k, v in metrics.items()
-                                if hasattr(v, "__float__")})
+                history.append(scalar_metrics(metrics))
                 if step % rcfg.save_every == 0 or step == n_steps:
                     manager.save(step, state,
                                  extras={"pipeline": pipeline.state()},
@@ -100,3 +108,8 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
             state, extras = manager.restore(jax.eval_shape(lambda: state),
                                             shardings=shardings)
             pipeline.restore(extras["pipeline"])
+            if on_restore is not None:
+                on_restore(state)
+        finally:
+            if hasattr(it, "close"):
+                it.close()   # stop a prefetching pipeline's worker now

@@ -1,0 +1,13 @@
+"""Shared metric plumbing for training loops and callbacks."""
+from __future__ import annotations
+
+
+def scalar_metrics(metrics: dict) -> dict:
+    """The float()-able subset of a step's metrics, as host floats.
+
+    The one filter every history/logging consumer applies (Engine, the
+    resilient loop, LoggingCallback), kept in one place so metrics_history
+    has the same shape on every execution path.
+    """
+    return {k: float(v) for k, v in metrics.items()
+            if hasattr(v, "__float__")}

@@ -1,0 +1,226 @@
+"""Engine/StepExecutor layer: fused-vs-hetero parity, metric contract,
+callbacks, calibration pre-fit hook, and executor lifecycle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import MethodConfig, slice_ascent_batch
+from repro.data.synthetic import ClassificationTask
+from repro.engine import (ENGINE_METRIC_KEYS, CheckpointCallback, Engine,
+                          EvalCallback, FusedExecutor, HeteroExecutor,
+                          LoggingCallback, StalenessTelemetry, ThroughputMeter)
+from repro.runtime import ExecutorConfig
+
+TASK = ClassificationTask(n_classes=4, dim=8, seed=3)
+STEPS, BATCH = 30, 128
+
+
+def _loss(params, batch, rng):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    logits = h @ params["w2"]
+    onehot = jax.nn.one_hot(batch["y"], logits.shape[-1])
+    loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+    return loss, {"logits": logits}
+
+
+def _params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w1": jax.random.normal(k, (8, 32)) * 0.3,
+            "w2": jax.random.normal(jax.random.fold_in(k, 1), (32, 4)) * 0.3}
+
+
+def _batches(n=STEPS, batch=BATCH, frac=0.5):
+    return [{**b, "ascent": slice_ascent_batch(b, frac)}
+            for b in TASK.train_batches(batch, n)]
+
+
+def _make(kind, mcfg=None, xcfg=None, **kw):
+    mcfg = mcfg or MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+    opt = optim.sgd(0.1, momentum=0.9)
+    if kind == "fused":
+        return FusedExecutor(_loss, mcfg, opt, donate=False)
+    return HeteroExecutor(_loss, mcfg, opt, exec_cfg=xcfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# parity: both executors drive the same task through the same Engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["fused", "hetero"])
+def test_executor_drives_loss_down(kind):
+    with _make(kind) as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        report = Engine(ex, _batches()).fit(state, STEPS)
+    losses = [h["loss"] for h in report.metrics_history]
+    assert report.steps_done == STEPS
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses[-1])
+
+
+def test_executors_emit_identical_contract_keys():
+    seen = {}
+    for kind in ("fused", "hetero"):
+        with _make(kind) as ex:
+            state = ex.init_state(_params(), jax.random.PRNGKey(1))
+            state, metrics = ex.step(state, _batches(1)[0])
+        assert set(ENGINE_METRIC_KEYS) <= set(metrics), (kind, metrics.keys())
+        seen[kind] = set(ENGINE_METRIC_KEYS) & set(metrics)
+    assert seen["fused"] == seen["hetero"]
+
+
+def test_hetero_straggler_degrades_to_sgd_past_max_staleness():
+    """Injected ascent delay: tau ledger grows, then steps fall back to SGD."""
+    xcfg = ExecutorConfig(max_staleness=2, ascent_delay_s=0.5)
+    telemetry = StalenessTelemetry(print_summary=False)
+    with _make("hetero", xcfg=xcfg) as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        report = Engine(ex, _batches(12), [telemetry]).fit(state, 12)
+        summary = ex.ledger.summary()
+    t = telemetry.summary()
+    assert summary["stale_reuses"] > 0 or summary["sgd_fallbacks"] > 0 \
+        or t["sgd_fallbacks"] > 0
+    assert np.isfinite(report.metrics_history[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# calibration as a pre-fit hook
+# ---------------------------------------------------------------------------
+
+def test_calibrate_pre_fit_reports_and_caps_ascent():
+    with _make("hetero", calibrate=True, calibration_probes=1) as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        report = Engine(ex, _batches(6)).fit(state, 6)
+        assert report.pre_fit is not None
+        frac = report.pre_fit["calibrated_ascent_fraction"]
+        assert 0.05 <= frac <= 1.0
+        assert ex.calibrated_fraction == frac
+        # the slow lane never sees more than the calibrated b'
+        capped = ex._cap_ascent(_batches(1)[0])
+        assert jax.tree.leaves(capped["ascent"])[0].shape[0] \
+            <= max(1, int(round(BATCH * frac)))
+        # ... also when the batch carries no pre-sliced "ascent" key
+        plain = next(iter(TASK.train_batches(BATCH, 1)))
+        capped = ex._cap_ascent(plain)
+        assert "ascent" in capped
+        assert jax.tree.leaves(capped["ascent"])[0].shape[0] \
+            <= max(1, round(BATCH * min(ex.cfg.ascent_fraction, frac)))
+
+
+def test_fused_has_no_pre_fit_probe():
+    with _make("fused") as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        report = Engine(ex, _batches(3)).fit(state, 3)
+    assert report.pre_fit is None
+
+
+# ---------------------------------------------------------------------------
+# callbacks + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_callbacks_meter_eval_and_logging(capsys):
+    val = TASK.valid_set()
+    meter = ThroughputMeter(tokens_per_batch=BATCH)
+    evals = EvalCallback(lambda st: float(jnp.mean(
+        jnp.argmax(_loss(st.params, val, None)[1]["logits"], -1) == val["y"])),
+        every=5, total_steps=10)
+    with _make("fused") as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        Engine(ex, _batches(10), [meter, evals,
+                                  LoggingCallback(every=5)]).fit(state, 10)
+    assert len(meter.step_times) == 10
+    assert meter.summary()["tokens_per_s"] > 0
+    assert len(evals.curve) >= 2
+    assert all(0.0 <= acc <= 1.0 for _, acc in evals.curve)
+    assert "step " in capsys.readouterr().out
+
+
+def test_engine_checkpoint_callback_resumes(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.data import PipelineConfig, TokenPipeline
+    from repro.models import build_model
+    from repro.runtime import InjectedFailure, ResilienceConfig
+
+    cfg = get_config("olmo-1b", reduced=True)
+    bundle = build_model(cfg)
+    mcfg = MethodConfig(name="async_sam", rho=0.02, ascent_fraction=0.5)
+    opt = optim.adamw(1e-3)
+    crashed = {"done": False}
+
+    def injector(step):
+        if step == 6 and not crashed["done"]:
+            crashed["done"] = True
+            raise InjectedFailure("simulated node loss")
+
+    with FusedExecutor(bundle.loss_fn, mcfg, opt, donate=False) as ex:
+        state = ex.init_state(bundle.init(jax.random.PRNGKey(0)),
+                              jax.random.PRNGKey(1))
+        pipe = TokenPipeline(cfg, PipelineConfig(global_batch=4, seq_len=16,
+                                                 ascent_fraction=0.5,
+                                                 prefetch=0))
+        cb = CheckpointCallback(CheckpointManager(tmp_path / "ck", keep=2),
+                                ResilienceConfig(save_every=5,
+                                                 async_save=False))
+        report = Engine(ex, pipe, [cb]).fit(state, 10,
+                                            failure_injector=injector)
+    assert report.restarts == 1
+    assert report.steps_done == 10
+
+
+def test_hetero_checkpoint_restore_resets_ascent_state(tmp_path):
+    """A rollback must drop the held/in-flight ascent gradients (they were
+    computed against params from the discarded timeline)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import InjectedFailure, ResilienceConfig
+
+    class ListPipeline:
+        """Minimal state()/restore() wrapper so run_resilient can replay."""
+
+        def __init__(self, batches):
+            self.batches = batches
+            self.cursor = 0
+
+        def state(self):
+            return {"cursor": self.cursor}
+
+        def restore(self, s):
+            self.cursor = int(s["cursor"])
+
+        def __iter__(self):
+            while self.cursor < len(self.batches):
+                b = self.batches[self.cursor]
+                self.cursor += 1
+                yield b
+
+    crashed = {"done": False}
+
+    def injector(step):
+        if step == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise InjectedFailure("simulated node loss")
+
+    with _make("hetero") as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        cb = CheckpointCallback(CheckpointManager(tmp_path / "ck", keep=2),
+                                ResilienceConfig(save_every=5,
+                                                 async_save=False))
+        gen_before = ex._inner._gen
+        report = Engine(ex, ListPipeline(_batches(12)), [cb]).fit(
+            state, 12, failure_injector=injector)
+        assert report.restarts == 1 and report.steps_done == 12
+        assert ex._inner._gen == gen_before + 1   # reset() ran on restore
+    assert np.isfinite(report.metrics_history[-1]["loss"])
+
+
+def test_executor_close_is_idempotent():
+    ex = _make("hetero")
+    state = ex.init_state(_params(), jax.random.PRNGKey(1))
+    state, _ = ex.step(state, _batches(1)[0])
+    ex.close()
+    ex.close()          # double close
+    ex._inner.close()   # close-after-close on the inner executor
+    fx = _make("fused")
+    fx.close()
+    fx.close()

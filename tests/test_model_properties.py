@@ -1,12 +1,15 @@
 """Deeper model-layer properties: rope, MLA absorption, MoE dispatch."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import get_config
 from repro.models import build_model, synth_batch

@@ -47,13 +47,14 @@ def test_mini_dryrun_train_and_decode(subprocess_py):
         from repro.models import build_model, batch_spec, decode_batch_spec
         from repro.models.config import ShapeSpec
         from repro.models.partitioning import activation_sharding
+        from repro.engine import mesh_context
 
         cfg = get_config('olmo-1b', reduced=True)
         bundle = build_model(cfg)
         mesh = jax.make_mesh((4, 2), ('data', 'model'))
         shape = ShapeSpec('mini_train', 'train', 64, 8)
 
-        with jax.set_mesh(mesh), activation_sharding(mesh):
+        with mesh_context(mesh), activation_sharding(mesh):
             setup = make_train_setup(bundle, MethodConfig(n_microbatches=2))
             state_sds = jax.eval_shape(lambda: setup.init_state(
                 bundle.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1)))
@@ -63,7 +64,8 @@ def test_mini_dryrun_train_and_decode(subprocess_py):
             c = jax.jit(setup.step_fn, in_shardings=(state_sh, batch_sh),
                         out_shardings=(state_sh, None), donate_argnums=(0,)
                         ).lower(state_sds, batch_sds).compile()
-            assert c.cost_analysis()['flops'] > 0
+            from repro.engine import cost_analysis_dict
+            assert cost_analysis_dict(c)['flops'] > 0
             print('TRAIN_COMPILED', int(c.memory_analysis().temp_size_in_bytes > 0))
 
             dshape = ShapeSpec('mini_decode', 'decode', 64, 8)
@@ -94,6 +96,7 @@ def test_sharded_training_matches_single_device(subprocess_py):
         from repro.models import build_model, synth_batch
         from repro.launch.sharding import state_spec_tree, to_named
         from repro.models.partitioning import activation_sharding
+        from repro.engine import mesh_context
 
         cfg = get_config('olmo-1b', reduced=True)
         bundle = build_model(cfg)
@@ -109,7 +112,7 @@ def test_sharded_training_matches_single_device(subprocess_py):
             step = method.make_step(bundle.loss_fn, opt)
             if sharded:
                 mesh = jax.make_mesh((4, 2), ('data', 'model'))
-                with jax.set_mesh(mesh), activation_sharding(mesh):
+                with mesh_context(mesh), activation_sharding(mesh):
                     sh = to_named(state_spec_tree(
                         jax.eval_shape(lambda: state), cfg, mesh), mesh)
                     state = jax.device_put(state, sh)

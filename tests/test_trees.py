@@ -1,12 +1,14 @@
 """Property-based tests for the pytree substrate (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis.extra import numpy as hnp
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis.extra import numpy as hnp  # noqa: E402
 
 from repro.utils import trees
 
