@@ -18,7 +18,8 @@ import numpy as np
 from repro import optim
 from repro.core import MethodConfig
 from repro.data.synthetic import ClassificationTask
-from repro.engine import Engine, EvalCallback, FusedExecutor, ThroughputMeter
+from repro.engine import (Engine, EvalCallback, FusedExecutor,
+                          StalenessTelemetry, ThroughputMeter)
 
 TASK = ClassificationTask(n_classes=10, dim=64, margin=1.05, noise=1.0, seed=7)
 
@@ -63,7 +64,8 @@ def train_classifier(method_name: str, *, steps: int = 400, batch: int = 128,
                      rho: float = 0.05, lr: float = 0.05,
                      ascent_fraction: float = 0.5, seed: int = 0,
                      eval_every: int = 50, task: Optional[ClassificationTask] = None,
-                     mcfg_extra: Optional[dict] = None) -> TrainResult:
+                     mcfg_extra: Optional[dict] = None,
+                     telemetry_jsonl: Optional[str] = None) -> TrainResult:
     task = task or TASK
     mcfg = MethodConfig(name=method_name, rho=rho,
                         ascent_fraction=ascent_fraction,
@@ -76,11 +78,15 @@ def train_classifier(method_name: str, *, steps: int = 400, batch: int = 128,
     meter = ThroughputMeter()
     evals = EvalCallback(lambda st: accuracy(st.params, val),
                          every=eval_every, total_steps=steps)
+    callbacks = [meter, evals]
+    if telemetry_jsonl:
+        callbacks.append(StalenessTelemetry(print_summary=False,
+                                            jsonl_path=telemetry_jsonl))
     with FusedExecutor(mlp_loss, mcfg, opt, donate=False) as ex:
         state = ex.init_state(mlp_init(jax.random.PRNGKey(seed)),
                               jax.random.PRNGKey(seed + 1))
         # warmup=1: compile outside the timed region (as all benches did)
-        report = Engine(ex, batches, [meter, evals]).fit(state, steps, warmup=1)
+        report = Engine(ex, batches, callbacks).fit(state, steps, warmup=1)
 
     final = report.final_state
     losses = [h["loss"] for h in report.metrics_history if "loss" in h]

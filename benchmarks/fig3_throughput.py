@@ -3,12 +3,21 @@
 Claims: SAM ~0.5x SGD; AsyncSAM(fused, b'=b/4) well above SAM; the
 heterogeneous executor hides the ascent entirely (~SGD throughput) when the
 helper keeps up. Prints `fig3,<method>,samples_per_s,relative_to_sgd`.
+
+Each run also streams its per-step tau/step-time records to
+artifacts/telemetry/fig3_<method>.jsonl (StalenessTelemetry), so the
+degradation curves can be plotted against the throughput numbers.
 """
 from __future__ import annotations
+
+import pathlib
 
 import numpy as np
 
 from benchmarks.common import train_classifier
+
+TELEMETRY_DIR = (pathlib.Path(__file__).resolve().parents[1]
+                 / "artifacts" / "telemetry")
 
 CASES = [("sgd", {}), ("sam", {}), ("gsam", {}), ("looksam", {}),
          ("esam", {}), ("aesam", {}), ("mesa", {}),
@@ -19,7 +28,9 @@ def run(steps: int = 200, batch: int = 256, verbose: bool = True) -> dict:
     out = {}
     for name, extra in CASES:
         r = train_classifier(name, steps=steps, batch=batch,
-                             ascent_fraction=extra.get("ascent_fraction", 0.5))
+                             ascent_fraction=extra.get("ascent_fraction", 0.5),
+                             telemetry_jsonl=str(TELEMETRY_DIR
+                                                 / f"fig3_{name}.jsonl"))
         med = float(np.median(r.step_times))
         out[name] = batch / med
     if verbose:

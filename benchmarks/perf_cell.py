@@ -20,6 +20,7 @@ from repro.configs import get_config
 from repro.core import MethodConfig
 from repro.launch import dryrun as D
 from repro.models.config import SHAPES
+from repro.optim.fused import epilogue_hbm_bytes
 
 def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
     cfg = get_config(arch)
@@ -38,6 +39,15 @@ def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
     mem_bytes = 2 * r.argument_bytes + 3 * r.peak_memory_per_device
     t_mem = mem_bytes / HBM_BW
     t_coll = r.collective_bytes / ICI_BW
+    # modeled HBM traffic of the weight-space epilogue (perturb + adamw tail,
+    # matching the dry-run's optimizer: adamw + clip, async carried norm),
+    # per-leaf passes vs the fused flat-buffer path
+    ep_kw = dict(family="adamw", clip=True, weight_decay=True,
+                 carried_norm=(mcfg.name == "async_sam"))
+    ep_unfused = epilogue_hbm_bytes(r.param_count, r.param_bytes,
+                                    fused=False, **ep_kw)
+    ep_fused = epilogue_hbm_bytes(r.param_count, r.param_bytes,
+                                  fused=True, **ep_kw)
     out = {"arch": arch, "shape": shape_name, "variant": variant,
            "status": r.status, "note": r.note[:200],
            "t_compute_s": t_comp, "t_memory_s": t_mem, "t_coll_s": t_coll,
@@ -46,13 +56,21 @@ def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
                                                   max(t_comp, t_mem, t_coll)),
            "collective_gb": r.collective_bytes / 1e9,
            "temp_gb": r.peak_memory_per_device / 1e9,
+           "epilogue_hbm_bytes": {
+               "unfused": ep_unfused, "fused": ep_fused,
+               "reduction": ep_unfused / ep_fused if ep_fused else 0.0,
+               "t_epilogue_unfused_s": ep_unfused / chips / HBM_BW,
+               "t_epilogue_fused_s": ep_fused / chips / HBM_BW},
            "inventory": r.inventory}
     d = REPO / "artifacts" / "perf"; d.mkdir(parents=True, exist_ok=True)
     (d / f"{arch}_{shape_name}_{variant}.json").write_text(json.dumps(out, indent=1))
+    ep = out["epilogue_hbm_bytes"]
     print(f"{variant:28s} {r.status:4s} comp={t_comp:.3f}s mem={t_mem:.3f}s "
           f"coll={t_coll:.3f}s bound={out['bound_s']:.3f}s "
           f"mfu={out['mfu_bound']:.3f} tempGB={out['temp_gb']:.1f} "
-          f"collGB={out['collective_gb']:.1f}", flush=True)
+          f"collGB={out['collective_gb']:.1f} "
+          f"epilogue={ep['unfused'] / 1e9:.1f}GB->{ep['fused'] / 1e9:.1f}GB "
+          f"({ep['reduction']:.2f}x)", flush=True)
     return out
 
 if __name__ == "__main__":

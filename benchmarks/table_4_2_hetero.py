@@ -10,16 +10,20 @@ Runs through `Engine.fit` with the HeteroExecutor (the same path as
 """
 from __future__ import annotations
 
+import pathlib
+
 import jax
 import numpy as np
 
 from benchmarks.common import TASK, accuracy, mlp_init, mlp_loss
 from repro import optim
 from repro.core import MethodConfig, slice_ascent_batch
-from repro.engine import Engine, HeteroExecutor, ThroughputMeter
+from repro.engine import Engine, HeteroExecutor, StalenessTelemetry, ThroughputMeter
 from repro.runtime import ExecutorConfig
 
 RATIOS = [1, 2, 3, 5]     # b / b'
+TELEMETRY_DIR = (pathlib.Path(__file__).resolve().parents[1]
+                 / "artifacts" / "telemetry")
 
 
 def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
@@ -32,11 +36,15 @@ def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
         batches = [{**b, "ascent": slice_ascent_batch(b, frac)}
                    for b in TASK.train_batches(batch, steps)]
         meter = ThroughputMeter()
+        telemetry = StalenessTelemetry(
+            print_summary=False,
+            jsonl_path=TELEMETRY_DIR / f"table_4_2_ratio{ratio}.jsonl")
         with HeteroExecutor(mlp_loss, mcfg, opt,
                             exec_cfg=ExecutorConfig(max_staleness=3)) as ex:
             state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
                                   jax.random.PRNGKey(1))
-            report = Engine(ex, batches, [meter]).fit(state, steps, warmup=1)
+            report = Engine(ex, batches, [meter, telemetry]).fit(
+                state, steps, warmup=1)
         taus = [h["tau"] for h in report.metrics_history]
         dt = sum(meter.step_times)
         acc = accuracy(report.final_state.params, val)

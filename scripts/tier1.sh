@@ -1,8 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verify: one invocation, correct PYTHONPATH, from any cwd.
-#   ./scripts/tier1.sh            # whole suite
+#   ./scripts/tier1.sh                       # whole suite
 #   ./scripts/tier1.sh tests/test_engine.py -k parity
+#   ./scripts/tier1.sh --kernels-interpret   # Pallas-vs-oracle lane only
+#                                            # (interpret-mode kernel sweep)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--kernels-interpret" ]]; then
+  shift
+  exec python -m pytest -q tests/test_kernels.py "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -44,9 +44,11 @@ def available_methods() -> list[str]:
 
 def make_method(cfg: MethodConfig) -> Method:
     """Instantiate a training method from its config (name-dispatched)."""
+    import dataclasses
+
     try:
         factory = _REGISTRY[cfg.name]
     except KeyError:
         raise ValueError(
             f"unknown method {cfg.name!r}; available: {available_methods()}") from None
-    return factory(cfg)
+    return dataclasses.replace(factory(cfg), cfg=cfg)

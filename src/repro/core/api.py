@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import GradientTransform, apply_updates
+from repro.optim.fused import fused_apply
 from repro.utils import trees
 
 Pytree = Any
@@ -75,14 +76,25 @@ class MethodConfig:
     topk_fraction: float = 0.01
     n_microbatches: int = 1   # gradient accumulation (activation-memory lever)
     ascent_interval: int = 1  # refresh a_t every k steps (beyond-paper; tau<=k)
+    # Flat-buffer fused weight-space path (perturb axpy, ascent-refresh
+    # dot/norms). None defers to the platform default: on for TPU, off
+    # elsewhere (utils.buckets.fused_path_enabled). Executors resolve and pin
+    # this; the matching optimizer-epilogue switch lives on FusedSpec.enabled.
+    fused_update: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class Method:
-    """A named pair of (state init, step builder)."""
+    """A named pair of (state init, step builder).
+
+    `cfg` is the MethodConfig the factory closed over (attached by
+    `core.make_method`); executors use it to rebuild the method with a
+    resolved `fused_update` flag. None for hand-constructed Methods.
+    """
     name: str
     init: Callable[[Pytree, jax.Array], Pytree]
     make_step: Callable[[LossFn, GradientTransform], Callable]
+    cfg: Optional[MethodConfig] = None
 
 
 def init_train_state(params: Pytree, optimizer: GradientTransform,
@@ -99,12 +111,23 @@ def init_train_state(params: Pytree, optimizer: GradientTransform,
 
 def _finish(state: TrainState, optimizer: GradientTransform, grads: Pytree,
             method_state: Pytree, metrics: dict) -> tuple[TrainState, dict]:
-    """Shared tail: inner-optimizer update + state threading."""
-    updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
-    params = apply_updates(state.params, updates)
-    rng, _ = jax.random.split(state.rng)
+    """Shared tail: inner-optimizer update + state threading.
+
+    Canonical sgd/adamw chains take the fused flat-buffer path when enabled
+    (optim.fused): one single-pass kernel per dtype bucket instead of the
+    per-leaf update + apply_updates passes, with identical opt_state layout.
+    """
     metrics = dict(metrics)
-    metrics.setdefault("grad_norm", trees.global_norm(grads))
+    fused = fused_apply(optimizer, grads, state.opt_state, state.params)
+    if fused is not None:
+        params, opt_state, gnorm = fused
+        metrics.setdefault("grad_norm", gnorm)
+    else:
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        metrics.setdefault("grad_norm", trees.global_norm(grads))
+    rng, _ = jax.random.split(state.rng)
     new_state = TrainState(step=state.step + 1, rng=rng, params=params,
                            opt_state=opt_state, method_state=method_state)
     return new_state, metrics

@@ -32,7 +32,7 @@ from repro.core.api import (LossFn, Method, MethodConfig, TrainState, _finish,
 from repro.core.ascent import Compressor, CompressionState, slice_ascent_batch, split_batch
 from repro.core.sam import _m
 from repro.optim import GradientTransform
-from repro.utils import trees
+from repro.utils import buckets, trees
 
 Pytree = Any
 
@@ -78,7 +78,8 @@ def make_async_sam(cfg: MethodConfig) -> Method:
             # (Algorithm 1, line 8) without a traced branch.
             rho_eff = jnp.where(ms.have_ascent, cfg.rho, 0.0)
             w_hat = _perturb(state.params, ms.ascent_grad, rho_eff,
-                              grad_norm=ms.ascent_norm)
+                              grad_norm=ms.ascent_norm,
+                              fused=cfg.fused_update)
 
             # --- descent gradient at the perturbed point (line 6).
             (loss, aux), grads = vg(w_hat, batch, rng_d)
@@ -104,15 +105,34 @@ def make_async_sam(cfg: MethodConfig) -> Method:
                 a_new, loss_asc, staleness = jax.lax.cond(refresh, fresh,
                                                           reuse, None)
 
-            cos = trees.tree_cosine_similarity(a_new, ms.ascent_grad)
-            a_lossy, comp_state = compressor.compress(a_new, ms.compression)
-            new_ms = AsyncSamState(
-                ascent_grad=trees.tree_cast(a_lossy, jnp.float32),
-                ascent_norm=trees.global_norm(a_lossy),
-                have_ascent=jnp.ones((), jnp.bool_),
-                staleness=staleness,
-                compression=comp_state,
-            )
+            # --- ascent-state refresh. On the fused path the cosine metric
+            # and the carried norm come from ONE pass over (a_t, a_{t-1})
+            # (kernels.fused_dot_norms) instead of three per-leaf reductions;
+            # lossless only, since compression changes the stored gradient.
+            if (buckets.fused_path_enabled(cfg.fused_update)
+                    and cfg.compressor == "none"):
+                a32 = trees.tree_cast(a_new, jnp.float32)
+                dot, sq_new, sq_old = buckets.bucketed_dot_norms(
+                    a32, ms.ascent_grad)
+                cos = dot / (jnp.sqrt(sq_new) * jnp.sqrt(sq_old) + 1e-12)
+                comp_state = ms.compression
+                new_ms = AsyncSamState(
+                    ascent_grad=a32,
+                    ascent_norm=jnp.sqrt(sq_new),
+                    have_ascent=jnp.ones((), jnp.bool_),
+                    staleness=staleness,
+                    compression=comp_state,
+                )
+            else:
+                cos = trees.tree_cosine_similarity(a_new, ms.ascent_grad)
+                a_lossy, comp_state = compressor.compress(a_new, ms.compression)
+                new_ms = AsyncSamState(
+                    ascent_grad=trees.tree_cast(a_lossy, jnp.float32),
+                    ascent_norm=trees.global_norm(a_lossy),
+                    have_ascent=jnp.ones((), jnp.bool_),
+                    staleness=staleness,
+                    compression=comp_state,
+                )
             metrics = {"loss": loss, "ascent_loss": loss_asc,
                        "ascent_norm": new_ms.ascent_norm,
                        "ascent_cosine": cos,
@@ -153,7 +173,8 @@ def make_descent_fn(cfg: MethodConfig, loss_fn: LossFn,
                 have_a: jax.Array):
         batch, _ = split_batch(batch)
         rho_eff = jnp.where(have_a, cfg.rho, 0.0)
-        w_hat = _perturb(state.params, a, rho_eff, grad_norm=a_norm)
+        w_hat = _perturb(state.params, a, rho_eff, grad_norm=a_norm,
+                         fused=cfg.fused_update)
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             w_hat, batch, step_rng(state))
         return _finish(state, optimizer, grads, state.method_state,

@@ -1,9 +1,11 @@
 """Normalized model perturbation — the primitive shared by the whole SAM family.
 
 `perturb(params, grad, rho)` implements   w + rho * g / ||g||   (paper Eq. 1-3).
-On TPU the fused Pallas kernel (repro.kernels.sam_perturb) performs the
-norm-scale-axpy in one HBM pass; this module is the jnp composition used on CPU
-and as the autodiff-friendly default.
+When the fused flat-buffer path is enabled (on-for-TPU default, or an explicit
+`fused=` override) the norm and the scale-axpy each run as one single-pass
+kernel per dtype bucket (repro.kernels via utils.buckets), halving the HBM
+traffic of the per-leaf jnp composition, which stays the CPU and
+autodiff-friendly default.
 """
 from __future__ import annotations
 
@@ -12,7 +14,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.utils import trees
+from repro.utils import buckets, trees
 
 Pytree = Any
 _EPS = 1e-12
@@ -27,8 +29,18 @@ def perturbation_scale(grad: Pytree, rho: float | jax.Array,
 
 
 def perturb(params: Pytree, grad: Pytree, rho: float | jax.Array,
-            grad_norm: Optional[jax.Array] = None) -> Pytree:
-    """Return w + rho * g/||g|| without modifying dtypes of `params`."""
+            grad_norm: Optional[jax.Array] = None, *,
+            fused: Optional[bool] = None) -> Pytree:
+    """Return w + rho * g/||g|| without modifying dtypes of `params`.
+
+    `fused=None` defers to the platform default (utils.buckets); True/False
+    force the flat-buffer kernel path / the per-leaf jnp composition.
+    """
+    if buckets.fused_path_enabled(fused):
+        if grad_norm is None:
+            grad_norm = jnp.sqrt(buckets.bucketed_sq_norm(grad))
+        scale = jnp.asarray(rho, jnp.float32) / (grad_norm + _EPS)
+        return buckets.bucketed_axpy(scale, grad, params)
     scale = perturbation_scale(grad, rho, grad_norm)
     return jax.tree.map(
         lambda p, g: (p.astype(jnp.float32)
@@ -37,14 +49,14 @@ def perturb(params: Pytree, grad: Pytree, rho: float | jax.Array,
 
 
 def perturb_masked(params: Pytree, grad: Pytree, rho: float | jax.Array,
-                   mask: Pytree) -> Pytree:
+                   mask: Pytree, *, fused: Optional[bool] = None) -> Pytree:
     """ESAM-style partial perturbation: only leaves elements where mask==1.
 
     The norm is taken over the *masked* gradient so the realized perturbation
     radius stays rho (matches ESAM's 1/sqrt(beta) rescaling intent).
     """
     masked = jax.tree.map(lambda g, m: g * m, grad, mask)
-    return perturb(params, masked, rho)
+    return perturb(params, masked, rho, fused=fused)
 
 
 def gradient_norm_penalty_direction(grad_w: Pytree, grad_pert: Pytree,

@@ -52,7 +52,8 @@ def make_sam(cfg: MethodConfig) -> Method:
             rng = step_rng(state)
             # --- gradient ascent (perturbation) ---
             (loss_w, _), g_ascent = vg(state.params, ascent_batch, rng)
-            w_hat = _perturb(state.params, g_ascent, cfg.rho)
+            w_hat = _perturb(state.params, g_ascent, cfg.rho,
+                             fused=cfg.fused_update)
             # --- gradient descent at the perturbed point ---
             (loss, aux), grads = vg(w_hat, batch, rng)
             metrics = {"loss": loss, "loss_at_w": loss_w,
@@ -79,7 +80,7 @@ def make_gsam(cfg: MethodConfig) -> Method:
                 ascent_batch = batch
             rng = step_rng(state)
             (loss_w, _), g_w = vg(state.params, ascent_batch, rng)
-            w_hat = _perturb(state.params, g_w, cfg.rho)
+            w_hat = _perturb(state.params, g_w, cfg.rho, fused=cfg.fused_update)
             (loss, aux), g_hat = vg(w_hat, batch, rng)
             grads = gradient_norm_penalty_direction(g_w, g_hat, cfg.alpha)
             metrics = {"loss": loss, "loss_at_w": loss_w, **_m(aux)}

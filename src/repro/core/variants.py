@@ -49,7 +49,7 @@ def make_looksam(cfg: MethodConfig) -> Method:
         def fresh_step(params, batch, rng):
             """SAM-style refresh: returns (grads, new g_v, loss, aux)."""
             (_, _), g_w = vg(params, batch, rng)
-            w_hat = _perturb(params, g_w, cfg.rho)
+            w_hat = _perturb(params, g_w, cfg.rho, fused=cfg.fused_update)
             (loss, aux), g_s = vg(w_hat, batch, rng)
             # decompose g_s into the component parallel to g_w and the rest
             denom = trees.tree_sq_norm(g_w) + 1e-12
@@ -122,7 +122,8 @@ def make_esam(cfg: MethodConfig) -> Method:
             mask = jax.tree.unflatten(treedef, [
                 jax.random.bernoulli(k, cfg.esam_beta, x.shape).astype(x.dtype)
                 for k, x in zip(keys, leaves)])
-            w_hat = _perturb_masked(state.params, g_w, cfg.rho, mask)
+            w_hat = _perturb_masked(state.params, g_w, cfg.rho, mask,
+                                    fused=cfg.fused_update)
             (loss, aux), grads = vg(w_hat, batch, rng_loss)
             return _finish(state, optimizer, grads, (), {"loss": loss, **_m(aux)})
 
@@ -163,7 +164,8 @@ def make_aesam(cfg: MethodConfig) -> Method:
             take_sam = jnp.logical_or(z > cfg.aesam_lambda_hi, ms.count < 8)
 
             def sam_branch(_):
-                w_hat = _perturb(state.params, g_w, cfg.rho)
+                w_hat = _perturb(state.params, g_w, cfg.rho,
+                                 fused=cfg.fused_update)
                 (loss, _), grads = vg(w_hat, batch, rng)
                 return trees.tree_cast(grads, jnp.float32), loss
             def sgd_branch(_):

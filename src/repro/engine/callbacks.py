@@ -14,8 +14,10 @@ checkpoint-restart on failure) with its manager and resilience policy.
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 from repro.checkpoint import CheckpointManager
 from repro.core import TrainState
@@ -119,21 +121,41 @@ class StalenessTelemetry(Callback):
 
     Works against the metric contract (tau/perturbed), so it is attachable to
     the fused executor too, where it simply records the constant τ=1 regime.
+
+    With `jsonl_path` set, every step additionally appends one JSON record
+    `{step, tau, perturbed, step_time_s, loss}` to that file (streamed, so a
+    crashed run keeps its trace) — the input `benchmarks/fig3_throughput.py`
+    and `benchmarks/table_4_2_hetero.py` use to plot straggler-degradation
+    curves.
     """
 
-    def __init__(self, print_summary: bool = True):
+    def __init__(self, print_summary: bool = True,
+                 jsonl_path: Union[str, pathlib.Path, None] = None):
         self.print_summary = print_summary
+        self.jsonl_path = pathlib.Path(jsonl_path) if jsonl_path else None
+        self._sink = None
         self.tau_hist: dict[int, int] = {}
         self.sgd_fallbacks = 0
         self.perturbed_steps = 0
 
     def on_step(self, engine, state, metrics, step_time_s):
         tau = int(metrics.get("tau", 0))
+        perturbed = float(metrics.get("perturbed", 0.0))
         self.tau_hist[tau] = self.tau_hist.get(tau, 0) + 1
-        if float(metrics.get("perturbed", 0.0)):
+        if perturbed:
             self.perturbed_steps += 1
         else:
             self.sgd_fallbacks += 1
+        if self.jsonl_path is not None:
+            if self._sink is None:
+                self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
+                self._sink = self.jsonl_path.open("w")
+            loss = metrics.get("loss")
+            self._sink.write(json.dumps({
+                "step": int(state.step), "tau": tau, "perturbed": perturbed,
+                "step_time_s": step_time_s,
+                "loss": float(loss) if loss is not None else None}) + "\n")
+            self._sink.flush()
 
     def summary(self) -> dict:
         return {"tau_hist": dict(sorted(self.tau_hist.items())),
@@ -141,5 +163,8 @@ class StalenessTelemetry(Callback):
                 "sgd_fallbacks": self.sgd_fallbacks}
 
     def on_fit_end(self, engine, report):
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
         if self.print_summary:
             print(f"staleness: {self.summary()}")

@@ -11,6 +11,7 @@ the `StepExecutor` surface.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from typing import Any, Optional, Union
 
 import jax
@@ -20,7 +21,7 @@ from repro.core import Method, MethodConfig, TrainState, init_train_state, make_
 from repro.core.api import LossFn
 from repro.core.async_sam import AsyncSamState
 from repro.engine.api import ensure_metric_contract, mesh_context
-from repro.optim import GradientTransform
+from repro.optim import GradientTransform, configure_fused
 
 Pytree = Any
 
@@ -39,6 +40,13 @@ class FusedExecutor:
         update at scale; safe because callers rebind `state` every step).
       block: block on the updated params each step so host-side timing and
         callbacks see real step latency (all previous loops did this).
+      fused_update: flat-buffer fused weight-space path (perturb + optimizer
+        epilogue on dtype-bucketed buffers via single-pass kernels). None
+        resolves to the platform default — on for TPU when the step runs
+        unsharded (mesh None or 1 device; flattening a model-sharded leaf
+        would force an all-gather under pjit), off elsewhere. The resolved
+        flag is pinned into both the MethodConfig and the optimizer's
+        FusedSpec before the step is built, so it is trace-time static.
     """
 
     name = "fused"
@@ -47,12 +55,29 @@ class FusedExecutor:
                  method: Union[Method, MethodConfig, None] = None,
                  optimizer: Optional[GradientTransform] = None, *,
                  mesh=None, model_cfg=None, donate: bool = True,
-                 block: bool = True):
-        if isinstance(method, Method):
-            self.method = method
-        else:
-            self.method = make_method(method or MethodConfig())
+                 block: bool = True, fused_update: Optional[bool] = None):
         assert optimizer is not None, "FusedExecutor needs an optimizer"
+        if fused_update is None:
+            fused_update = (jax.default_backend() == "tpu"
+                            and (mesh is None or mesh.size == 1))
+        self.fused_update = fused_update
+        optimizer = configure_fused(optimizer, fused_update)
+        if isinstance(method, Method):
+            # pre-built Method: rebuild from its attached config so the step's
+            # perturb/refresh call sites see the RESOLVED flag (a None in the
+            # closure would re-resolve to the bare platform default — fusing
+            # sharded-mesh perturbs on TPU that this executor just declined).
+            # A hand-constructed Method without cfg is taken as-is.
+            if (method.cfg is not None
+                    and method.cfg.fused_update != fused_update):
+                self.method = make_method(dataclasses.replace(
+                    method.cfg, fused_update=fused_update))
+            else:
+                self.method = method
+        else:
+            mcfg = dataclasses.replace(method or MethodConfig(),
+                                       fused_update=fused_update)
+            self.method = make_method(mcfg)
         self.optimizer = optimizer
         self.mesh = mesh
         self.model_cfg = model_cfg
@@ -96,6 +121,35 @@ class FusedExecutor:
             self._jitted = jax.jit(self._step_raw, donate_argnums=donate,
                                    out_shardings=(state_sh, None))
             return state
+
+    def abstract_state(self, params_fn, rng: jax.Array) -> TrainState:
+        """ShapeDtypeStruct TrainState — no device allocation (dry-run entry).
+
+        `params_fn` builds the parameter pytree; it only ever runs under
+        `jax.eval_shape`, so a full-size production config costs nothing.
+        """
+        with self._scope():
+            return jax.eval_shape(lambda: init_train_state(
+                params_fn(), self.optimizer, self.method, rng))
+
+    def lower(self, state_sds, batch_sds):
+        """Jit-lower the step with explicit in/out shardings (compile
+        analysis / multi-pod dry-run — the same plumbing init_state uses,
+        but against abstract operands and with pinned input shardings)."""
+        donate = (0,) if self.donate else ()
+        with self._scope():
+            if self.mesh is None:
+                return jax.jit(self._step_raw, donate_argnums=donate
+                               ).lower(state_sds, batch_sds)
+            from repro.launch.sharding import (batch_spec_tree,
+                                               state_spec_tree, to_named)
+            state_sh = to_named(state_spec_tree(state_sds, self.model_cfg,
+                                                self.mesh), self.mesh)
+            batch_sh = to_named(batch_spec_tree(batch_sds, self.mesh),
+                                self.mesh)
+            return jax.jit(self._step_raw, in_shardings=(state_sh, batch_sh),
+                           out_shardings=(state_sh, None),
+                           donate_argnums=donate).lower(state_sds, batch_sds)
 
     def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
         assert self._jitted is not None, "call init_state before step"

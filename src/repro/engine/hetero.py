@@ -6,6 +6,12 @@ promotes the system-aware calibration of paper §3.3 to a first-class pre-fit
 hook: when constructed with `calibrate=True`, `pre_fit` measures per-sample
 gradient times on both lanes, reports the suggested b'/b, and from then on
 caps the ascent sub-batch the slow lane sees at the calibrated size.
+
+The flat-buffer fused weight-space path on the descent lane is governed by
+`ExecutorConfig.fused_update` (None -> platform default: on for TPU, off for
+CPU); lane placement on a real CPU+accelerator host comes from
+`ExecutorConfig.{ascent,descent}_device` (`--ascent-device`/`--descent-device`
+in the launcher).
 """
 from __future__ import annotations
 

@@ -101,3 +101,70 @@ def sam_perturb(w_flat: jax.Array, g_flat: jax.Array, rho, sq_norm, *,
     from repro.kernels import sam_perturb as sp
     return sp.sam_perturb(w_flat, g_flat, rho, sq_norm,
                           interpret=(mode == "pallas_interpret"))
+
+
+def sq_norm(g_flat: jax.Array, *, impl: Optional[str] = None) -> jax.Array:
+    """Sum of squares of a flat vector (fp32 chunk partials on TPU)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.sq_norm_jnp(g_flat)
+    from repro.kernels import sam_perturb as sp
+    return sp.sq_norm(g_flat, interpret=(mode == "pallas_interpret"))
+
+
+def fused_axpy(alpha, x_flat: jax.Array, y_flat: jax.Array, *,
+               impl: Optional[str] = None) -> jax.Array:
+    """Single-pass  y + alpha * x  over flat vectors (y's dtype out)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.axpy_flat_jnp(alpha, x_flat, y_flat)
+    from repro.kernels import fused_update as fu
+    return fu.fused_axpy(alpha, x_flat, y_flat,
+                         interpret=(mode == "pallas_interpret"))
+
+
+def fused_dot_norms(a_flat: jax.Array, b_flat: jax.Array, *,
+                    impl: Optional[str] = None
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(<a,b>, ||a||^2, ||b||^2) in one pass over (a, b)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.dot_norms_flat_jnp(a_flat, b_flat)
+    from repro.kernels import fused_update as fu
+    return fu.fused_dot_norms(a_flat, b_flat,
+                              interpret=(mode == "pallas_interpret"))
+
+
+def sgd_epilogue(w_flat: jax.Array, g_flat: jax.Array, m_flat, clip_scale, lr,
+                 *, momentum: float = 0.0, nesterov: bool = False,
+                 weight_decay: float = 0.0, impl: Optional[str] = None):
+    """Fused clip-wd-momentum-lr-apply (SGD family): (w', m'-or-None)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.sgd_epilogue_flat_jnp(w_flat, g_flat, m_flat, clip_scale,
+                                         lr, momentum=momentum,
+                                         nesterov=nesterov,
+                                         weight_decay=weight_decay)
+    from repro.kernels import fused_update as fu
+    return fu.sgd_epilogue(w_flat, g_flat, m_flat, clip_scale, lr,
+                           momentum=momentum, nesterov=nesterov,
+                           weight_decay=weight_decay,
+                           interpret=(mode == "pallas_interpret"))
+
+
+def adamw_epilogue(w_flat: jax.Array, g_flat: jax.Array, mu_flat: jax.Array,
+                   nu_flat: jax.Array, clip_scale, lr, c1, c2, *,
+                   b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                   weight_decay: float = 0.0, impl: Optional[str] = None):
+    """Fused clip-adam-wd-lr-apply (AdamW family): (w', mu', nu')."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.adamw_epilogue_flat_jnp(w_flat, g_flat, mu_flat, nu_flat,
+                                           clip_scale, lr, c1, c2, b1=b1,
+                                           b2=b2, eps=eps,
+                                           weight_decay=weight_decay)
+    from repro.kernels import fused_update as fu
+    return fu.adamw_epilogue(w_flat, g_flat, mu_flat, nu_flat, clip_scale, lr,
+                             c1, c2, b1=b1, b2=b2, eps=eps,
+                             weight_decay=weight_decay,
+                             interpret=(mode == "pallas_interpret"))

@@ -150,6 +150,54 @@ def sq_norm_jnp(g: jax.Array) -> jax.Array:
     return jnp.sum(jnp.square(g.astype(jnp.float32)))
 
 
+def axpy_flat_jnp(alpha, x: jax.Array, y: jax.Array) -> jax.Array:
+    """y + alpha * x (fp32 accumulation, y's dtype out)."""
+    return (y.astype(jnp.float32)
+            + jnp.asarray(alpha, jnp.float32) * x.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def dot_norms_flat_jnp(a: jax.Array, b: jax.Array
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(<a,b>, ||a||^2, ||b||^2) in fp32."""
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    return jnp.sum(a32 * b32), jnp.sum(a32 * a32), jnp.sum(b32 * b32)
+
+
+def sgd_epilogue_flat_jnp(w: jax.Array, g: jax.Array, m, clip_scale, lr, *,
+                          momentum: float = 0.0, nesterov: bool = False,
+                          weight_decay: float = 0.0):
+    """Oracle for kernels.fused_update.sgd_epilogue: (w', m'-or-None)."""
+    w32 = w.astype(jnp.float32)
+    u = g.astype(jnp.float32) * jnp.asarray(clip_scale, jnp.float32)
+    if weight_decay:
+        u = u + weight_decay * w32
+    lr = jnp.asarray(lr, jnp.float32)
+    if not momentum:
+        return (w32 - lr * u).astype(w.dtype), None
+    m_new = momentum * m.astype(jnp.float32) + u
+    d = momentum * m_new + u if nesterov else m_new
+    return (w32 - lr * d).astype(w.dtype), m_new
+
+
+def adamw_epilogue_flat_jnp(w: jax.Array, g: jax.Array, mu: jax.Array,
+                            nu: jax.Array, clip_scale, lr, c1, c2, *,
+                            b1: float = 0.9, b2: float = 0.999,
+                            eps: float = 1e-8, weight_decay: float = 0.0):
+    """Oracle for kernels.fused_update.adamw_epilogue: (w', mu', nu')."""
+    w32 = w.astype(jnp.float32)
+    g32 = g.astype(jnp.float32) * jnp.asarray(clip_scale, jnp.float32)
+    mu_new = b1 * mu.astype(jnp.float32) + (1.0 - b1) * g32
+    nu_new = b2 * nu.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
+    upd = ((mu_new / jnp.asarray(c1, jnp.float32))
+           / (jnp.sqrt(nu_new / jnp.asarray(c2, jnp.float32)) + eps))
+    if weight_decay:
+        upd = upd + weight_decay * w32
+    w_new = (w32 - jnp.asarray(lr, jnp.float32) * upd).astype(w.dtype)
+    return w_new, mu_new, nu_new
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 (SSD) reference: sequential scan
 # ---------------------------------------------------------------------------

@@ -35,10 +35,11 @@ from repro.core import MethodConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (batch_spec_tree, cache_spec_tree,
                                    state_spec_tree, to_named)
-from repro.launch.steps import make_decode_step, make_prefill_step, make_train_setup
+from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import (SHAPES, batch_spec, build_model, decode_batch_spec,
                           shape_applicable)
 from repro.models.config import ModelConfig, ShapeSpec
+from repro.optim import make_optimizer
 from repro.utils import trees
 
 ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -60,14 +61,6 @@ def input_specs(arch: str, shape_name: str = "train_4k",
     if shape.kind == "prefill":
         return batch_spec(cfg, shape)
     return decode_batch_spec(cfg, shape)
-
-
-def _abstract_train_state(setup, key=0):
-    def build():
-        params = setup.bundle.init(jax.random.PRNGKey(key))
-        return setup.init_state(params, jax.random.PRNGKey(key + 1))
-
-    return jax.eval_shape(build)
 
 
 def _abstract_cache(cfg: ModelConfig, shape: ShapeSpec):
@@ -168,6 +161,8 @@ class CellResult:
     n_collectives: int = 0
     output_bytes: float = 0.0
     argument_bytes: float = 0.0
+    param_count: int = 0         # parameter elements (train cells)
+    param_bytes: int = 0         # parameter tree bytes (train cells)
     inventory: list = dataclasses.field(default_factory=list)
 
     def to_json(self) -> dict:
@@ -206,17 +201,21 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     try:
         with mesh_context(mesh), activation_sharding(mesh):
             if shape.kind == "train":
-                setup = make_train_setup(bundle, mcfg)
-                state_sds = _abstract_train_state(setup)
+                # the Engine's executor owns the jit/sharding plumbing here
+                # (the same path launch/train.py drives), not a local shim
+                from repro.engine import FusedExecutor
+                executor = FusedExecutor(bundle.loss_fn, mcfg,
+                                         make_optimizer("adamw", 1e-3,
+                                                        clip_norm=1.0),
+                                         mesh=mesh, model_cfg=cfg)
+                state_sds = executor.abstract_state(
+                    lambda: bundle.init(jax.random.PRNGKey(0)),
+                    jax.random.PRNGKey(1))
                 batch_sds = batch_spec(cfg, shape,
                                        ascent_fraction=mcfg.ascent_fraction)
-                state_sh = to_named(state_spec_tree(state_sds, cfg, mesh), mesh)
-                batch_sh = to_named(batch_spec_tree(batch_sds, mesh), mesh)
-                jitted = jax.jit(setup.step_fn,
-                                 in_shardings=(state_sh, batch_sh),
-                                 out_shardings=(state_sh, None),
-                                 donate_argnums=(0,))
-                lowered = jitted.lower(state_sds, batch_sds)
+                result.param_count = trees.tree_size(state_sds.params)
+                result.param_bytes = trees.tree_bytes(state_sds.params)
+                lowered = executor.lower(state_sds, batch_sds)
             elif shape.kind == "prefill":
                 step = make_prefill_step(bundle)
                 params_sds = jax.eval_shape(

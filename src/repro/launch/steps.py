@@ -3,9 +3,11 @@
 DEPRECATED for training: new code should drive training through
 `repro.engine` (`FusedExecutor` / `HeteroExecutor` + `Engine.fit`), which owns
 the mesh/sharding/jit/donation plumbing that callers of `make_train_setup`
-had to hand-roll. This module remains as a thin shim for the serve path and
-for the dry-run's direct access to the raw (un-jitted) step function; the
-train-setup surface is kept so existing callers and tests keep passing.
+had to hand-roll. The 512-device dry-run now lowers its train cells through
+`FusedExecutor.abstract_state` / `FusedExecutor.lower` too, so this module
+remains only as the serve-path shim (prefill/decode steps) and as a thin
+deprecation alias for the train-setup surface, kept so existing callers and
+tests keep passing.
 """
 from __future__ import annotations
 

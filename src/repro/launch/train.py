@@ -32,7 +32,16 @@ from repro.engine import (CheckpointCallback, Engine, FusedExecutor,
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.optim import cosine_schedule, make_optimizer
-from repro.runtime import ResilienceConfig
+from repro.runtime import ExecutorConfig, ResilienceConfig
+
+
+def _parse_device(spec: str):
+    """'cpu', 'cpu:1', 'tpu:0' ... -> the jax.Device (None for '')."""
+    if not spec:
+        return None
+    platform, _, idx = spec.partition(":")
+    devices = jax.devices(platform)
+    return devices[int(idx) if idx else 0]
 
 
 def main() -> None:
@@ -45,6 +54,18 @@ def main() -> None:
                     help="fused: one SPMD step; hetero: two-lane async_sam")
     ap.add_argument("--calibrate", action="store_true",
                     help="hetero only: measure the system-aware b'/b pre-fit")
+    ap.add_argument("--ascent-device", default="",
+                    help="hetero only: device for the slow ascent lane, e.g. "
+                         "'cpu:0' (paper's CPU helper on a CPU+accelerator host)")
+    ap.add_argument("--descent-device", default="",
+                    help="hetero only: device for the fast descent lane, e.g. "
+                         "'tpu:0' or 'gpu:0'")
+    ap.add_argument("--fused-update", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="flat-buffer fused perturb + optimizer epilogue "
+                         "(auto: on for TPU, off for CPU)")
+    ap.add_argument("--telemetry-jsonl", default="",
+                    help="write per-step tau/perturbed/step-time records here")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -68,6 +89,9 @@ def main() -> None:
     if args.executor == "hetero" and args.method != "async_sam":
         ap.error("--executor hetero realizes async_sam only "
                  f"(got --method {args.method})")
+    if (args.ascent_device or args.descent_device) and args.executor != "hetero":
+        ap.error("--ascent-device/--descent-device apply to --executor hetero "
+                 "only (the fused executor is a single resource)")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     bundle = build_model(cfg)
@@ -83,14 +107,23 @@ def main() -> None:
         ascent_fraction=(args.ascent_fraction
                          if args.method in ("async_sam",) else 0.0)))
 
+    fused_update = {"auto": None, "on": True, "off": False}[args.fused_update]
     if args.executor == "hetero":
-        # two host lanes; hand-offs are host arrays, no mesh required
+        # two host lanes; hand-offs are host arrays, no mesh required.
+        # --ascent-device/--descent-device place the lanes on real devices
+        # (paper §3.3's CPU helper + accelerator on a two-device host).
+        exec_cfg = ExecutorConfig(
+            ascent_device=_parse_device(args.ascent_device),
+            descent_device=_parse_device(args.descent_device),
+            fused_update=fused_update)
         executor = HeteroExecutor(bundle.loss_fn, mcfg, optimizer,
+                                  exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
     else:
         mesh = make_host_mesh(model_axis=args.model_axis)
         executor = FusedExecutor(bundle.loss_fn, mcfg, optimizer,
-                                 mesh=mesh, model_cfg=cfg)
+                                 mesh=mesh, model_cfg=cfg,
+                                 fused_update=fused_update)
 
     # init_state shards/jits inside the executor's mesh scope (fused) so the
     # launcher never touches jit/sharding plumbing itself
@@ -100,8 +133,9 @@ def main() -> None:
     meter = ThroughputMeter(tokens_per_batch=args.batch * args.seq)
     callbacks = [LoggingCallback(every=args.log_every,
                                  total_steps=args.steps), meter]
-    if args.executor == "hetero":
-        callbacks.append(StalenessTelemetry())
+    if args.executor == "hetero" or args.telemetry_jsonl:
+        callbacks.append(StalenessTelemetry(
+            jsonl_path=args.telemetry_jsonl or None))
     if args.ckpt_dir:
         callbacks.append(CheckpointCallback(
             CheckpointManager(args.ckpt_dir, keep=3),

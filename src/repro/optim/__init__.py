@@ -1,4 +1,5 @@
 from repro.optim.base import (  # noqa: F401
+    FusedSpec,
     GradientTransform,
     adamw,
     add_decayed_weights,
@@ -15,4 +16,9 @@ from repro.optim.base import (  # noqa: F401
     sgd,
     step_decay_schedule,
     trace,
+)
+from repro.optim.fused import (  # noqa: F401
+    configure as configure_fused,
+    epilogue_hbm_bytes,
+    fused_apply,
 )

@@ -22,6 +22,11 @@ Schedule = Callable[[jax.Array], jax.Array]
 class GradientTransform(NamedTuple):
     init: Callable[[Pytree], Pytree]
     update: Callable[..., tuple[Pytree, Pytree]]  # (grads, state, params) -> (updates, state)
+    # Recognition record for the fused flat-buffer fast path (repro.optim.fused):
+    # set by the canonical sgd()/adamw() factories, None for hand-built chains.
+    # The per-leaf init/update pair above stays authoritative either way — the
+    # fused path consumes and produces the exact same state tuple structure.
+    fused_spec: Optional["FusedSpec"] = None
 
 
 def chain(*transforms: GradientTransform) -> GradientTransform:
@@ -203,6 +208,28 @@ def clip_by_global_norm(max_norm: float) -> GradientTransform:
 # User-facing optimizers
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """Metadata describing a canonical sgd/adamw chain for the fused path.
+
+    `repro.optim.fused.fused_apply` executes exactly this chain (same transform
+    order, same state tuple layout as the per-leaf factories below) on
+    dtype-bucketed flat buffers via single-pass kernels. `enabled=None` defers
+    to the platform default (`utils.buckets.fused_path_enabled`): on for TPU,
+    off for CPU, the `kernels.ops._resolve` convention.
+    """
+    family: str                       # "sgd" | "adamw"
+    lr: Schedule
+    clip_norm: Optional[float] = None
+    weight_decay: float = 0.0
+    momentum: float = 0.0
+    nesterov: bool = False
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    enabled: Optional[bool] = None
+
+
 def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
         weight_decay: float = 0.0, clip_norm: Optional[float] = None) -> GradientTransform:
     parts = []
@@ -213,7 +240,10 @@ def sgd(lr, momentum: float = 0.0, nesterov: bool = False,
     if momentum:
         parts.append(trace(momentum, nesterov=nesterov))
     parts.append(scale_by_learning_rate(lr))
-    return chain(*parts)
+    spec = FusedSpec(family="sgd", lr=as_schedule(lr), clip_norm=clip_norm,
+                     weight_decay=weight_decay, momentum=momentum,
+                     nesterov=nesterov)
+    return chain(*parts)._replace(fused_spec=spec)
 
 
 def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -226,7 +256,12 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, decay_mask))
     parts.append(scale_by_learning_rate(lr))
-    return chain(*parts)
+    # a decay mask needs per-leaf path selection, which the flat-buffer
+    # kernels don't model — such chains simply keep the per-leaf path
+    spec = None if decay_mask is not None else FusedSpec(
+        family="adamw", lr=as_schedule(lr), clip_norm=clip_norm,
+        weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
+    return chain(*parts)._replace(fused_spec=spec)
 
 
 def apply_updates(params: Pytree, updates: Pytree) -> Pytree:

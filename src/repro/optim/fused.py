@@ -1,0 +1,224 @@
+"""FusedUpdate — the canonical sgd/adamw chains on dtype-bucketed flat buffers.
+
+`fused_apply` recognizes a chain built by `optim.base.sgd` / `optim.base.adamw`
+(via the `FusedSpec` the factories attach) and executes the whole optimizer
+tail — clip, weight decay, momentum/Adam, lr scale, apply — as ONE single-pass
+kernel per dtype bucket (`kernels.fused_update`), instead of the ~6-10
+per-leaf `jax.tree.map` passes of `GradientTransform.update` +
+`apply_updates`, each of which re-streams every parameter element through HBM.
+
+The fast path is a drop-in: it consumes and produces the exact same
+`opt_state` tuple layout as the per-leaf chain (checkpoints interoperate, a
+run can flip between paths), and it is numerically the same computation with
+fp32 accumulation throughout — bit-identical for fp32 parameters up to the
+reduction order of the global grad norm, and within fp32-accumulation
+tolerance for bf16 parameters (the per-leaf path round-trips intermediates
+through bf16 between transforms; the kernel does not).
+
+Hand-built chains, masked weight decay, and every non-sgd/adamw optimizer
+return None here and keep the per-leaf path — `core.api._finish` falls back
+transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import (AdamState, ClipState, FusedSpec,
+                              GradientTransform, ScaleByScheduleState,
+                              TraceState)
+from repro.utils import buckets
+
+Pytree = Any
+
+
+def configure(optimizer: GradientTransform,
+              enabled: Optional[bool]) -> GradientTransform:
+    """Pin the fused-path switch on a recognized chain (no-op otherwise)."""
+    spec = getattr(optimizer, "fused_spec", None)
+    if spec is None:
+        return optimizer
+    return optimizer._replace(
+        fused_spec=dataclasses.replace(spec, enabled=enabled))
+
+
+def _chain_fields(spec: FusedSpec) -> list[str]:
+    """The transform sequence base.sgd/base.adamw built (state tuple layout)."""
+    parts = []
+    if spec.clip_norm is not None:
+        parts.append("clip")
+    if spec.family == "adamw":
+        parts.append("adam")
+        if spec.weight_decay:
+            parts.append("wd")
+    else:
+        if spec.weight_decay:
+            parts.append("wd")
+        if spec.momentum:
+            parts.append("trace")
+    parts.append("lr")
+    return parts
+
+
+def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
+                params: Pytree, *, impl: Optional[str] = None
+                ) -> Optional[tuple[Pytree, Pytree, jax.Array]]:
+    """Run the whole update+apply on buckets, or None to keep the per-leaf path.
+
+    Returns (new_params, new_opt_state, grad_norm); grad_norm is the global
+    fp32 gradient norm (computed for clipping anyway, reused by the step's
+    metric contract so the fused path adds no extra pass).
+    """
+    spec = getattr(optimizer, "fused_spec", None)
+    if spec is None or not buckets.fused_path_enabled(spec.enabled):
+        return None
+
+    from repro.kernels import ops
+
+    fields = _chain_fields(spec)
+    layout = buckets.bucket_layout(params)
+    wb = buckets.tree_to_buckets(params, layout)
+    gb = buckets.tree_to_buckets(grads, layout)
+
+    sq = jnp.sum(jnp.stack([ops.sq_norm(g, impl=impl) for g in gb]))
+    gnorm = jnp.sqrt(sq)
+    if spec.clip_norm is not None:
+        clip_scale = jnp.minimum(1.0, spec.clip_norm / (gnorm + 1e-12))
+    else:
+        clip_scale = jnp.float32(1.0)
+
+    sched_state: ScaleByScheduleState = opt_state[-1]
+    eta = spec.lr(sched_state.step)
+
+    if spec.family == "sgd":
+        has_m = bool(spec.momentum)
+        old_m = opt_state[fields.index("trace")].momentum if has_m else None
+        mb = (buckets.tree_to_buckets(old_m, layout) if has_m
+              else [None] * len(wb))
+        w_new, m_new = [], []
+        for w, g, m in zip(wb, gb, mb):
+            wn, mn = ops.sgd_epilogue(w, g, m, clip_scale, eta,
+                                      momentum=spec.momentum,
+                                      nesterov=spec.nesterov,
+                                      weight_decay=spec.weight_decay,
+                                      impl=impl)
+            w_new.append(wn)
+            m_new.append(mn)
+        params_new = buckets.buckets_to_tree(w_new, layout, params)
+        new_state = []
+        for f in fields:
+            if f == "clip":
+                new_state.append(ClipState(last_norm=gnorm))
+            elif f == "wd":
+                new_state.append(())
+            elif f == "trace":
+                new_state.append(TraceState(
+                    momentum=buckets.buckets_to_tree(m_new, layout, old_m)))
+            else:
+                new_state.append(ScaleByScheduleState(step=sched_state.step + 1))
+        return params_new, tuple(new_state), gnorm
+
+    # adamw
+    adam_state: AdamState = opt_state[fields.index("adam")]
+    step = adam_state.step + 1
+    c1 = 1.0 - spec.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - spec.b2 ** step.astype(jnp.float32)
+    mub = buckets.tree_to_buckets(adam_state.mu, layout)
+    nub = buckets.tree_to_buckets(adam_state.nu, layout)
+    w_new, mu_new, nu_new = [], [], []
+    for w, g, mu, nu in zip(wb, gb, mub, nub):
+        wn, mn, vn = ops.adamw_epilogue(w, g, mu, nu, clip_scale, eta, c1, c2,
+                                        b1=spec.b1, b2=spec.b2, eps=spec.eps,
+                                        weight_decay=spec.weight_decay,
+                                        impl=impl)
+        w_new.append(wn)
+        mu_new.append(mn)
+        nu_new.append(vn)
+    params_new = buckets.buckets_to_tree(w_new, layout, params)
+    new_state = []
+    for f in fields:
+        if f == "clip":
+            new_state.append(ClipState(last_norm=gnorm))
+        elif f == "adam":
+            new_state.append(AdamState(
+                step=step,
+                mu=buckets.buckets_to_tree(mu_new, layout, adam_state.mu),
+                nu=buckets.buckets_to_tree(nu_new, layout, adam_state.nu)))
+        elif f == "wd":
+            new_state.append(())
+        else:
+            new_state.append(ScaleByScheduleState(step=sched_state.step + 1))
+    return params_new, tuple(new_state), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Modeled epilogue HBM traffic (benchmarks/perf_cell.py artifact)
+# ---------------------------------------------------------------------------
+
+def epilogue_hbm_bytes(param_count: int, param_bytes: int, *,
+                       family: str = "adamw", clip: bool = True,
+                       weight_decay: bool = True, momentum: bool = True,
+                       carried_norm: bool = True, fused: bool) -> int:
+    """Modeled HBM bytes of one step's weight-space epilogue (perturb + tail).
+
+    Enumerates the HBM passes of the actual code path: every
+    `jax.tree.map` in the per-leaf chain streams its operands and result
+    (fp32 intermediates included), while the fused path reads and writes each
+    tensor once per kernel. `param_bytes` is the total byte size of the
+    parameter tree (grads assumed the same dtype); optimizer state is fp32.
+    `carried_norm=True` models AsyncSAM, where the perturbation norm is
+    carried state rather than a fresh reduction over the ascent gradient.
+
+    Scope: the fused side counts KERNEL-STREAMED bytes only — it assumes each
+    dtype bucket is already a contiguous buffer. Today's implementation
+    re-gathers buckets from the pytree around every kernel call
+    (`buckets.tree_to_buckets` concatenate + slice-back), and a Pallas
+    custom-call materializes its operands, so per-step gather/scatter copies
+    are extra traffic this model excludes; they disappear once bucketed
+    state persists across steps (ROADMAP item). The reduction reported by
+    perf_cell is therefore the steady-state ceiling of the fused path, not a
+    measurement.
+    """
+    P = param_bytes               # one full pass over params/grads
+    F = 4 * param_count           # one full pass over an fp32 state tree
+    total = 0
+    if fused:
+        if not carried_norm:
+            total += P                      # sq_norm kernel: read g
+        total += 3 * P                      # perturb axpy: read w,g / write w_hat
+        if clip:
+            total += P                      # clip sq_norm kernel: read g
+        if family == "adamw":
+            total += 2 * P + 2 * F          # epilogue read: w, g, mu, nu
+            total += P + 2 * F              # epilogue write: w', mu', nu'
+        else:
+            total += 2 * P                  # epilogue read: w, g
+            total += P                      # epilogue write: w'
+            if momentum:
+                total += 2 * F              # read m / write m'
+        return total
+    # per-leaf path, pass by pass
+    if not carried_norm:
+        total += P                          # global_norm: read g
+    total += 3 * P                          # perturb map: read w,g / write w_hat
+    if clip:
+        total += P                          # global_norm: read g
+        total += P + F                      # scale map: read g / write f32
+        total += F + P                      # cast-back map: read f32 / write g
+    if family == "adamw":
+        total += F + P + F                  # mu map: read mu,g / write mu'
+        total += F + P + F                  # nu map: read nu,g / write nu'
+        total += 2 * F + P                  # update map: read mu',nu' / write u
+        if weight_decay:
+            total += 3 * P                  # wd map: read u,w / write u'
+    else:
+        if weight_decay:
+            total += 3 * P                  # wd map: read g,w / write g'
+        if momentum:
+            total += P + F + F + P          # trace map: read g,m / write m',out
+    total += P + F                          # lr map: read u / write f32
+    total += P + F + P                      # apply map: read w,u / write w'
+    return total

@@ -47,14 +47,23 @@ class ExecutorConfig:
     ascent_device: Optional[jax.Device] = None   # the "slow" resource
     descent_device: Optional[jax.Device] = None  # the "fast" resource
     ascent_delay_s: float = 0.0                  # test hook: straggler injection
+    # flat-buffer fused perturb + optimizer epilogue on the descent lane;
+    # None -> platform default (on for TPU, off for CPU — ops._resolve style)
+    fused_update: Optional[bool] = None
 
 
 class AsyncSamExecutor:
     def __init__(self, loss_fn: LossFn, method_cfg: MethodConfig,
                  optimizer: GradientTransform,
                  exec_cfg: Optional[ExecutorConfig] = None):
-        self.cfg = method_cfg
         self.xcfg = exec_cfg or ExecutorConfig()
+        fused_update = self.xcfg.fused_update
+        if fused_update is None:
+            fused_update = jax.default_backend() == "tpu"
+        from repro.optim import configure_fused
+        optimizer = configure_fused(optimizer, fused_update)
+        method_cfg = dataclasses.replace(method_cfg, fused_update=fused_update)
+        self.cfg = method_cfg
         self.ledger = StalenessLedger(max_staleness=self.xcfg.max_staleness)
         # lossy compression of the cross-resource hand-off (the perturbation
         # direction tolerates quantization by the same sigma^2/b' argument

@@ -1,3 +1,4 @@
+from repro.utils import buckets  # noqa: F401
 from repro.utils.metrics import scalar_metrics  # noqa: F401
 from repro.utils.trees import (  # noqa: F401
     global_norm,

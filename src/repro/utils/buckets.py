@@ -1,0 +1,179 @@
+"""Flat-buffer (dtype-bucketed) views of parameter pytrees.
+
+The weight-space epilogue of a training step — perturb, global norm, clip,
+weight decay, momentum/Adam, lr scale, apply — is HBM-bound: every pass
+re-streams all parameter elements. The fused kernels in `repro.kernels`
+operate on *flat* vectors, so this module provides the bridge: a pytree is
+viewed as one contiguous buffer per leaf dtype (fp32 optimizer state and
+bf16/fp32 params stay in their native dtypes, unlike
+`trees.tree_flatten_to_vector` which casts everything to fp32), with the
+leaf -> (bucket, offset) layout computed once per (treedef, shapes, dtypes)
+signature and cached.
+
+Grouping is by the layout tree's leaf dtype; a congruent tree (grads,
+momentum, Adam moments, the AsyncSAM ascent gradient) is bucketed by the SAME
+grouping using its own leaf dtypes, so a bf16 param bucket can pair with an
+fp32 gradient bucket inside one single-pass kernel.
+
+`fused_path_enabled` is the one switch every fused-weight-space call site
+consults: explicit override > process default (`set_fused_default`, the test
+hook) > platform (on for TPU, off elsewhere — the `ops._resolve` convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketGroup:
+    """One dtype bucket: which leaves it holds and where they live."""
+    dtype: str                      # layout-tree dtype name (grouping key)
+    leaf_indices: tuple[int, ...]   # indices into the flattened leaf list
+    offsets: tuple[int, ...]        # element offset of each leaf in the buffer
+    sizes: tuple[int, ...]          # element count of each leaf
+    size: int                       # total elements in the buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]   # per-leaf shapes (flatten order)
+    groups: tuple[BucketGroup, ...]       # sorted by dtype name
+    n_leaves: int
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def bucket_layout(tree: Pytree) -> BucketLayout:
+    """Layout for `tree`, cached on (treedef, shapes, dtypes). Trace-safe."""
+    leaves, treedef = jax.tree.flatten(tree)
+    key = (treedef, tuple((tuple(x.shape), jnp.dtype(x.dtype).name)
+                          for x in leaves))
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    by_dtype: dict[str, list[int]] = {}
+    for i, x in enumerate(leaves):
+        by_dtype.setdefault(jnp.dtype(x.dtype).name, []).append(i)
+    groups = []
+    for dname in sorted(by_dtype):
+        idx = by_dtype[dname]
+        sizes = tuple(math.prod(leaves[i].shape) for i in idx)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        groups.append(BucketGroup(dtype=dname, leaf_indices=tuple(idx),
+                                  offsets=tuple(offsets), sizes=sizes, size=off))
+    layout = BucketLayout(treedef=treedef,
+                          shapes=tuple(tuple(x.shape) for x in leaves),
+                          groups=tuple(groups), n_leaves=len(leaves))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def tree_to_buckets(tree: Pytree, layout: BucketLayout) -> list[jax.Array]:
+    """Concatenate `tree`'s leaves into one flat buffer per layout group.
+
+    `tree` must be congruent with the layout tree (same structure/shapes);
+    its dtypes may differ as long as they are uniform within each group.
+    """
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == layout.n_leaves, (len(leaves), layout.n_leaves)
+    out = []
+    for grp in layout.groups:
+        parts = [leaves[i].reshape(-1) for i in grp.leaf_indices]
+        dt = parts[0].dtype
+        assert all(p.dtype == dt for p in parts), \
+            f"mixed dtypes within bucket {grp.dtype}: {[p.dtype for p in parts]}"
+        out.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts))
+    return out
+
+
+def buckets_to_tree(bufs: list[jax.Array], layout: BucketLayout,
+                    like: Pytree) -> Pytree:
+    """Inverse of tree_to_buckets; output shapes/dtypes come from `like`."""
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == layout.n_leaves
+    new = list(leaves)
+    for buf, grp in zip(bufs, layout.groups):
+        for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
+            new[i] = (buf[off:off + size]
+                      .reshape(layout.shapes[i]).astype(leaves[i].dtype))
+    return jax.tree.unflatten(treedef, new)
+
+
+# ---------------------------------------------------------------------------
+# Fused-path switch
+# ---------------------------------------------------------------------------
+
+_FUSED_DEFAULT: Optional[bool] = None
+
+
+def set_fused_default(enabled: Optional[bool]) -> None:
+    """Process-wide override for the fused weight-space path (test hook)."""
+    global _FUSED_DEFAULT
+    _FUSED_DEFAULT = enabled
+
+
+def fused_path_enabled(override: Optional[bool] = None) -> bool:
+    """Resolve the fused-path switch: override > process default > platform."""
+    if override is not None:
+        return bool(override)
+    if _FUSED_DEFAULT is not None:
+        return _FUSED_DEFAULT
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Bucketed weight-space primitives (thin sums over the per-bucket kernels)
+# ---------------------------------------------------------------------------
+
+def bucketed_sq_norm(tree: Pytree, layout: Optional[BucketLayout] = None,
+                     *, impl: Optional[str] = None) -> jax.Array:
+    """Global squared L2 norm via one single-pass kernel per bucket."""
+    layout = layout or bucket_layout(tree)
+    bufs = tree_to_buckets(tree, layout)
+    parts = [ops.sq_norm(b, impl=impl) for b in bufs]
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.float32(0.0)
+
+
+def bucketed_axpy(alpha, x: Pytree, y: Pytree, *,
+                  impl: Optional[str] = None) -> Pytree:
+    """alpha * x + y on buckets (the perturbation axpy), dtypes of `y` kept."""
+    layout = bucket_layout(y)
+    xb = tree_to_buckets(x, layout)
+    yb = tree_to_buckets(y, layout)
+    out = [ops.fused_axpy(alpha, xi, yi, impl=impl) for xi, yi in zip(xb, yb)]
+    return buckets_to_tree(out, layout, y)
+
+
+def bucketed_dot_norms(a: Pytree, b: Pytree, *, impl: Optional[str] = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(<a,b>, ||a||^2, ||b||^2) in one HBM pass over (a, b) per bucket.
+
+    The AsyncSAM ascent-state refresh needs all three (cosine metric + the
+    carried ascent norm); the per-leaf composition streams both trees three
+    times.
+    """
+    layout = bucket_layout(a)
+    ab = tree_to_buckets(a, layout)
+    bb = tree_to_buckets(b, layout)
+    parts = [ops.fused_dot_norms(ai, bi, impl=impl) for ai, bi in zip(ab, bb)]
+    if not parts:
+        z = jnp.float32(0.0)
+        return z, z, z
+    dot = jnp.sum(jnp.stack([p[0] for p in parts]))
+    sq_a = jnp.sum(jnp.stack([p[1] for p in parts]))
+    sq_b = jnp.sum(jnp.stack([p[2] for p in parts]))
+    return dot, sq_a, sq_b

@@ -11,6 +11,8 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_update import (adamw_epilogue, fused_axpy,
+                                        fused_dot_norms, sgd_epilogue)
 from repro.kernels.mamba2_scan import mamba2_chunked
 from repro.kernels.rwkv6_scan import rwkv6_chunked
 from repro.kernels.sam_perturb import sam_perturb, sq_norm
@@ -98,6 +100,76 @@ def test_sam_perturb_kernel(n, dtype):
                                       jnp.float32(0.1), sn).astype(dtype)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused weight-space epilogue (flat-buffer update path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1000, 200_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_axpy_kernel(n, dtype):
+    ks = jax.random.split(KEY, 2)
+    y = jax.random.normal(ks[0], (n,), dtype)
+    x = jax.random.normal(ks[1], (n,), jnp.float32)
+    out = fused_axpy(0.37, x, y, interpret=True)
+    expect = ref.axpy_flat_jnp(0.37, x, y)
+    assert out.dtype == y.dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [1000, 65536, 200_001])
+def test_fused_dot_norms_kernel(n):
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.normal(ks[0], (n,))
+    b = jax.random.normal(ks[1], (n,))
+    got = fused_dot_norms(a, b, interpret=True)
+    expect = ref.dot_norms_flat_jnp(a, b)
+    for g, e in zip(got, expect):
+        np.testing.assert_allclose(float(g), float(e), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("momentum,nesterov,wd", [
+    (0.9, False, 0.0),
+    (0.9, True, 1e-4),
+    (0.0, False, 5e-4),
+])
+def test_sgd_epilogue_kernel(momentum, nesterov, wd, dtype, n=200_001):
+    ks = jax.random.split(KEY, 3)
+    w = jax.random.normal(ks[0], (n,), dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    m = jax.random.normal(ks[2], (n,), jnp.float32) if momentum else None
+    w_k, m_k = sgd_epilogue(w, g, m, 0.7, 0.1, momentum=momentum,
+                            nesterov=nesterov, weight_decay=wd, interpret=True)
+    w_r, m_r = ref.sgd_epilogue_flat_jnp(w, g, m, 0.7, 0.1, momentum=momentum,
+                                         nesterov=nesterov, weight_decay=wd)
+    assert w_k.dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(w_k, np.float32),
+                               np.asarray(w_r, np.float32), **_tol(dtype))
+    if momentum:
+        np.testing.assert_allclose(m_k, m_r, rtol=2e-5, atol=2e-5)
+    else:
+        assert m_k is None and m_r is None
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("wd", [0.0, 0.01])
+def test_adamw_epilogue_kernel(wd, dtype, n=200_001):
+    ks = jax.random.split(KEY, 4)
+    w = jax.random.normal(ks[0], (n,), dtype)
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    mu = jax.random.normal(ks[2], (n,), jnp.float32)
+    nu = jnp.abs(jax.random.normal(ks[3], (n,), jnp.float32))
+    args = (w, g, mu, nu, 0.7, 0.01, 0.1, 0.001)
+    got = adamw_epilogue(*args, weight_decay=wd, interpret=True)
+    expect = ref.adamw_epilogue_flat_jnp(*args, weight_decay=wd)
+    assert got[0].dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(got[0], np.float32),
+                               np.asarray(expect[0], np.float32), **_tol(dtype))
+    for g_k, g_r in zip(got[1:], expect[1:]):
+        np.testing.assert_allclose(g_k, g_r, rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
