@@ -23,26 +23,15 @@ from repro.engine import (Engine, EvalCallback, FusedExecutor,
 
 TASK = ClassificationTask(n_classes=10, dim=64, margin=1.05, noise=1.0, seed=7)
 
+# single source of truth in repro.service.testing: the remote benchmark lane
+# resolves the SAME function by import path on the server side, so the ascent
+# gradient can never come from a drifted copy of the descent loss
+from repro.service.testing import mlp_loss  # noqa: E402,F401
+from repro.service.testing import mlp_init as _mlp_init  # noqa: E402
+
 
 def mlp_init(key, widths=(64, 128, 128, 10)) -> dict:
-    params = {}
-    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
-        k = jax.random.fold_in(key, i)
-        params[f"w{i}"] = jax.random.normal(k, (a, b)) / jnp.sqrt(a)
-        params[f"b{i}"] = jnp.zeros(b)
-    return params
-
-
-def mlp_loss(params, batch, rng):
-    h = batch["x"]
-    n = len([k for k in params if k.startswith("w")])
-    for i in range(n):
-        h = h @ params[f"w{i}"] + params[f"b{i}"]
-        if i < n - 1:
-            h = jax.nn.gelu(h)
-    onehot = jax.nn.one_hot(batch["y"], h.shape[-1])
-    loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(h) * onehot, axis=-1))
-    return loss, {"logits": h}
+    return _mlp_init(key, widths)
 
 
 def accuracy(params, batch) -> float:

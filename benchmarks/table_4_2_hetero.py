@@ -7,6 +7,13 @@ gracefully with b/b'. Prints `table_4_2,ratio,epoch_time_s,val_acc,tau_mean`.
 
 Runs through `Engine.fit` with the HeteroExecutor (the same path as
 `--executor hetero` in the launcher).
+
+`run_remote()` adds the multi-host lane: the same schedule with the ascent
+gradient crossing a real socket to a spawned `repro.service.ascent_server`
+subprocess (the `--executor remote --serve-ascent` path), reporting the
+*measured* wire bytes per exchange against the `Compressor.wire_bytes` +
+`protocol.grad_frame_bytes` model — the two must agree exactly for the
+gradient-return frame.
 """
 from __future__ import annotations
 
@@ -18,8 +25,11 @@ import numpy as np
 from benchmarks.common import TASK, accuracy, mlp_init, mlp_loss
 from repro import optim
 from repro.core import MethodConfig, slice_ascent_batch
-from repro.engine import Engine, HeteroExecutor, StalenessTelemetry, ThroughputMeter
+from repro.core.ascent import Compressor
+from repro.engine import (Engine, HeteroExecutor, RemoteExecutor,
+                          StalenessTelemetry, ThroughputMeter)
 from repro.runtime import ExecutorConfig
+from repro.service import protocol
 
 RATIOS = [1, 2, 3, 5]     # b / b'
 TELEMETRY_DIR = (pathlib.Path(__file__).resolve().parents[1]
@@ -60,5 +70,73 @@ def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
     return out
 
 
+def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
+               verbose: bool = True) -> dict:
+    """Multi-host lane: ascent over a real socket (loopback subprocess).
+
+    Reports measured wire traffic per exchange vs the modeled GRAD frame
+    length (`protocol.grad_frame_bytes` on top of `Compressor.wire_bytes`).
+    The server holds `repro.service.testing:mlp_loss` — the same generic
+    w{i}/b{i} MLP math as `benchmarks.common.mlp_loss`, importable from the
+    subprocess regardless of cwd.
+    """
+    frac = 0.5
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac,
+                        compressor=compressor)
+    opt = optim.sgd(optim.cosine_schedule(0.05, steps), momentum=0.9)
+    val = TASK.valid_set()
+    batches = [{**b, "ascent": slice_ascent_batch(b, frac)}
+               for b in TASK.train_batches(batch, steps)]
+    meter = ThroughputMeter()
+    telemetry = StalenessTelemetry(
+        print_summary=False,
+        jsonl_path=TELEMETRY_DIR / f"table_4_2_remote_{compressor}.jsonl")
+    # calibrate=True doubles as the lane warmup: the pre-fit probe pays the
+    # server spawn + connect + jit compile in blocking round trips, so the
+    # timed loop below measures the steady-state exchange, not startup
+    with RemoteExecutor(mlp_loss, mcfg, opt, calibrate=True,
+                        calibration_probes=1,
+                        exec_cfg=ExecutorConfig(
+                            max_staleness=3, serve_ascent=True,
+                            loss_spec="repro.service.testing:mlp_loss")) as ex:
+        state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
+                              jax.random.PRNGKey(1))
+        report = Engine(ex, batches, [meter, telemetry]).fit(
+            state, steps, warmup=1)
+        client = ex.client
+        grad_template = jax.device_get(mlp_init(jax.random.PRNGKey(0)))
+        comp = Compressor(kind=compressor, topk_fraction=mcfg.topk_fraction)
+        modeled = protocol.grad_frame_bytes(comp, grad_template)
+        measured = client.wire_bytes_per_exchange
+        out = {
+            "val_acc": accuracy(report.final_state.params, val),
+            "epoch_time_s": sum(meter.step_times),
+            "exchanges": client.exchanges,
+            "grad_frame_measured": measured,
+            "grad_frame_modeled": modeled,
+            "payload_modeled": comp.wire_bytes(grad_template),
+            "job_frame_bytes": client.last_wire_out_bytes,
+        }
+        # steady-state RTT from the per-step records: client.timings also
+        # holds the calibration warmup (connect + server jit, ~30x larger)
+        rtts = [h["rtt_s"] for h in report.metrics_history if h.get("rtt_s")]
+        out["rtt_mean_s"] = float(np.mean(rtts)) if rtts else 0.0
+    taus = [h["tau"] for h in report.metrics_history]
+    out["tau_mean"] = float(np.mean(taus))
+    if verbose:
+        print(f"table_4_2_remote,{compressor},"
+              f"{out['epoch_time_s']:.2f},{out['val_acc']:.4f},"
+              f"{out['tau_mean']:.2f},exchanges={out['exchanges']}")
+        print(f"table_4_2_remote,wire,grad_frame_measured="
+              f"{out['grad_frame_measured']},grad_frame_modeled="
+              f"{out['grad_frame_modeled']},payload_modeled="
+              f"{out['payload_modeled']},job_frame={out['job_frame_bytes']},"
+              f"rtt_mean_s={out['rtt_mean_s']:.4f}")
+        print(f"table_4_2_remote,claim_wire_model_exact,"
+              f"{'PASS' if out['grad_frame_measured'] == out['grad_frame_modeled'] else 'FAIL'}")
+    return out
+
+
 if __name__ == "__main__":
     run()
+    run_remote()

@@ -4,11 +4,20 @@
 #   ./scripts/tier1.sh tests/test_engine.py -k parity
 #   ./scripts/tier1.sh --kernels-interpret   # Pallas-vs-oracle lane only
 #                                            # (interpret-mode kernel sweep)
+#   ./scripts/tier1.sh --service             # multi-host ascent service lane
+#                                            # (loopback tests with a spawned
+#                                            # server subprocess; hard timeout
+#                                            # so a wedged socket can't hang)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--kernels-interpret" ]]; then
   shift
   exec python -m pytest -q tests/test_kernels.py "$@"
+fi
+if [[ "${1:-}" == "--service" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    python -m pytest -q tests/test_service.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -112,15 +112,23 @@ class Compressor:
         return quant, CompressionState(error=new_err)
 
     def wire_bytes(self, grad: Pytree) -> int:
-        """Bytes on the wire for one exchange (for the roofline/collective term)."""
+        """Exact *payload* bytes for one exchange (roofline/collective term).
+
+        This models the compressed payload only — per-leaf, matching what
+        `service.protocol.encode_grad` actually serializes leaf by leaf.
+        Frame overhead (header, shape metadata) is accounted separately by
+        `service.protocol.grad_frame_bytes`.
+        """
         n = trees.tree_size(grad)
         if self.kind == "none":
             return 4 * n
         if self.kind == "int8":
             return n + 8 * len(jax.tree.leaves(grad))  # payload + per-leaf scale
         if self.kind == "topk":
-            k = max(1, int(n * self.topk_fraction))
-            return 8 * k  # (index, fp32 value) pairs
+            # per-leaf k (the compressor keeps top-k per leaf, not globally);
+            # 8 bytes per kept entry: (u32 index, fp32 value)
+            return sum(8 * max(1, int(x.size * self.topk_fraction))
+                       for x in jax.tree.leaves(grad))
         raise ValueError(self.kind)
 
 

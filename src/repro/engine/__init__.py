@@ -5,9 +5,12 @@ Executor matrix:
     FusedExecutor   Form A  one SPMD program; mesh/sharding/jit/donation
     HeteroExecutor  Form B  two lanes (slow ascent thread + fast descent),
                             staleness ledger, system-aware calibration
+    RemoteExecutor  Form B  same two lanes, but the ascent lane lives in
+                            another process/host behind repro.service
+                            (TCP/Unix sockets; loopback mode for one host)
 
-Both satisfy the `StepExecutor` protocol and the `ENGINE_METRIC_KEYS`
-contract; `Engine.fit` drives either one with the same callbacks.
+All satisfy the `StepExecutor` protocol and the `ENGINE_METRIC_KEYS`
+contract; `Engine.fit` drives any of them with the same callbacks.
 """
 from repro.engine.api import (  # noqa: F401
     ENGINE_METRIC_KEYS,
@@ -28,3 +31,4 @@ from repro.engine.callbacks import (  # noqa: F401
 from repro.engine.engine import Engine  # noqa: F401
 from repro.engine.fused import FusedExecutor  # noqa: F401
 from repro.engine.hetero import HeteroExecutor  # noqa: F401
+from repro.engine.remote import RemoteExecutor  # noqa: F401

@@ -126,8 +126,13 @@ class StalenessTelemetry(Callback):
     `{step, tau, perturbed, step_time_s, loss}` to that file (streamed, so a
     crashed run keeps its trace) — the input `benchmarks/fig3_throughput.py`
     and `benchmarks/table_4_2_hetero.py` use to plot straggler-degradation
-    curves.
+    curves. When the remote ascent lane is active (`RemoteExecutor`), the
+    step metrics also carry `wire_bytes` (measured bytes of the JOB+GRAD
+    exchange) and `rtt_s`, and each record gains those fields.
     """
+
+    #: metric keys recorded per step when the executor emits them (remote lane)
+    OPTIONAL_KEYS = ("wire_bytes", "rtt_s")
 
     def __init__(self, print_summary: bool = True,
                  jsonl_path: Union[str, pathlib.Path, None] = None):
@@ -151,10 +156,13 @@ class StalenessTelemetry(Callback):
                 self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
                 self._sink = self.jsonl_path.open("w")
             loss = metrics.get("loss")
-            self._sink.write(json.dumps({
-                "step": int(state.step), "tau": tau, "perturbed": perturbed,
-                "step_time_s": step_time_s,
-                "loss": float(loss) if loss is not None else None}) + "\n")
+            rec = {"step": int(state.step), "tau": tau, "perturbed": perturbed,
+                   "step_time_s": step_time_s,
+                   "loss": float(loss) if loss is not None else None}
+            for key in self.OPTIONAL_KEYS:
+                if key in metrics:
+                    rec[key] = float(metrics[key])
+            self._sink.write(json.dumps(rec) + "\n")
             self._sink.flush()
 
     def summary(self) -> dict:

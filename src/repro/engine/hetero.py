@@ -36,7 +36,8 @@ class HeteroExecutor:
     def __init__(self, loss_fn: LossFn, method_cfg: Optional[MethodConfig] = None,
                  optimizer: Optional[GradientTransform] = None, *,
                  exec_cfg: Optional[ExecutorConfig] = None,
-                 calibrate: bool = False, calibration_probes: int = 3):
+                 calibrate: bool = False, calibration_probes: int = 3,
+                 ascent_lane=None):
         method_cfg = method_cfg or MethodConfig()
         assert method_cfg.name == "async_sam", \
             f"the hetero lanes realize async_sam only, got {method_cfg.name!r}"
@@ -47,7 +48,11 @@ class HeteroExecutor:
         self.calibrate = calibrate
         self.calibration_probes = calibration_probes
         self.calibrated_fraction: Optional[float] = None
-        self._inner = AsyncSamExecutor(loss_fn, method_cfg, optimizer, exec_cfg)
+        # ascent_lane swaps where the slow lane runs: None -> the in-process
+        # thread lane; a `service.RemoteAscentClient` -> another host
+        # (that is the whole difference between `hetero` and `remote`)
+        self._inner = AsyncSamExecutor(loss_fn, method_cfg, optimizer,
+                                       exec_cfg, ascent_lane=ascent_lane)
 
     @property
     def ledger(self):

@@ -1,0 +1,119 @@
+"""RemoteExecutor — the hetero schedule with the ascent lane on another host.
+
+The paper's "fully utilize heterogeneous system resources" headline, taken
+literally: descent runs here, the ascent gradient arrives over the wire from
+a `repro.service.ascent_server` process (another host, another device, or —
+loopback mode — a subprocess on this machine). Everything above the lane is
+shared with `HeteroExecutor`: the same `AsyncSamExecutor` step, staleness
+ledger, calibration pre-fit hook and `StepExecutor` surface, so `Engine.fit`
+drives it unchanged and a loopback run matches `--executor hetero`
+step for step under `ExecutorConfig(lockstep=True)`.
+
+Wiring (ExecutorConfig fields):
+
+    ascent_addr    "host:port" / "unix:/path" of a running server
+    serve_ascent   loopback: spawn the server subprocess here; `loss_spec`
+                   ("module:attr" | "arch:NAME[:reduced]") tells it what loss
+                   to hold. With `ascent_addr` unset the kernel picks a port.
+    max_server_respawns  loopback resilience: a server that dies mid-fit is
+                   respawned (the client reconnects, in-flight gradients are
+                   dropped, tau records the gap); past the budget the run
+                   degrades to SGD-past-max-staleness and still completes.
+
+Step metrics additionally carry `wire_bytes` (measured bytes of the last
+JOB+GRAD exchange) and `rtt_s`, which `StalenessTelemetry(jsonl_path=...)`
+streams per step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import MethodConfig, TrainState
+from repro.core.api import LossFn
+from repro.core.ascent import Compressor
+from repro.engine.hetero import HeteroExecutor
+from repro.optim import GradientTransform
+from repro.runtime.async_executor import ExecutorConfig
+from repro.service.ascent_server import ServerHandle, spawn_server
+from repro.service.client import RemoteAscentClient
+
+
+class RemoteExecutor(HeteroExecutor):
+    """Two-host executor: descent here, ascent behind `service.protocol`."""
+
+    name = "remote"
+
+    def __init__(self, loss_fn: LossFn, method_cfg: Optional[MethodConfig] = None,
+                 optimizer: Optional[GradientTransform] = None, *,
+                 exec_cfg: Optional[ExecutorConfig] = None,
+                 calibrate: bool = False, calibration_probes: int = 3,
+                 loss_spec: str = ""):
+        xcfg = exec_cfg or ExecutorConfig()
+        method_cfg = method_cfg or MethodConfig()
+        self._loss_spec = loss_spec or xcfg.loss_spec
+        self.server: Optional[ServerHandle] = None
+        self.server_respawns = 0
+        addr = xcfg.ascent_addr
+        if xcfg.serve_ascent:
+            if not self._loss_spec:
+                raise ValueError(
+                    "serve_ascent=True needs a loss_spec "
+                    "('module:attr' or 'arch:NAME[:reduced]') so the spawned "
+                    "server knows which loss function to hold")
+            self.server = spawn_server(self._loss_spec,
+                                       bind=addr or "127.0.0.1:0",
+                                       delay_s=xcfg.ascent_delay_s)
+            addr = self.server.addr
+        if not addr:
+            raise ValueError("RemoteExecutor needs ExecutorConfig.ascent_addr "
+                             "(a running ascent server) or serve_ascent=True")
+        self.client = RemoteAscentClient(
+            addr,
+            Compressor(kind=method_cfg.compressor,
+                       topk_fraction=method_cfg.topk_fraction),
+            connect_timeout_s=xcfg.connect_timeout_s,
+            reconnect_backoff_s=xcfg.reconnect_backoff_s)
+        try:
+            super().__init__(loss_fn, method_cfg, optimizer, exec_cfg=xcfg,
+                             calibrate=calibrate,
+                             calibration_probes=calibration_probes,
+                             ascent_lane=self.client)
+        except BaseException:
+            self.client.close()
+            if self.server is not None:
+                self.server.kill()
+            raise
+        self.xcfg = xcfg
+
+    # --- loopback resilience ----------------------------------------------------
+    def _maybe_respawn_server(self) -> None:
+        """A died loopback server is replaced (within budget); the client is
+        pointed at the new address and reconnects. The exchange that was in
+        flight is gone — the staleness ledger records the gap as tau growth
+        and, past max_staleness, SGD fallback — but training never stalls:
+        a respawn that itself fails (the server dies again before listening,
+        e.g. persistent OOM) burns one attempt and the run continues on the
+        ledger instead of crashing Engine.fit. The successful-spawn wait is
+        synchronous with the step (bounded by spawn_server's startup
+        timeout) — acceptable for the loopback/smoke path this serves."""
+        if self.server is None or self.server.alive():
+            return
+        if self.server_respawns >= self.xcfg.max_server_respawns:
+            return
+        self.server_respawns += 1
+        try:
+            self.server = spawn_server(self._loss_spec, bind="127.0.0.1:0",
+                                       delay_s=self.xcfg.ascent_delay_s)
+        except RuntimeError as e:
+            self.client._note_error(f"server respawn failed: {e}")
+            return
+        self.client.set_address(self.server.addr)
+
+    def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        self._maybe_respawn_server()
+        return super().step(state, batch)
+
+    def close(self) -> None:
+        super().close()              # inner executor -> client (lane) close
+        if self.server is not None:
+            self.server.kill()

@@ -8,12 +8,25 @@ go through the same `Engine.fit`:
   --executor fused   one jitted SPMD step (Form A, pod-scale default)
   --executor hetero  two-lane heterogeneous executor (Form B, paper §3.3/§3.4);
                      add --calibrate for the system-aware b' pre-fit probe
+  --executor remote  the hetero lanes across processes/hosts: ascent runs in a
+                     `repro.service.ascent_server`; point --ascent-addr at a
+                     running server, or pass --serve-ascent to spawn one as a
+                     localhost subprocess (loopback smoke mode)
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 100 --batch 8 --seq 64
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 20 --executor hetero --calibrate
+  # multi-host: on the helper host
+  PYTHONPATH=src python -m repro.service.ascent_server \
+      --loss arch:olmo-1b:reduced --bind 0.0.0.0:7431
+  # ... and on the descent host
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 20 --executor remote --ascent-addr helper:7431
+  # single-host loopback (server spawned as a subprocess)
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 20 --executor remote --serve-ascent
 """
 from __future__ import annotations
 
@@ -27,8 +40,8 @@ from repro.core import MethodConfig
 from repro.checkpoint import CheckpointManager
 from repro.data import PipelineConfig, TokenPipeline
 from repro.engine import (CheckpointCallback, Engine, FusedExecutor,
-                          HeteroExecutor, LoggingCallback, StalenessTelemetry,
-                          ThroughputMeter)
+                          HeteroExecutor, LoggingCallback, RemoteExecutor,
+                          StalenessTelemetry, ThroughputMeter)
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.optim import cosine_schedule, make_optimizer
@@ -50,10 +63,18 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config (CPU-trainable)")
     ap.add_argument("--method", default="async_sam")
-    ap.add_argument("--executor", choices=("fused", "hetero"), default="fused",
-                    help="fused: one SPMD step; hetero: two-lane async_sam")
+    ap.add_argument("--executor", choices=("fused", "hetero", "remote"),
+                    default="fused",
+                    help="fused: one SPMD step; hetero: two-lane async_sam; "
+                         "remote: ascent lane behind repro.service")
     ap.add_argument("--calibrate", action="store_true",
-                    help="hetero only: measure the system-aware b'/b pre-fit")
+                    help="hetero/remote: measure the system-aware b'/b pre-fit")
+    ap.add_argument("--ascent-addr", default="",
+                    help="remote only: address of a running ascent server "
+                         "('host:port' or 'unix:/path')")
+    ap.add_argument("--serve-ascent", action="store_true",
+                    help="remote only: spawn the ascent server as a localhost "
+                         "subprocess (loopback mode; --ascent-addr optional)")
     ap.add_argument("--ascent-device", default="",
                     help="hetero only: device for the slow ascent lane, e.g. "
                          "'cpu:0' (paper's CPU helper on a CPU+accelerator host)")
@@ -81,17 +102,23 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
-    if args.executor == "hetero" and args.model_axis != 1:
+    lanes = args.executor in ("hetero", "remote")
+    if lanes and args.model_axis != 1:
         ap.error("--model-axis applies to --executor fused only "
-                 "(the hetero lanes run meshless)")
-    if args.calibrate and args.executor != "hetero":
-        ap.error("--calibrate requires --executor hetero")
-    if args.executor == "hetero" and args.method != "async_sam":
-        ap.error("--executor hetero realizes async_sam only "
+                 "(the hetero/remote lanes run meshless)")
+    if args.calibrate and not lanes:
+        ap.error("--calibrate requires --executor hetero or remote")
+    if lanes and args.method != "async_sam":
+        ap.error(f"--executor {args.executor} realizes async_sam only "
                  f"(got --method {args.method})")
     if (args.ascent_device or args.descent_device) and args.executor != "hetero":
         ap.error("--ascent-device/--descent-device apply to --executor hetero "
-                 "only (the fused executor is a single resource)")
+                 "only (the remote ascent device is the server's --device)")
+    if (args.ascent_addr or args.serve_ascent) and args.executor != "remote":
+        ap.error("--ascent-addr/--serve-ascent apply to --executor remote only")
+    if args.executor == "remote" and not (args.ascent_addr or args.serve_ascent):
+        ap.error("--executor remote needs --ascent-addr (a running "
+                 "ascent server) or --serve-ascent (loopback subprocess)")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     bundle = build_model(cfg)
@@ -119,6 +146,19 @@ def main() -> None:
         executor = HeteroExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
+    elif args.executor == "remote":
+        # ascent lane behind repro.service: either a server the operator
+        # already runs on another host, or a spawned loopback subprocess
+        # holding the same arch/config (the wire carries params + b' batches
+        # out and compressed ascent gradients back)
+        loss_spec = f"arch:{args.arch}" + (":reduced" if args.reduced else "")
+        exec_cfg = ExecutorConfig(ascent_addr=args.ascent_addr,
+                                  serve_ascent=args.serve_ascent,
+                                  loss_spec=loss_spec,
+                                  fused_update=fused_update)
+        executor = RemoteExecutor(bundle.loss_fn, mcfg, optimizer,
+                                  exec_cfg=exec_cfg,
+                                  calibrate=args.calibrate)
     else:
         mesh = make_host_mesh(model_axis=args.model_axis)
         executor = FusedExecutor(bundle.loss_fn, mcfg, optimizer,
@@ -133,7 +173,7 @@ def main() -> None:
     meter = ThroughputMeter(tokens_per_batch=args.batch * args.seq)
     callbacks = [LoggingCallback(every=args.log_every,
                                  total_steps=args.steps), meter]
-    if args.executor == "hetero" or args.telemetry_jsonl:
+    if args.executor in ("hetero", "remote") or args.telemetry_jsonl:
         callbacks.append(StalenessTelemetry(
             jsonl_path=args.telemetry_jsonl or None))
     if args.ckpt_dir:

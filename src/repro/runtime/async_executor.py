@@ -5,9 +5,9 @@ depth-1 queue:
 
 * the DESCENT lane (fast resource) runs `descent_fn` — one model update per
   step, perturbing with whatever ascent gradient is currently held;
-* the ASCENT lane (slow resource, dedicated thread) runs `ascent_fn` on b'
-  samples against a *snapshot* of the parameters — by construction one step
-  old when consumed: tau = 1 (Algorithm 1);
+* the ASCENT lane (slow resource) runs `ascent_fn` on b' samples against a
+  *snapshot* of the parameters — by construction one step old when consumed:
+  tau = 1 (Algorithm 1);
 * if the ascent lane has not delivered by the time the descent lane needs it,
   the held gradient is reused and its age grows (tau = 2, 3, ...) up to
   `max_staleness`, after which the step degrades to plain SGD — the
@@ -16,9 +16,15 @@ depth-1 queue:
 * `calibrate()` measures per-sample gradient times on both lanes and returns
   the system-aware b' = (T_f / T_s) * b of paper §3.3.
 
-Lanes may live on different jax devices (CPU + accelerator on real machines;
-two CPU streams in this container). All queue hand-offs are host arrays, so
-the scheme also models the PCIe hop of the paper's CPU<->GPU setup.
+The ascent lane is pluggable: the default `ThreadAscentLane` runs on a
+dedicated host thread (two jax devices inside one process — CPU + accelerator
+on real machines); `repro.service.RemoteAscentClient` satisfies the same lane
+protocol over TCP/Unix sockets, moving the ascent resource to another process
+or host (`engine.RemoteExecutor`). Both lanes share `ascent_exchange` — the
+single function that owns the ascent-worker math (gradient, compression with
+error feedback, norm, wire-byte accounting, host hand-off) — so the
+in-process worker and the standalone `repro.service.ascent_server` compute
+byte-identical exchanges.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import numpy as np
@@ -34,6 +40,7 @@ import numpy as np
 from repro.core import (Compressor, MethodConfig, StalenessLedger, TrainState,
                         make_ascent_fn, make_descent_fn, split_batch,
                         system_aware_ascent_fraction)
+from repro.core.ascent import CompressionState
 from repro.core.api import LossFn
 from repro.optim import GradientTransform
 from repro.utils import trees
@@ -50,12 +57,198 @@ class ExecutorConfig:
     # flat-buffer fused perturb + optimizer epilogue on the descent lane;
     # None -> platform default (on for TPU, off for CPU — ops._resolve style)
     fused_update: Optional[bool] = None
+    # deterministic test mode: block for every submitted ascent result before
+    # the next harvest, so the tau schedule is timing-independent (step 0
+    # unperturbed, tau=1 thereafter) — the hook parity tests use to compare
+    # the in-process and remote lanes step for step
+    lockstep: bool = False
+    # --- remote lane (engine.RemoteExecutor / repro.service) ----------------
+    ascent_addr: str = ""          # "host:port" or "unix:/path" of the server
+    serve_ascent: bool = False     # loopback: spawn the server as a subprocess
+    loss_spec: str = ""            # server-side loss ("module:attr" | "arch:NAME[:reduced]")
+    connect_timeout_s: float = 60.0
+    reconnect_backoff_s: float = 0.25
+    max_server_respawns: int = 1   # loopback only: respawn a server that died
+
+
+# ---------------------------------------------------------------------------
+# Shared ascent-worker math (in-process lane AND repro.service.ascent_server)
+# ---------------------------------------------------------------------------
+
+def place_tree(tree: Pytree, device) -> Pytree:
+    if device is None:
+        return tree
+    return jax.tree.map(lambda x: jax.device_put(x, device), tree)
+
+
+def ascent_exchange(ascent_fn: Callable, norm_fn: Callable,
+                    compressor: Compressor,
+                    comp_state: Optional[CompressionState],
+                    params: Pytree, batch: Pytree, rng,
+                    *, device=None, delay_s: float = 0.0
+                    ) -> tuple[Pytree, float, int, Optional[CompressionState]]:
+    """One ascent-lane exchange: gradient -> (lossy) hand-off value.
+
+    Returns (host fp32 gradient tree, float norm, payload wire bytes, new
+    compression state). `ascent_fn`/`norm_fn` are jitted `make_ascent_fn` /
+    `trees.global_norm`; error feedback accumulates in `comp_state` on
+    whichever side runs this (worker thread or ascent server).
+    """
+    if delay_s:
+        time.sleep(delay_s)  # injected straggle (tests/benchmarks)
+    params = place_tree(params, device)
+    batch = place_tree(batch, device)
+    g, norm, _ = ascent_fn(params, batch, rng)
+    if compressor.kind != "none":
+        if comp_state is None:
+            comp_state = compressor.init(g)
+        g, comp_state = compressor.compress(g, comp_state)
+        # one fused on-device reduction, one host sync — not a
+        # per-leaf Python float round-trip
+        norm = float(norm_fn(g))
+    else:
+        norm = float(norm)
+    wire = compressor.wire_bytes(g)
+    g = jax.device_get(g)           # model the cross-resource hop
+    return g, norm, wire, comp_state
+
+
+# ---------------------------------------------------------------------------
+# Ascent-lane protocol + the default in-process thread lane
+# ---------------------------------------------------------------------------
+
+def poll_queue(q: queue.Queue, block: bool = False,
+               timeout: Optional[float] = None):
+    """Shared lane-poll: non-raising get; None when nothing is ready."""
+    try:
+        if block:
+            return q.get(timeout=timeout)
+        return q.get_nowait()
+    except queue.Empty:
+        return None
+
+
+def drain_queue(q: queue.Queue) -> None:
+    try:
+        while True:
+            q.get_nowait()
+    except queue.Empty:
+        pass
+
+
+@runtime_checkable
+class AscentLane(Protocol):
+    """Where the ascent gradient comes from (thread, or another host).
+
+    Results are (gen, grad_tree, norm, meta) tuples; `meta` carries
+    lane-specific telemetry (ascent_time_s, wire_bytes, rtt_s) the executor
+    forwards into its step metrics.
+    """
+
+    def full(self) -> bool: ...
+
+    def submit(self, gen: int, params: Pytree, batch: Pytree, rng,
+               step: int) -> bool: ...
+
+    def poll(self, block: bool = False, timeout: Optional[float] = None
+             ) -> Optional[tuple]: ...
+
+    def reset(self) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class ThreadAscentLane:
+    """The PR-1 lane: dedicated worker thread + depth-1 job/result queues."""
+
+    def __init__(self, ascent_fn: Callable, norm_fn: Callable,
+                 compressor: Compressor, *, device=None, delay_s: float = 0.0):
+        self._ascent_fn = ascent_fn
+        self._norm_fn = norm_fn
+        self._compressor = compressor
+        self._comp_state = None
+        self._device = device
+        self._delay_s = delay_s
+        self.wire_bytes_per_exchange = 0
+        self.timings: list[float] = []
+        self._jobs: queue.Queue = queue.Queue(maxsize=1)
+        self._results: queue.Queue = queue.Queue(maxsize=1)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                gen, params, batch, rng, _step = self._jobs.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if self._stop.is_set():   # shutting down: don't start new compute
+                break
+            t0 = time.perf_counter()
+            g, norm, wire, self._comp_state = ascent_exchange(
+                self._ascent_fn, self._norm_fn, self._compressor,
+                self._comp_state, params, batch, rng,
+                device=self._device, delay_s=self._delay_s)
+            self.wire_bytes_per_exchange = wire
+            dt = time.perf_counter() - t0
+            self.timings.append(dt)
+            try:
+                self._results.put((gen, g, norm, {"ascent_time_s": dt}),
+                                  timeout=1.0)
+            except queue.Full:
+                pass                 # consumer lagging: drop (stale anyway)
+
+    def full(self) -> bool:
+        return self._jobs.full()
+
+    def submit(self, gen, params, batch, rng, step) -> bool:
+        try:
+            self._jobs.put_nowait((gen, params, batch, rng, step))
+        except queue.Full:
+            return False
+        return True
+
+    def poll(self, block: bool = False, timeout: Optional[float] = None):
+        return poll_queue(self._results, block, timeout)
+
+    def probe(self, params: Pytree, batch: Pytree, rng, probes: int) -> float:
+        """Timed inline ascent runs (warmup excluded) for calibrate()."""
+        p_in = place_tree(params, self._device)
+        b_in = place_tree(batch, self._device)
+        jax.block_until_ready(self._ascent_fn(p_in, b_in, rng)[0])
+        t0 = time.perf_counter()
+        for _ in range(probes):
+            if self._delay_s:
+                time.sleep(self._delay_s)
+            jax.block_until_ready(self._ascent_fn(p_in, b_in, rng)[0])
+        return time.perf_counter() - t0
+
+    def reset(self) -> None:
+        drain_queue(self._jobs)
+        drain_queue(self._results)
+
+    def close(self) -> None:
+        """Stop the worker. Shutdown-safe ordering: signal stop, then drain
+        BOTH queues (a worker blocked in `results.put` must not wait out its
+        timeout against a consumer that already left), then join.
+
+        The join budget is generous: exiting the interpreter while the worker
+        is still inside jitted XLA compute aborts the process (std::terminate
+        from native thread teardown), so waiting out an in-flight ascent —
+        even one paying a compile — is the cheap option.
+        """
+        self._stop.set()
+        self.reset()
+        if self._thread.is_alive():
+            self._thread.join(timeout=30.0)
 
 
 class AsyncSamExecutor:
     def __init__(self, loss_fn: LossFn, method_cfg: MethodConfig,
                  optimizer: GradientTransform,
-                 exec_cfg: Optional[ExecutorConfig] = None):
+                 exec_cfg: Optional[ExecutorConfig] = None,
+                 ascent_lane: Optional[AscentLane] = None):
         self.xcfg = exec_cfg or ExecutorConfig()
         fused_update = self.xcfg.fused_update
         if fused_update is None:
@@ -70,59 +263,26 @@ class AsyncSamExecutor:
         # that tolerates b' < b; DESIGN.md §2)
         self._compressor = Compressor(kind=method_cfg.compressor,
                                       topk_fraction=method_cfg.topk_fraction)
-        self._comp_state = None
-        self.wire_bytes_per_exchange = 0
         self._ascent_raw = jax.jit(make_ascent_fn(loss_fn))
         self._norm = jax.jit(trees.global_norm)
         self._descent = jax.jit(make_descent_fn(method_cfg, loss_fn, optimizer),
                                 donate_argnums=(0,))
-        self._jobs: queue.Queue = queue.Queue(maxsize=1)
-        self._results: queue.Queue = queue.Queue(maxsize=1)
+        self._lane: AscentLane = ascent_lane if ascent_lane is not None else \
+            ThreadAscentLane(self._ascent_raw, self._norm, self._compressor,
+                             device=self.xcfg.ascent_device,
+                             delay_s=self.xcfg.ascent_delay_s)
         self._gen = 0            # bumped by reset(): fences off in-flight work
-        self._stop = threading.Event()
+        self._inflight = 0       # results the lane still owes (lockstep gate)
         self._closed = False
-        self._thread = threading.Thread(target=self._ascent_worker, daemon=True)
-        self._thread.start()
         # held perturbation direction (host-side fp32 pytree)
-        self._held: Optional[tuple[Pytree, jax.Array]] = None
-        self.timings = {"ascent": [], "descent": []}
+        self._held: Optional[tuple[Pytree, float]] = None
+        self._exchange_meta: dict = {}
+        self.timings = {"ascent": getattr(self._lane, "timings", []),
+                        "descent": []}
 
-    # --- ascent lane -----------------------------------------------------------
-    def _place(self, tree: Pytree, device) -> Pytree:
-        if device is None:
-            return tree
-        return jax.tree.map(lambda x: jax.device_put(x, device), tree)
-
-    def _ascent_worker(self) -> None:
-        while not self._stop.is_set():
-            try:
-                gen, params, batch, rng = self._jobs.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            if self._stop.is_set():   # shutting down: don't start new compute
-                break
-            t0 = time.perf_counter()
-            if self.xcfg.ascent_delay_s:
-                time.sleep(self.xcfg.ascent_delay_s)  # injected straggle
-            params = self._place(params, self.xcfg.ascent_device)
-            batch = self._place(batch, self.xcfg.ascent_device)
-            g, norm, _ = self._ascent_raw(params, batch, rng)
-            if self._compressor.kind != "none":
-                if self._comp_state is None:
-                    self._comp_state = self._compressor.init(g)
-                g, self._comp_state = self._compressor.compress(g, self._comp_state)
-                # one fused on-device reduction, one host sync — not a
-                # per-leaf Python float round-trip
-                norm = float(self._norm(g))
-            else:
-                norm = float(norm)
-            self.wire_bytes_per_exchange = self._compressor.wire_bytes(g)
-            g = jax.device_get(g)           # model the cross-resource hop
-            self.timings["ascent"].append(time.perf_counter() - t0)
-            try:
-                self._results.put((gen, g, norm), timeout=1.0)
-            except queue.Full:
-                pass                         # consumer lagging: drop (stale anyway)
+    @property
+    def wire_bytes_per_exchange(self) -> int:
+        return getattr(self._lane, "wire_bytes_per_exchange", 0)
 
     # --- step ------------------------------------------------------------------
     def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
@@ -134,23 +294,36 @@ class AsyncSamExecutor:
 
         # harvest a finished ascent gradient (fresh => tau resets to 1);
         # results from a pre-reset() generation are discarded
-        try:
-            gen, g, norm = self._results.get_nowait()
-            if gen == self._gen:
+        block = self.xcfg.lockstep and self._inflight > 0
+        got = self._lane.poll(block=block, timeout=120.0 if block else None)
+        self._exchange_meta = {}
+        if got is not None:
+            self._inflight = max(0, self._inflight - 1)
+            gen, g, norm, meta = got
+            if g is not None and gen == self._gen:
                 self._held = (g, norm)
+                self._exchange_meta = dict(meta)
                 self.ledger.on_fresh()
                 have = True
             else:
+                # g is None: the lane's lost-exchange sentinel (server error
+                # or dropped connection) — reuse/age like any missed refresh
                 have = self._held is not None and self.ledger.on_reuse()
-        except queue.Empty:
+        else:
+            if block:
+                # the blocking wait timed out: that exchange is lost (dead
+                # lane/connection) — stop waiting for it on later steps
+                self._inflight = max(0, self._inflight - 1)
             have = self._held is not None and self.ledger.on_reuse()
 
         # submit the next ascent job against the CURRENT params (it will be
-        # one step old when used — Algorithm 1 line 3)
-        if not self._jobs.full():
+        # one step old when used — Algorithm 1 line 3); the full-check comes
+        # first so a busy lane never costs the whole-model D2H materialization
+        if not self._lane.full():
             rng = jax.random.fold_in(state.rng, state.step)
-            self._jobs.put_nowait((self._gen, jax.device_get(state.params),
-                                   ascent_batch, rng))
+            if self._lane.submit(self._gen, jax.device_get(state.params),
+                                 ascent_batch, rng, int(state.step)):
+                self._inflight += 1
 
         t0 = time.perf_counter()
         if self._held is not None:
@@ -164,45 +337,47 @@ class AsyncSamExecutor:
         metrics = dict(metrics)
         metrics["tau"] = self.ledger.tau
         metrics["perturbed"] = float(have)
+        # remote-lane telemetry, present only on the step that actually
+        # harvested an exchange (summing a jsonl's wire_bytes column then
+        # gives true total traffic) and only when the lane reports it, so
+        # the in-process lane's metric surface is unchanged
+        for key in ("wire_bytes", "rtt_s"):
+            if key in self._exchange_meta:
+                metrics[key] = float(self._exchange_meta[key])
         return new_state, metrics
 
     def reset(self) -> None:
         """Drop held and in-flight ascent state (e.g. after a checkpoint
-        restore rolled the params back): the next step perturbs only with a
-        gradient computed against post-reset params. The generation fence
-        keeps a result the worker is still computing from being consumed."""
+        restore rolled the params back, or after the remote lane reconnected):
+        the next step perturbs only with a gradient computed against
+        post-reset params. The generation fence keeps a result the lane is
+        still computing from being consumed."""
         self._gen += 1
-        for q in (self._jobs, self._results):
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
+        self._inflight = 0
+        self._lane.reset()
         self._held = None
         self.ledger.tau = 0
 
     # --- system-aware b' (paper §3.3) -------------------------------------------
     def calibrate(self, state: TrainState, batch: dict, probes: int = 3) -> float:
-        """Measure per-sample grad times on both lanes; return suggested b'/b."""
+        """Measure per-sample grad times on both lanes; return suggested b'/b.
+
+        The ascent probe goes through the lane (`AscentLane.probe`), so for a
+        remote lane it measures the real thing: server compute + the wire.
+        """
         descent_batch, ascent_batch = split_batch(batch)
         if ascent_batch is None:
             ascent_batch = descent_batch
         rng = state.rng
-        # warmup + timed runs on the ascent (slow) lane
-        a_in = self._place(state.params, self.xcfg.ascent_device)
-        b_in = self._place(ascent_batch, self.xcfg.ascent_device)
-        jax.block_until_ready(self._ascent_raw(a_in, b_in, rng)[0])
-        t0 = time.perf_counter()
-        for _ in range(probes):
-            if self.xcfg.ascent_delay_s:
-                time.sleep(self.xcfg.ascent_delay_s)
-            jax.block_until_ready(self._ascent_raw(a_in, b_in, rng)[0])
+        params = jax.device_get(state.params)
+        elapsed = self._lane.probe(params, jax.device_get(ascent_batch),
+                                   rng, probes)
         n_asc = jax.tree.leaves(ascent_batch)[0].shape[0]
-        t_slow = (time.perf_counter() - t0) / probes / n_asc
+        t_slow = elapsed / probes / n_asc
 
         # descent lane per-sample time (reuse ascent_fn as the probe kernel)
-        d_in = self._place(state.params, self.xcfg.descent_device)
-        db_in = self._place(descent_batch, self.xcfg.descent_device)
+        d_in = place_tree(state.params, self.xcfg.descent_device)
+        db_in = place_tree(descent_batch, self.xcfg.descent_device)
         jax.block_until_ready(self._ascent_raw(d_in, db_in, rng)[0])
         t0 = time.perf_counter()
         for _ in range(probes):
@@ -212,24 +387,12 @@ class AsyncSamExecutor:
         return system_aware_ascent_fraction(t_fast, t_slow)
 
     def close(self) -> None:
-        """Stop the ascent thread. Idempotent: double-close and
-        close-after-thread-death are both no-ops.
-
-        The join budget is generous: exiting the interpreter while the worker
-        is still inside jitted XLA compute aborts the process (std::terminate
-        from native thread teardown), so waiting out an in-flight ascent —
-        even one paying a compile — is the cheap option.
-        """
+        """Stop the ascent lane. Idempotent: double-close and
+        close-after-thread-death are both no-ops."""
         if self._closed:
             return
         self._closed = True
-        self._stop.set()
-        try:
-            self._jobs.get_nowait()       # cancel an unstarted job
-        except queue.Empty:
-            pass
-        if self._thread.is_alive():
-            self._thread.join(timeout=30.0)
+        self._lane.close()
 
     def __enter__(self):
         return self

@@ -1,0 +1,28 @@
+"""repro.service — the multi-host ascent lane (paper §3.3 across processes).
+
+The heterogeneous executor's ascent lane, moved out of process: a standalone
+`AscentServer` (``python -m repro.service.ascent_server``) holds the loss
+function and computes ascent gradients on its local device; a non-blocking
+`RemoteAscentClient` satisfies the same lane protocol as the in-process
+thread lane (`runtime.async_executor.AscentLane`), streaming params/batch
+frames out and compressed gradient frames back over TCP or Unix sockets.
+`engine.RemoteExecutor` plugs the client into `Engine.fit` unchanged.
+
+`protocol` owns the length-prefixed, versioned, checksummed frame format and
+the exact wire-byte accounting (`grad_frame_bytes`) layered on
+`core.ascent.Compressor.wire_bytes`.
+"""
+from repro.service.ascent_server import (  # noqa: F401
+    AscentServer,
+    ServerHandle,
+    resolve_loss,
+    spawn_server,
+)
+from repro.service.client import RemoteAscentClient  # noqa: F401
+from repro.service.protocol import (  # noqa: F401
+    FrameType,
+    ProtocolError,
+    decode_frame,
+    encode_frame,
+    grad_frame_bytes,
+)

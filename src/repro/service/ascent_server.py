@@ -1,0 +1,295 @@
+"""AscentServer — the slow-resource half of AsyncSAM as a standalone process.
+
+    python -m repro.service.ascent_server --loss benchmarks.common:mlp_loss
+    python -m repro.service.ascent_server --loss arch:olmo-1b:reduced \
+        --bind 0.0.0.0:7431 --device cpu:0
+
+The server holds the loss function (resolved from an import path or an
+architecture id), jits `core.make_ascent_fn`, and answers JOB frames
+(params snapshot + b'-sized batch + rng) with GRAD frames (compressed ascent
+gradient + norm + staleness metadata). The per-exchange math is exactly
+`runtime.async_executor.ascent_exchange` — the same function the in-process
+thread lane runs — so a loopback remote run reproduces the hetero lane's
+hand-off values bit for bit (compressor "none"/"topk"; one rounding ulp for
+"int8").
+
+Backpressure is structural: one connection is served at a time, one frame is
+in flight per connection (the client keeps a depth-1 job queue, mirroring the
+paper's depth-1 MPI exchange), so a slow server shows up as staleness (tau
+growth) on the client, never as unbounded buffering.
+
+On startup the server prints ``ascent-server listening on <addr>`` to stdout;
+`spawn_server` uses that sentinel to implement the loopback mode (server as a
+local subprocess) that `--serve-ascent` and the service tests drive.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import importlib
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import make_ascent_fn
+from repro.runtime.async_executor import ascent_exchange
+from repro.service import protocol
+from repro.service.protocol import FrameType, ProtocolError
+from repro.utils import trees
+
+_LISTEN_SENTINEL = "ascent-server listening on "
+
+
+def resolve_loss(spec: str) -> Callable:
+    """Loss-function lookup: "module:attr" or "arch:NAME[:reduced]"."""
+    if spec.startswith("arch:"):
+        parts = spec.split(":")
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config(parts[1], reduced="reduced" in parts[2:])
+        return build_model(cfg).loss_fn
+    mod, _, attr = spec.partition(":")
+    if not mod or not attr:
+        raise ValueError(f"loss spec {spec!r} is not 'module:attr' or "
+                         "'arch:NAME[:reduced]'")
+    return getattr(importlib.import_module(mod), attr)
+
+
+def parse_device(spec: str) -> Optional[jax.Device]:
+    """'cpu', 'cpu:1', 'tpu:0' ... -> the jax.Device (None for '')."""
+    if not spec:
+        return None
+    platform, _, idx = spec.partition(":")
+    return jax.devices(platform)[int(idx) if idx else 0]
+
+
+class AscentServer:
+    """Serves ascent-gradient exchanges to one client at a time."""
+
+    def __init__(self, loss_fn: Callable, *, bind: str = "127.0.0.1:0",
+                 device: Optional[jax.Device] = None, delay_s: float = 0.0):
+        self._ascent = jax.jit(make_ascent_fn(loss_fn))
+        self._norm = jax.jit(trees.global_norm)
+        self._device = device
+        self._delay_s = delay_s
+        self._bind_spec = bind
+        self._listener: Optional[socket.socket] = None
+        self.address: Optional[str] = None
+        self._stop = threading.Event()
+        self._conn: Optional[socket.socket] = None
+        self.exchanges = 0
+        self.connections = 0
+
+    def start(self) -> str:
+        """Bind + listen; returns the resolved address ("host:port"/"unix:...")."""
+        if self._listener is None:
+            self._listener, self.address = protocol.bind_listener(self._bind_spec)
+        return self.address
+
+    def serve_forever(self) -> None:
+        self.start()
+        while not self._stop.is_set():
+            self._listener.settimeout(0.2)
+            try:
+                conn, _peer = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            self._conn = conn
+            self.connections += 1
+            try:
+                self._handle(conn)
+            except (ConnectionError, ProtocolError, OSError, TimeoutError):
+                pass        # client went away / spoke garbage: next accept
+            except Exception as e:  # noqa: BLE001 — one bad connection must
+                # never take down a long-running helper; log and re-accept
+                print(f"ascent-server: connection failed: "
+                      f"{type(e).__name__}: {e}", flush=True)
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                self._conn = None
+
+    def serve_in_thread(self) -> threading.Thread:
+        """Test hook: accept loop on a daemon thread (same-process loopback)."""
+        self.start()
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        return t
+
+    def _handle(self, conn: socket.socket) -> None:
+        ftype, payload, _ = protocol.recv_frame(conn, stop=self._stop,
+                                                timeout=30.0)
+        if ftype != FrameType.HELLO:
+            raise ProtocolError(f"expected HELLO, got {ftype.name}")
+        compressor = protocol.decode_hello(payload)
+        protocol.send_frame(conn, FrameType.HELLO_ACK,
+                            protocol.encode_hello(compressor))
+        # error-feedback residual is per-connection: a reconnect starts the
+        # quantizer's memory fresh (the residual belonged to a dropped stream)
+        comp_state = None
+        while not self._stop.is_set():
+            try:
+                ftype, payload, _ = protocol.recv_frame(conn, stop=self._stop)
+            except ConnectionAbortedError:
+                break       # stop was set while waiting for the next job
+            if ftype != FrameType.JOB:
+                raise ProtocolError(f"expected JOB, got {ftype.name}")
+            try:
+                gen, step, params, batch, rng = protocol.decode_job(payload)
+            except Exception as e:   # checksummed but malformed: this client
+                raise ProtocolError(  # is skewed — drop the connection
+                    f"malformed JOB payload ({type(e).__name__}: {e})") from e
+            t0 = time.perf_counter()
+            try:
+                g, norm, _wire, comp_state = ascent_exchange(
+                    self._ascent, self._norm, compressor, comp_state,
+                    params, batch, np.asarray(rng),
+                    device=self._device, delay_s=self._delay_s)
+                grad_payload = protocol.encode_grad(
+                    gen, step, norm, time.perf_counter() - t0,
+                    jax.tree.leaves(g), compressor)
+            except Exception as e:  # noqa: BLE001 — surfaced to the client
+                protocol.send_frame(conn, FrameType.ERROR,
+                                    f"{type(e).__name__}: {e}".encode())
+                continue
+            protocol.send_frame(conn, FrameType.GRAD, grad_payload)
+            self.exchanges += 1
+
+    def close(self) -> None:
+        self._stop.set()
+        for sock in (self._conn, self._listener):
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+        self._listener = None
+        if self.address and self.address.startswith("unix:"):
+            try:
+                os.unlink(self.address[len("unix:"):])
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Loopback mode: the server as a local subprocess
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServerHandle:
+    """A spawned ascent-server subprocess + its advertised address."""
+    proc: subprocess.Popen
+    addr: str
+    loss_spec: str
+    tail: "collections.deque[str]"   # last stdout/stderr lines (diagnostics)
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def kill(self, timeout: float = 10.0) -> None:
+        if self.alive():
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait(timeout=timeout)
+
+
+def spawn_server(loss_spec: str, *, bind: str = "127.0.0.1:0",
+                 device: str = "", delay_s: float = 0.0,
+                 startup_timeout_s: float = 120.0) -> ServerHandle:
+    """Start ``python -m repro.service.ascent_server`` and wait for its
+    listening sentinel; returns a handle with the connectable address.
+
+    A daemon thread keeps draining the child's stdout afterwards, so a chatty
+    server can never block on a full pipe; the last lines are retained on the
+    handle for post-mortems.
+    """
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.service.ascent_server",
+           "--bind", bind, "--loss", loss_spec]
+    if device:
+        cmd += ["--device", device]
+    if delay_s:
+        cmd += ["--delay-s", str(delay_s)]
+    proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    tail: collections.deque = collections.deque(maxlen=50)
+    addr_box: dict = {}
+    sentinel = threading.Event()
+
+    # the reader thread owns the pipe from the start: readline() blocks, so
+    # waiting for the sentinel on this thread would defeat startup_timeout_s
+    # against a server that wedges silently (e.g. during backend init)
+    def _reader(stream):
+        for line in stream:
+            line = line.rstrip("\n")
+            tail.append(line)
+            if line.startswith(_LISTEN_SENTINEL) and not sentinel.is_set():
+                addr_box["addr"] = line[len(_LISTEN_SENTINEL):].strip()
+                sentinel.set()
+        stream.close()
+
+    reader = threading.Thread(target=_reader, args=(proc.stdout,), daemon=True)
+    reader.start()
+    deadline = time.monotonic() + startup_timeout_s
+    while time.monotonic() < deadline and not sentinel.is_set():
+        if proc.poll() is not None:
+            reader.join(timeout=5.0)   # collect the crash output
+            break
+        sentinel.wait(0.2)
+    if "addr" not in addr_box:
+        proc.kill()
+        raise RuntimeError(
+            "ascent server failed to start "
+            f"(exit={proc.poll()}):\n" + "\n".join(tail))
+    return ServerHandle(proc=proc, addr=addr_box["addr"], loss_spec=loss_spec,
+                        tail=tail)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="AsyncSAM ascent-gradient server (paper's slow resource)")
+    ap.add_argument("--bind", default="127.0.0.1:0",
+                    help="'host:port' (port 0 = kernel-assigned) or "
+                         "'unix:/path/to.sock'")
+    ap.add_argument("--loss", required=True,
+                    help="loss spec: 'module:attr' or 'arch:NAME[:reduced]'")
+    ap.add_argument("--device", default="",
+                    help="jax device for the ascent compute, e.g. 'cpu:0'")
+    ap.add_argument("--delay-s", type=float, default=0.0,
+                    help="injected per-exchange delay (straggler emulation)")
+    args = ap.parse_args(argv)
+
+    server = AscentServer(resolve_loss(args.loss), bind=args.bind,
+                          device=parse_device(args.device),
+                          delay_s=args.delay_s)
+    addr = server.start()
+    print(f"{_LISTEN_SENTINEL}{addr}", flush=True)
+    signal.signal(signal.SIGTERM, lambda *_: server.close())
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,276 @@
+"""RemoteAscentClient — the descent host's end of the multi-host ascent lane.
+
+Satisfies the same `AscentLane` protocol as the in-process thread lane
+(`runtime.async_executor.ThreadAscentLane`): `submit` is non-blocking with a
+depth-1 job queue (the paper's depth-1 exchange — backpressure, not
+buffering), `poll` harvests finished gradients, and a single worker thread
+owns the socket: connect + HELLO handshake, send JOB, await GRAD, reconnect
+with backoff on any drop.
+
+Reconnect-and-reset semantics mirror the generation-fenced `reset()` of the
+executor: a connection drop loses exactly the in-flight exchange (the job
+that was on the wire and whatever the server was computing), the held-
+gradient staleness ledger on the executor side keeps aging (tau grows, then
+SGD fallback), and training never stalls on a dead helper. `close()` is
+shutdown-safe for a client that never managed to connect: the connect loop
+polls the stop event between bounded attempts, so the join cannot hang.
+"""
+from __future__ import annotations
+
+import queue
+import sys
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+
+from repro.core.ascent import Compressor
+from repro.runtime.async_executor import drain_queue, poll_queue
+from repro.service import protocol
+from repro.service.protocol import FrameType, ProtocolError
+
+Pytree = Any
+
+
+class RemoteAscentClient:
+    """Non-blocking client for `repro.service.ascent_server`."""
+
+    def __init__(self, addr: str, compressor: Optional[Compressor] = None, *,
+                 connect_timeout_s: float = 60.0,
+                 reconnect_backoff_s: float = 0.25):
+        self._addr = addr
+        self._addr_lock = threading.Lock()
+        self._compressor = compressor or Compressor(kind="none")
+        self.connect_timeout_s = connect_timeout_s
+        self.reconnect_backoff_s = reconnect_backoff_s
+        self._jobs: queue.Queue = queue.Queue(maxsize=1)
+        self._results: queue.Queue = queue.Queue(maxsize=2)
+        self._stop = threading.Event()
+        self._closed = False
+        self._sock = None
+        self.connected = threading.Event()
+        # telemetry
+        self.reconnects = 0          # successful (re)connections after the first
+        self.drops = 0               # exchanges lost to a dead connection
+        self.server_errors = 0       # ERROR frames (connection stayed up)
+        self.last_error = ""         # last server/exchange failure, for ops
+        self.exchanges = 0
+        self.wire_in_bytes = 0       # totals across the session
+        self.wire_out_bytes = 0
+        self.last_rtt_s = 0.0
+        self.last_wire_in_bytes = 0  # GRAD frame length of the last exchange
+        self.last_wire_out_bytes = 0
+        self.wire_bytes_per_exchange = 0   # measured GRAD frame bytes
+        self.timings: list[float] = []     # per-exchange round-trip seconds
+        self._ever_connected = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    # --- AscentLane surface ----------------------------------------------------
+    def full(self) -> bool:
+        return self._jobs.full()
+
+    def submit(self, gen: int, params: Pytree, batch: Pytree, rng,
+               step: int) -> bool:
+        if self._jobs.full():
+            return False
+        try:
+            self._jobs.put_nowait((gen, jax.device_get(params),
+                                   jax.device_get(batch),
+                                   jax.device_get(rng), step))
+        except queue.Full:
+            return False
+        return True
+
+    def poll(self, block: bool = False, timeout: Optional[float] = None):
+        return poll_queue(self._results, block, timeout)
+
+    def probe(self, params: Pytree, batch: Pytree, rng, probes: int) -> float:
+        """Timed blocking round trips for calibrate(): measures the real slow
+        lane — server compute plus the wire. The first exchange (connect +
+        server-side jit compile) is the excluded warmup."""
+        def once(timeout):
+            if not self.submit(0, params, batch, rng, 0):
+                raise RuntimeError("probe: remote lane busy")
+            got = self.poll(block=True, timeout=timeout)
+            if got is None:
+                raise RuntimeError(
+                    f"ascent service at {self.address} did not answer the "
+                    f"calibration probe within {timeout:.0f}s")
+            return got
+
+        once(self.connect_timeout_s + 600.0)   # warmup: connect + compile
+        t0 = time.perf_counter()
+        for _ in range(probes):
+            once(600.0)
+        return time.perf_counter() - t0
+
+    def reset(self) -> None:
+        drain_queue(self._jobs)
+        drain_queue(self._results)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._drop_socket()          # unblocks a worker inside recv/sendall
+        self.reset()
+        if self._thread.is_alive():
+            self._thread.join(timeout=10.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # --- address / connection --------------------------------------------------
+    @property
+    def address(self) -> str:
+        with self._addr_lock:
+            return self._addr
+
+    def set_address(self, addr: str) -> None:
+        """Point at a replacement server (loopback respawn); forces reconnect."""
+        with self._addr_lock:
+            self._addr = addr
+        self._drop_socket()
+
+    def wait_connected(self, timeout: float) -> bool:
+        return self.connected.wait(timeout)
+
+    def _note_error(self, msg: str) -> None:
+        """Record the failure and print it once per distinct message (a
+        persistent server-side fault would otherwise be invisible: the run
+        keeps completing steps in SGD fallback)."""
+        if msg != self.last_error:
+            print(f"[remote-ascent] {msg}", file=sys.stderr, flush=True)
+        self.last_error = msg
+
+    def _drop_socket(self) -> None:
+        sock, self._sock = self._sock, None
+        self.connected.clear()
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _connect_once(self):
+        """Attempt one connect + HELLO handshake; returns the socket or None."""
+        try:
+            sock = protocol.connect(self.address, timeout=2.0)
+        except OSError:
+            return None
+        try:
+            protocol.send_frame(sock, FrameType.HELLO,
+                                protocol.encode_hello(self._compressor))
+            ftype, _payload, _ = protocol.recv_frame(sock, stop=self._stop,
+                                                     timeout=30.0)
+            if ftype != FrameType.HELLO_ACK:
+                raise ProtocolError(f"expected HELLO_ACK, got {ftype.name}")
+        except (OSError, ProtocolError, TimeoutError, ConnectionError):
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return None
+        self._sock = sock
+        if self._ever_connected:
+            self.reconnects += 1
+        self._ever_connected = True
+        self.connected.set()
+        return sock
+
+    # --- worker ----------------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            # local reference: set_address()/close() may null self._sock from
+            # another thread at any point (the closed socket then raises
+            # OSError here, which is the reconnect path, not a crash)
+            sock = self._sock
+            if sock is None:
+                sock = self._connect_once()
+                if sock is None:
+                    # bounded attempts + stop polling: a client that never
+                    # connects still closes promptly (no hanging join)
+                    self._stop.wait(self.reconnect_backoff_s)
+                    continue
+            try:
+                job = self._jobs.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if self._stop.is_set():
+                break
+            gen, params, batch, rng, step = job
+            treedef = jax.tree.structure(params)
+            t0 = time.perf_counter()
+            try:
+                out_bytes = protocol.send_frame(
+                    sock, FrameType.JOB,
+                    protocol.encode_job(gen, step, params, batch, rng))
+                # no deadline: a slow helper is staleness, not an error —
+                # a dead one surfaces as a socket error / EOF
+                ftype, payload, in_bytes = protocol.recv_frame(
+                    sock, stop=self._stop)
+                if ftype == FrameType.ERROR:
+                    # server-side compute failure: the connection is still
+                    # good (the server kept its loop), only this exchange is
+                    # lost — surface the server's diagnostic, don't tear down
+                    self.server_errors += 1
+                    self._note_error("ascent server error: "
+                                     + payload.decode(errors="replace"))
+                    self._post_failure(gen)
+                    continue
+                if ftype != FrameType.GRAD:
+                    raise ProtocolError(f"expected GRAD, got {ftype.name}")
+                rtt = time.perf_counter() - t0
+                rgen, _job_step, norm, compute_s, leaves = \
+                    protocol.decode_grad(payload)
+                g = jax.tree.unflatten(treedef, leaves)
+            except ConnectionAbortedError:
+                break        # close() interrupted the wait
+            except (OSError, ConnectionError, ProtocolError, TimeoutError) as e:
+                if self._stop.is_set():
+                    break    # close() tore the socket down, not a real drop
+                self.drops += 1
+                self._note_error(f"exchange dropped ({type(e).__name__}: {e})")
+                self._post_failure(gen)
+                self._drop_socket()   # in-flight exchange is lost; reconnect
+                continue
+            except Exception as e:  # noqa: BLE001 — the lane must never die
+                # silently: an encode/decode bug (e.g. a >4GiB frame
+                # overflowing the u32 length, or an unflatten mismatch)
+                # would otherwise kill this daemon thread and leave training
+                # in permanent SGD fallback with a forever-full job queue
+                self.drops += 1
+                self._note_error(
+                    f"exchange failed ({type(e).__name__}: {e})")
+                self._post_failure(gen)
+                self._drop_socket()
+                continue
+            self.exchanges += 1
+            self.timings.append(rtt)
+            self.last_rtt_s = rtt
+            self.last_wire_in_bytes = in_bytes
+            self.last_wire_out_bytes = out_bytes
+            self.wire_in_bytes += in_bytes
+            self.wire_out_bytes += out_bytes
+            self.wire_bytes_per_exchange = in_bytes
+            meta = {"wire_bytes": float(in_bytes + out_bytes), "rtt_s": rtt,
+                    "wire_in_bytes": in_bytes, "wire_out_bytes": out_bytes,
+                    "server_compute_s": compute_s}
+            try:
+                self._results.put((rgen, g, norm, meta), timeout=1.0)
+            except queue.Full:
+                pass         # consumer lagging: drop (stale anyway)
+
+    def _post_failure(self, gen: int) -> None:
+        """Lost-exchange sentinel (grad=None): releases a lockstep waiter
+        immediately instead of letting it sit out the full poll timeout."""
+        try:
+            self._results.put_nowait((gen, None, 0.0, {}))
+        except queue.Full:
+            pass

@@ -1,0 +1,453 @@
+"""Wire protocol for the multi-host ascent service.
+
+One frame format carries everything that crosses the process boundary:
+
+    0   4  magic  b"ASAM"
+    4   1  protocol version (PROTOCOL_VERSION)
+    5   1  frame type (FrameType)
+    6   2  flags (reserved, 0)
+    8   4  payload length, big-endian u32
+    12  4  crc32 of the payload
+    16  N  payload
+
+Frames out (client -> server): HELLO (compressor config handshake) and JOB
+(a params snapshot + ascent batch + rng, i.e. the tuple the in-process lane
+hands its worker thread). Frames back: HELLO_ACK, GRAD (the compressed ascent
+gradient + its norm + staleness metadata), and ERROR (server-side exception
+text). JOB/HELLO payloads are self-describing (JSON tree spec + raw leaf
+bytes); GRAD payloads are fixed-layout binary so their length is exactly
+modeled: `grad_frame_bytes(compressor, grad)` == len of the encoded frame,
+with `Compressor.wire_bytes` as the payload term and the framing/shape
+metadata accounted here (the frame-overhead model `Compressor.wire_bytes`
+deliberately excludes).
+
+The GRAD encodings mirror `core.ascent.Compressor`'s representations:
+
+    none  fp32 leaves, raw                              4n bytes
+    int8  per-leaf f64 scale + int8 payload             n + 8 bytes/leaf
+    topk  per-leaf u32 k + k (u32 index, f32 value)     8k + 4 bytes/leaf
+
+so re-encoding the *reconstruction* `Compressor.compress` produced is
+lossless for "none"/"topk" and exact up to one rounding ulp for "int8"
+(the reconstruction is scale * int8 already).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import socket
+import stat
+import struct
+import threading
+import time
+import zlib
+from enum import IntEnum
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.ascent import Compressor
+
+Pytree = Any
+
+MAGIC = b"ASAM"
+PROTOCOL_VERSION = 1
+FRAME_HEADER_BYTES = 16
+#: fixed GRAD-payload prelude: gen u32 + job_step u32 + norm f64 +
+#: compute_time f64 + kind u8 + n_leaves u32
+GRAD_FIXED_BYTES = 4 + 4 + 8 + 8 + 1 + 4
+_MAX_PAYLOAD = 1 << 31   # sanity bound against corrupt length fields
+
+_KIND_CODES = {"none": 0, "int8": 1, "topk": 2}
+_KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+
+
+class FrameType(IntEnum):
+    HELLO = 1
+    HELLO_ACK = 2
+    JOB = 3
+    GRAD = 4
+    ERROR = 5
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame: bad magic/version/length/checksum/encoding."""
+
+
+# ---------------------------------------------------------------------------
+# Frame layer
+# ---------------------------------------------------------------------------
+
+def encode_frame(ftype: FrameType, payload: bytes) -> bytes:
+    if len(payload) >= _MAX_PAYLOAD:
+        raise ProtocolError(
+            f"payload of {len(payload)} bytes exceeds the frame bound "
+            f"({_MAX_PAYLOAD}); ship a compressed/sharded representation")
+    header = MAGIC + struct.pack(">BBHII", PROTOCOL_VERSION, int(ftype), 0,
+                                 len(payload), zlib.crc32(payload))
+    return header + payload
+
+
+def decode_frame_header(header: bytes) -> tuple[FrameType, int, int]:
+    """-> (frame type, payload length, expected crc32). Raises ProtocolError."""
+    if len(header) != FRAME_HEADER_BYTES or header[:4] != MAGIC:
+        raise ProtocolError(f"bad frame magic {header[:4]!r}")
+    version, ftype, _flags, length, crc = struct.unpack(">BBHII", header[4:])
+    if version != PROTOCOL_VERSION:
+        raise ProtocolError(f"protocol version {version} != {PROTOCOL_VERSION}")
+    if length > _MAX_PAYLOAD:
+        raise ProtocolError(f"payload length {length} exceeds bound")
+    try:
+        ftype = FrameType(ftype)
+    except ValueError:
+        raise ProtocolError(f"unknown frame type {ftype}") from None
+    return ftype, length, crc
+
+
+def decode_frame(buf: bytes) -> tuple[FrameType, bytes]:
+    """Decode one complete frame from `buf` (exact length)."""
+    ftype, length, crc = decode_frame_header(buf[:FRAME_HEADER_BYTES])
+    payload = buf[FRAME_HEADER_BYTES:]
+    if len(payload) != length:
+        raise ProtocolError(f"payload length {len(payload)} != header {length}")
+    if zlib.crc32(payload) != crc:
+        raise ProtocolError("payload checksum mismatch")
+    return ftype, payload
+
+
+# ---------------------------------------------------------------------------
+# Socket helpers (stop-aware blocking I/O)
+# ---------------------------------------------------------------------------
+
+def send_frame(sock: socket.socket, ftype: FrameType, payload: bytes) -> int:
+    """Send one frame; returns total bytes on the wire.
+
+    Sends in blocking mode: `recv_exact` leaves a short poll timeout on the
+    socket, and since py3.5 that timeout is sendall's budget for the WHOLE
+    frame — a multi-MB params frame over a real link needs longer. A send
+    wedged on a dead peer is interrupted by close() on the other thread
+    (sendall then raises OSError -> the caller's reconnect path).
+    """
+    frame = encode_frame(ftype, payload)
+    sock.settimeout(None)
+    sock.sendall(frame)
+    return len(frame)
+
+
+def recv_exact(sock: socket.socket, n: int, *,
+               stop: Optional[threading.Event] = None,
+               deadline: Optional[float] = None) -> bytes:
+    """Read exactly n bytes; poll in short slices so `stop` can interrupt.
+
+    Raises ConnectionError on EOF, TimeoutError past `deadline` (absolute
+    time.monotonic()), and ConnectionAbortedError when `stop` is set.
+    """
+    buf = io.BytesIO()
+    got = 0
+    while got < n:
+        if stop is not None and stop.is_set():
+            raise ConnectionAbortedError("stopped while receiving")
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"timed out receiving frame ({got}/{n} bytes)")
+        sock.settimeout(0.2)
+        try:
+            chunk = sock.recv(min(1 << 20, n - got))
+        except socket.timeout:
+            continue
+        if not chunk:
+            raise ConnectionError("peer closed the connection")
+        buf.write(chunk)
+        got += len(chunk)
+    return buf.getvalue()
+
+
+def recv_frame(sock: socket.socket, *,
+               stop: Optional[threading.Event] = None,
+               timeout: Optional[float] = None
+               ) -> tuple[FrameType, bytes, int]:
+    """Receive one frame -> (type, payload, total wire bytes)."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    header = recv_exact(sock, FRAME_HEADER_BYTES, stop=stop, deadline=deadline)
+    ftype, length, crc = decode_frame_header(header)
+    payload = recv_exact(sock, length, stop=stop, deadline=deadline)
+    if zlib.crc32(payload) != crc:
+        raise ProtocolError("payload checksum mismatch")
+    return ftype, payload, FRAME_HEADER_BYTES + length
+
+
+# ---------------------------------------------------------------------------
+# Address plumbing ("host:port" TCP or "unix:/path" domain sockets)
+# ---------------------------------------------------------------------------
+
+def parse_addr(spec: str) -> tuple[str, Any]:
+    """-> ("unix", path) | ("tcp", (host, port))."""
+    if spec.startswith("unix:"):
+        return "unix", spec[len("unix:"):]
+    host, _, port = spec.rpartition(":")
+    if not host:
+        raise ValueError(f"address {spec!r} is not 'host:port' or 'unix:/path'")
+    return "tcp", (host, int(port))
+
+
+def bind_listener(spec: str, backlog: int = 1) -> tuple[socket.socket, str]:
+    """Bind + listen on `spec`; returns (socket, resolved address string).
+
+    TCP port 0 resolves to the kernel-assigned port, so callers can always
+    advertise a connectable address.
+    """
+    family, target = parse_addr(spec)
+    if family == "unix":
+        try:
+            if stat.S_ISSOCK(os.stat(target).st_mode):
+                os.unlink(target)   # stale path from a previous server:
+        except FileNotFoundError:   # bind would fail with EADDRINUSE
+            pass
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.bind(target)
+        sock.listen(backlog)
+        return sock, f"unix:{target}"
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    sock.bind(target)
+    sock.listen(backlog)
+    host, port = sock.getsockname()[:2]
+    return sock, f"{host}:{port}"
+
+
+def connect(spec: str, timeout: float = 5.0) -> socket.socket:
+    family, target = parse_addr(spec)
+    if family == "unix":
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout)
+        sock.connect(target)
+        return sock
+    return socket.create_connection(target, timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# Pytree codec (JOB / HELLO payloads): JSON tree spec + raw leaf bytes
+# ---------------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered extension dtypes (bfloat16, ...)
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack_tree(tree: Pytree, leaves: list) -> Any:
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {"t": "dict", "k": list(tree),
+                "v": [_pack_tree(tree[k], leaves) for k in tree]}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "tuple" if isinstance(tree, tuple) else "list",
+                "v": [_pack_tree(x, leaves) for x in tree]}
+    arr = np.ascontiguousarray(np.asarray(tree))
+    leaves.append(arr)
+    return {"t": "leaf", "dtype": arr.dtype.name, "shape": list(arr.shape)}
+
+
+def _unpack_tree(spec: Any, leaves: "list[np.ndarray]", cursor: list) -> Pytree:
+    if spec is None:
+        return None
+    t = spec["t"]
+    if t == "dict":
+        return {k: _unpack_tree(v, leaves, cursor)
+                for k, v in zip(spec["k"], spec["v"])}
+    if t in ("list", "tuple"):
+        out = [_unpack_tree(v, leaves, cursor) for v in spec["v"]]
+        return tuple(out) if t == "tuple" else out
+    arr = leaves[cursor[0]]
+    cursor[0] += 1
+    return arr
+
+
+def encode_trees(meta: dict, **trees: Pytree) -> bytes:
+    """Pack host pytrees + JSON-able metadata into one payload.
+
+    Layout: u32 json_len | json {meta, specs} | concatenated leaf bytes.
+    """
+    leaves: list[np.ndarray] = []
+    specs = {name: _pack_tree(tree, leaves) for name, tree in trees.items()}
+    header = json.dumps({"meta": meta, "trees": specs},
+                        separators=(",", ":")).encode()
+    out = io.BytesIO()
+    out.write(struct.pack(">I", len(header)))
+    out.write(header)
+    for arr in leaves:
+        out.write(arr.tobytes())
+    return out.getvalue()
+
+
+def decode_trees(payload: bytes) -> tuple[dict, dict]:
+    """Inverse of encode_trees -> (meta, {name: pytree of np arrays})."""
+    (json_len,) = struct.unpack_from(">I", payload, 0)
+    header = json.loads(payload[4:4 + json_len].decode())
+    off = 4 + json_len
+    leaves: list[np.ndarray] = []
+
+    def walk(spec):
+        nonlocal off
+        if spec is None:
+            return
+        if spec["t"] == "leaf":
+            dtype = _np_dtype(spec["dtype"])
+            n = int(np.prod(spec["shape"], dtype=np.int64)) if spec["shape"] else 1
+            nbytes = n * dtype.itemsize
+            if off + nbytes > len(payload):
+                raise ProtocolError("leaf data overruns payload")
+            arr = np.frombuffer(payload, dtype=dtype, count=n, offset=off)
+            leaves.append(arr.reshape(spec["shape"]))
+            off += nbytes
+            return
+        for v in spec["v"]:
+            walk(v)
+
+    for spec in header["trees"].values():
+        walk(spec)
+    cursor = [0]
+    trees = {name: _unpack_tree(spec, leaves, cursor)
+             for name, spec in header["trees"].items()}
+    return header["meta"], trees
+
+
+# ---------------------------------------------------------------------------
+# JOB / HELLO payloads
+# ---------------------------------------------------------------------------
+
+def encode_hello(compressor: Compressor) -> bytes:
+    return json.dumps({"version": PROTOCOL_VERSION, "kind": compressor.kind,
+                       "topk_fraction": compressor.topk_fraction}).encode()
+
+
+def decode_hello(payload: bytes) -> Compressor:
+    meta = json.loads(payload.decode())
+    if meta.get("version") != PROTOCOL_VERSION:
+        raise ProtocolError(f"client protocol version {meta.get('version')} "
+                            f"!= {PROTOCOL_VERSION}")
+    return Compressor(kind=meta["kind"], topk_fraction=meta["topk_fraction"])
+
+
+def encode_job(gen: int, step: int, params: Pytree, batch: Pytree,
+               rng) -> bytes:
+    return encode_trees({"gen": int(gen), "step": int(step)},
+                        params=params, batch=batch, rng=rng)
+
+
+def decode_job(payload: bytes) -> tuple[int, int, Pytree, Pytree, Any]:
+    meta, trees = decode_trees(payload)
+    return (int(meta["gen"]), int(meta["step"]),
+            trees["params"], trees["batch"], trees["rng"])
+
+
+# ---------------------------------------------------------------------------
+# GRAD payload: fixed binary layout, exact length model
+# ---------------------------------------------------------------------------
+
+def _leaf_topk_k(n: int, fraction: float) -> int:
+    return max(1, int(n * fraction))
+
+
+def encode_grad(gen: int, job_step: int, norm: float, compute_time_s: float,
+                leaves: "list[np.ndarray]", compressor: Compressor) -> bytes:
+    """Pack the ascent gradient leaves (flatten order) for the wire.
+
+    `leaves` is the output of `jax.tree.leaves` on the (already
+    error-feedback-compressed, reconstructed) gradient; the receiver
+    re-assembles with its own treedef (both ends hold the same params
+    structure).
+    """
+    kind = compressor.kind
+    out = io.BytesIO()
+    out.write(struct.pack(">IIddBI", int(gen), int(job_step), float(norm),
+                          float(compute_time_s), _KIND_CODES[kind],
+                          len(leaves)))
+    for leaf in leaves:
+        arr = np.ascontiguousarray(np.asarray(leaf, dtype=np.float32))
+        out.write(struct.pack(">B", arr.ndim))
+        out.write(struct.pack(f">{arr.ndim}I", *arr.shape))
+        if kind == "none":
+            out.write(struct.pack(">B", 0))    # dtype code: fp32
+            out.write(arr.tobytes())
+        elif kind == "int8":
+            amax = float(np.max(np.abs(arr))) if arr.size else 0.0
+            scale = (amax / 127.0) or 1.0
+            q = np.clip(np.round(arr / scale), -127, 127).astype(np.int8)
+            out.write(struct.pack(">d", scale))
+            out.write(q.tobytes())
+        elif kind == "topk":
+            flat = arr.reshape(-1)
+            k = _leaf_topk_k(flat.size, compressor.topk_fraction)
+            idx = np.argpartition(np.abs(flat), -k)[-k:].astype(np.uint32)
+            out.write(struct.pack(">I", k))
+            out.write(idx.tobytes())
+            out.write(flat[idx].astype(np.float32).tobytes())
+        else:
+            raise ValueError(f"unknown compressor kind {kind!r}")
+    return out.getvalue()
+
+
+def decode_grad(payload: bytes
+                ) -> tuple[int, int, float, float, "list[np.ndarray]"]:
+    """-> (gen, job_step, norm, compute_time_s, fp32 leaves in flatten order)."""
+    gen, job_step, norm, dt, kind_code, n_leaves = struct.unpack_from(
+        ">IIddBI", payload, 0)
+    kind = _KIND_NAMES.get(kind_code)
+    if kind is None:
+        raise ProtocolError(f"unknown grad kind code {kind_code}")
+    off = GRAD_FIXED_BYTES
+    leaves = []
+    for _ in range(n_leaves):
+        (ndim,) = struct.unpack_from(">B", payload, off)
+        off += 1
+        shape = struct.unpack_from(f">{ndim}I", payload, off)
+        off += 4 * ndim
+        n = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+        if kind == "none":
+            off += 1                            # dtype code (fp32 only)
+            arr = np.frombuffer(payload, np.float32, n, off).reshape(shape)
+            off += 4 * n
+        elif kind == "int8":
+            (scale,) = struct.unpack_from(">d", payload, off)
+            off += 8
+            q = np.frombuffer(payload, np.int8, n, off).reshape(shape)
+            off += n
+            arr = q.astype(np.float32) * np.float32(scale)
+        else:                                   # topk
+            (k,) = struct.unpack_from(">I", payload, off)
+            off += 4
+            idx = np.frombuffer(payload, np.uint32, k, off)
+            off += 4 * k
+            val = np.frombuffer(payload, np.float32, k, off)
+            off += 4 * k
+            flat = np.zeros(n, np.float32)
+            flat[idx] = val
+            arr = flat.reshape(shape)
+        leaves.append(np.ascontiguousarray(arr))
+    if off != len(payload):
+        raise ProtocolError(f"grad payload has {len(payload) - off} trailing bytes")
+    return int(gen), int(job_step), float(norm), float(dt), leaves
+
+
+def grad_frame_bytes(compressor: Compressor, grad: Pytree) -> int:
+    """Exact length of the GRAD *frame* that would carry `grad`.
+
+    `Compressor.wire_bytes` models the compressed payload only; this adds the
+    framing the payload model deliberately excludes: the 16-byte frame header,
+    the fixed GRAD prelude, and the per-leaf shape/structure metadata. A test
+    asserts modeled == len(encode_frame(...)) for every compressor kind.
+    """
+    import jax
+    leaves = [np.asarray(x) for x in jax.tree.leaves(grad)]
+    structural = sum(1 + 4 * leaf.ndim for leaf in leaves)   # ndim + dims
+    if compressor.kind == "none":
+        structural += len(leaves)        # dtype code byte
+    elif compressor.kind == "topk":
+        structural += 4 * len(leaves)    # per-leaf k
+    # int8's per-leaf 8-byte scale is already part of the payload model
+    return (FRAME_HEADER_BYTES + GRAD_FIXED_BYTES + structural
+            + compressor.wire_bytes(grad))

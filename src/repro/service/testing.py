@@ -1,0 +1,38 @@
+"""Importable toy losses for the ascent-service loopback path.
+
+The standalone server resolves its loss function by import path
+(``--loss module:attr``), so losses used by loopback tests, benchmarks and
+examples must live somewhere the server subprocess can import under
+``PYTHONPATH=src``. This module is the single source of the generic
+``w{i}/b{i}`` MLP: ``benchmarks/common.py`` re-exports `mlp_loss` from here,
+so the descent side of a loopback benchmark and the server resolving
+`MLP_LOSS_SPEC` always execute the same function.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: what a loopback client passes as `loss_spec` to reach `mlp_loss` below
+MLP_LOSS_SPEC = "repro.service.testing:mlp_loss"
+
+
+def mlp_init(key, widths=(8, 32, 4)) -> dict:
+    params = {}
+    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
+        k = jax.random.fold_in(key, i)
+        params[f"w{i}"] = jax.random.normal(k, (a, b)) / jnp.sqrt(a)
+        params[f"b{i}"] = jnp.zeros(b)
+    return params
+
+
+def mlp_loss(params, batch, rng):
+    h = batch["x"]
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            h = jax.nn.gelu(h)
+    onehot = jax.nn.one_hot(batch["y"], h.shape[-1])
+    loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(h) * onehot, axis=-1))
+    return loss, {"logits": h}
