@@ -6,6 +6,16 @@ Usage:
 
 Writes artifacts/perf/<arch>_<shape>_<variant>.json and prints the three
 roofline terms + MFU-bound (see EXPERIMENTS.md §Perf).
+
+Besides the MODELED epilogue HBM bytes (optim.fused.epilogue_hbm_bytes, both
+residency regimes), the artifact now carries REALIZED per-step epilogue
+traffic: the fused train step is traced twice — once over plain pytree state,
+once over bucket-resident state — under `buckets.track_copies()`, which
+counts every tree->bucket gather and bucket->tree scatter that the trace
+bakes into the program. realized = kernel-streamed bytes + counted conversion
+bytes; with resident buckets the count must be zero, i.e. realized within
+10% of the modeled fused number (asserted), where the per-call regime sits
+at ~1x of the per-leaf path.
 """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'
@@ -15,12 +25,57 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO)); sys.path.insert(0, str(REPO / "src"))
 import pathlib
 
+import jax
+
 from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, model_flops)
 from repro.configs import get_config
 from repro.core import MethodConfig
 from repro.launch import dryrun as D
+from repro.models import batch_spec, build_model
 from repro.models.config import SHAPES
+from repro.optim import make_optimizer
 from repro.optim.fused import epilogue_hbm_bytes
+from repro.utils import buckets
+
+
+def realized_epilogue_bytes(cfg, shape, mcfg, modeled_kernel_bytes):
+    """Trace-count the fused step's gather/scatter copies, both regimes.
+
+    The unsharded fused step (the regime the fused path targets) is traced
+    abstractly — `jax.eval_shape` executes the bucket conversions at trace
+    time, so `buckets.track_copies` tallies exactly the copies the compiled
+    program would perform, without touching a device.
+
+    Residency follows the executor's own eligibility gating (resident=None):
+    a variant whose MethodConfig is not resident-safe (compressed exchange,
+    a non-weight-space method) only gets the per-call regime, and the
+    resident-realized assert is skipped for it — perf_cell measures what the
+    production executor would actually run.
+    """
+    from repro.engine import FusedExecutor
+    bundle = build_model(cfg)
+    batch_sds = batch_spec(cfg, shape, ascent_fraction=mcfg.ascent_fraction)
+    out = {}
+    for resident in (False, None):
+        ex = FusedExecutor(bundle.loss_fn, mcfg,
+                           make_optimizer("adamw", 1e-3, clip_norm=1.0),
+                           fused_update=True, resident=resident)
+        if resident is None and not ex.resident:
+            ex.close()
+            out["resident"] = None      # cell not resident-eligible
+            continue
+        state_sds = ex.abstract_state(
+            lambda: bundle.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+        with buckets.track_copies() as stats:
+            jax.eval_shape(ex._step_raw, state_sds, batch_sds)
+        ex.close()
+        out["resident" if resident is None else "per_call"] = {
+            "gathers": stats.gathers, "scatters": stats.scatters,
+            "conversion_bytes": stats.total_bytes,
+            "realized_bytes": modeled_kernel_bytes + stats.total_bytes,
+        }
+    return out
+
 
 def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
     cfg = get_config(arch)
@@ -47,7 +102,15 @@ def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
     ep_unfused = epilogue_hbm_bytes(r.param_count, r.param_bytes,
                                     fused=False, **ep_kw)
     ep_fused = epilogue_hbm_bytes(r.param_count, r.param_bytes,
-                                  fused=True, **ep_kw)
+                                  fused=True, resident=True, **ep_kw)
+    ep_fused_per_call = epilogue_hbm_bytes(r.param_count, r.param_bytes,
+                                           fused=True, resident=False, **ep_kw)
+    realized = realized_epilogue_bytes(cfg, shape, mcfg, ep_fused)
+    res, per_call = realized["resident"], realized["per_call"]
+    # the whole point of bucket residency: realized == modeled, not a ceiling
+    if res is not None:
+        assert res["realized_bytes"] <= 1.1 * ep_fused, \
+            (res, ep_fused, "resident realized traffic exceeds modeled +10%")
     out = {"arch": arch, "shape": shape_name, "variant": variant,
            "status": r.status, "note": r.note[:200],
            "t_compute_s": t_comp, "t_memory_s": t_mem, "t_coll_s": t_coll,
@@ -58,19 +121,40 @@ def measure(arch, shape_name, variant, cfg_kw=None, mcfg_kw=None):
            "temp_gb": r.peak_memory_per_device / 1e9,
            "epilogue_hbm_bytes": {
                "unfused": ep_unfused, "fused": ep_fused,
+               "fused_per_call_modeled": ep_fused_per_call,
                "reduction": ep_unfused / ep_fused if ep_fused else 0.0,
+               "reduction_per_call_modeled": (ep_unfused / ep_fused_per_call
+                                              if ep_fused_per_call else 0.0),
                "t_epilogue_unfused_s": ep_unfused / chips / HBM_BW,
                "t_epilogue_fused_s": ep_fused / chips / HBM_BW},
+           "epilogue_realized_bytes": {
+               **realized,
+               "reduction_realized_resident": (
+                   ep_unfused / res["realized_bytes"]
+                   if res is not None else None),
+               "reduction_realized_per_call": (
+                   ep_unfused / per_call["realized_bytes"]),
+           },
            "inventory": r.inventory}
     d = REPO / "artifacts" / "perf"; d.mkdir(parents=True, exist_ok=True)
     (d / f"{arch}_{shape_name}_{variant}.json").write_text(json.dumps(out, indent=1))
     ep = out["epilogue_hbm_bytes"]
+    er = out["epilogue_realized_bytes"]
     print(f"{variant:28s} {r.status:4s} comp={t_comp:.3f}s mem={t_mem:.3f}s "
           f"coll={t_coll:.3f}s bound={out['bound_s']:.3f}s "
           f"mfu={out['mfu_bound']:.3f} tempGB={out['temp_gb']:.1f} "
           f"collGB={out['collective_gb']:.1f} "
           f"epilogue={ep['unfused'] / 1e9:.1f}GB->{ep['fused'] / 1e9:.1f}GB "
           f"({ep['reduction']:.2f}x)", flush=True)
+    res_txt = ("not resident-eligible" if res is None else
+               f"{res['realized_bytes'] / 1e9:.1f}GB "
+               f"({er['reduction_realized_resident']:.2f}x, "
+               f"{res['gathers']}g/{res['scatters']}s)")
+    print(f"{'':28s} realized: per-call "
+          f"{per_call['realized_bytes'] / 1e9:.1f}GB "
+          f"({er['reduction_realized_per_call']:.2f}x of per-leaf, "
+          f"{per_call['gathers']}g/{per_call['scatters']}s) -> resident "
+          f"{res_txt}", flush=True)
     return out
 
 if __name__ == "__main__":

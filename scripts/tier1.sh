@@ -8,12 +8,23 @@
 #                                            # (loopback tests with a spawned
 #                                            # server subprocess; hard timeout
 #                                            # so a wedged socket can't hang)
+#   ./scripts/tier1.sh --resident            # bucket-resident lane: fused
+#                                            # parity + checkpoint-interop
+#                                            # tests with REPRO_FUSED=1, i.e.
+#                                            # fused path forced and kernels
+#                                            # in Pallas interpret mode on CPU
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--kernels-interpret" ]]; then
   shift
   exec python -m pytest -q tests/test_kernels.py "$@"
+fi
+if [[ "${1:-}" == "--resident" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_FUSED=1 python -m pytest -q tests/test_fused_update.py \
+      -k "matches or resident or interop or resilient" "$@"
 fi
 if [[ "${1:-}" == "--service" ]]; then
   shift

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.optim import GradientTransform, apply_updates
 from repro.optim.fused import fused_apply
-from repro.utils import trees
+from repro.utils import buckets, trees
 
 Pytree = Any
 LossFn = Callable[[Pytree, Any, jax.Array], tuple[jax.Array, dict]]
@@ -138,6 +138,22 @@ def step_rng(state: TrainState) -> jax.Array:
     return jax.random.fold_in(state.rng, state.step)
 
 
+def view_loss(loss_fn: LossFn) -> LossFn:
+    """Make a loss callback accept bucket-resident parameters.
+
+    When params arrive as a `buckets.BucketedState`, the model sees the
+    zero-copy pytree view; differentiating through the view transposes to
+    cotangent accumulation straight into the buffers, so `jax.grad` of the
+    wrapped loss returns gradients already bucket-shaped — no gather pass
+    between autodiff and the fused weight-space kernels. Plain pytrees pass
+    through untouched.
+    """
+    def fn(params, batch, rng):
+        return loss_fn(buckets.tree_view(params), batch, rng)
+
+    return fn
+
+
 def value_and_grad_acc(loss_fn: LossFn, n_micro: int):
     """jax.value_and_grad(has_aux=True) with microbatch gradient accumulation.
 
@@ -146,7 +162,12 @@ def value_and_grad_acc(loss_fn: LossFn, n_micro: int):
     pod-scale activation-memory lever). aux is reduced to its scalar metrics
     (mean over chunks) — methods needing full aux tensors (MESA) keep
     n_micro == 1.
+
+    Bucket-resident params work transparently: the loss is view-wrapped, and
+    the accumulation arithmetic (`tree_zeros_like`, leafwise adds/casts) maps
+    over the buffers themselves.
     """
+    loss_fn = view_loss(loss_fn)
     if n_micro <= 1:
         return jax.value_and_grad(loss_fn, has_aux=True)
 

@@ -109,11 +109,17 @@ def make_async_sam(cfg: MethodConfig) -> Method:
             # and the carried norm come from ONE pass over (a_t, a_{t-1})
             # (kernels.fused_dot_norms) instead of three per-leaf reductions;
             # lossless only, since compression changes the stored gradient.
-            if (buckets.fused_path_enabled(cfg.fused_update)
+            # With bucket-resident state both operands already ARE buffers
+            # (a_new differentiated through the params view, ascent_grad
+            # carried resident), so the refresh is buffer -> buffer.
+            resident = buckets.is_bucketed(state.params)
+            if ((resident or buckets.fused_path_enabled(cfg.fused_update))
                     and cfg.compressor == "none"):
                 a32 = trees.tree_cast(a_new, jnp.float32)
+                layout = (state.params.layout if resident
+                          else buckets.bucket_layout(a32))
                 dot, sq_new, sq_old = buckets.bucketed_dot_norms(
-                    a32, ms.ascent_grad)
+                    a32, ms.ascent_grad, layout=layout)
                 cos = dot / (jnp.sqrt(sq_new) * jnp.sqrt(sq_old) + 1e-12)
                 comp_state = ms.compression
                 new_ms = AsyncSamState(
@@ -152,7 +158,9 @@ def make_async_sam(cfg: MethodConfig) -> Method:
 def make_ascent_fn(loss_fn: LossFn) -> Callable:
     """Jittable ascent phase: params, batch, rng -> (grad fp32, norm, loss).
 
-    Runs on the *slow* resource (paper: CPU). Collective-free.
+    Runs on the *slow* resource (paper: CPU). Collective-free. Params arrive
+    pytree-shaped (the lane hand-off / wire contract; the executor converts a
+    bucket-resident snapshot at the edge).
     """
     def ascent(params, batch, rng):
         (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
@@ -168,15 +176,19 @@ def make_descent_fn(cfg: MethodConfig, loss_fn: LossFn,
 
     (state, batch, a, a_norm, have_a) -> (state, metrics). `have_a=False`
     (straggler fallback past max staleness) degrades the step to plain SGD.
+    With bucket-resident state, `a` still arrives pytree-shaped from the lane
+    (the cross-resource hand-off); perturb gathers it once against the
+    resident layout and everything downstream stays buffer -> buffer.
     """
+    vg = value_and_grad_acc(loss_fn, 1)
+
     def descent(state: TrainState, batch, a: Pytree, a_norm: jax.Array,
                 have_a: jax.Array):
         batch, _ = split_batch(batch)
         rho_eff = jnp.where(have_a, cfg.rho, 0.0)
         w_hat = _perturb(state.params, a, rho_eff, grad_norm=a_norm,
                          fused=cfg.fused_update)
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            w_hat, batch, step_rng(state))
+        (loss, aux), grads = vg(w_hat, batch, step_rng(state))
         return _finish(state, optimizer, grads, state.method_state,
                        {"loss": loss, **_m(aux)})
 

@@ -35,12 +35,17 @@ def perturb(params: Pytree, grad: Pytree, rho: float | jax.Array,
 
     `fused=None` defers to the platform default (utils.buckets); True/False
     force the flat-buffer kernel path / the per-leaf jnp composition.
+    Bucket-resident `params` (utils.buckets.BucketedState) always take the
+    flat-buffer path — the buffers are already resident, so the axpy runs
+    buffer -> buffer with no gather/scatter, and the result stays resident.
     """
-    if buckets.fused_path_enabled(fused):
+    if buckets.is_bucketed(params) or buckets.fused_path_enabled(fused):
+        layout = (params.layout if buckets.is_bucketed(params)
+                  else buckets.bucket_layout(params))
         if grad_norm is None:
-            grad_norm = jnp.sqrt(buckets.bucketed_sq_norm(grad))
+            grad_norm = jnp.sqrt(buckets.bucketed_sq_norm(grad, layout))
         scale = jnp.asarray(rho, jnp.float32) / (grad_norm + _EPS)
-        return buckets.bucketed_axpy(scale, grad, params)
+        return buckets.bucketed_axpy(scale, grad, params, layout=layout)
     scale = perturbation_scale(grad, rho, grad_norm)
     return jax.tree.map(
         lambda p, g: (p.astype(jnp.float32)

@@ -22,8 +22,14 @@ from repro.core.api import LossFn
 from repro.core.async_sam import AsyncSamState
 from repro.engine.api import ensure_metric_contract, mesh_context
 from repro.optim import GradientTransform, configure_fused
+from repro.utils import buckets
 
 Pytree = Any
+
+# Methods whose steps are pure weight-space + value_and_grad compositions —
+# safe to run on bucket-resident state. The others (esam's per-leaf masks via
+# tree_paths, mesa's EMA distill, ...) keep the pytree representation.
+RESIDENT_METHODS = ("sgd", "sam", "gsam", "async_sam")
 
 
 class FusedExecutor:
@@ -47,6 +53,17 @@ class FusedExecutor:
         would force an all-gather under pjit), off elsewhere. The resolved
         flag is pinned into both the MethodConfig and the optimizer's
         FusedSpec before the step is built, so it is trace-time static.
+      resident: bucket-RESIDENT training state — params / optimizer moments /
+        ascent state live as persistent dtype buckets (buckets.BucketedState)
+        and the step is buffer -> buffer, with donate=True aliasing input
+        buffers to output buffers so no per-step gather/scatter copies
+        remain (the realized counterpart of the fused path's modeled HBM
+        win). None follows the resolved fused_update whenever the whole
+        chain qualifies: meshless (or 1-device-mesh) step, a
+        RESIDENT_METHODS method with an uncompressed ascent exchange, and a
+        FusedSpec-recognized optimizer.
+        Checkpoints stay pytree-shaped at the boundary (run_resilient
+        converts at the edge), so resident and per-leaf runs interoperate.
     """
 
     name = "fused"
@@ -55,7 +72,8 @@ class FusedExecutor:
                  method: Union[Method, MethodConfig, None] = None,
                  optimizer: Optional[GradientTransform] = None, *,
                  mesh=None, model_cfg=None, donate: bool = True,
-                 block: bool = True, fused_update: Optional[bool] = None):
+                 block: bool = True, fused_update: Optional[bool] = None,
+                 resident: Optional[bool] = None):
         assert optimizer is not None, "FusedExecutor needs an optimizer"
         if fused_update is None:
             fused_update = (jax.default_backend() == "tpu"
@@ -78,6 +96,22 @@ class FusedExecutor:
             mcfg = dataclasses.replace(method or MethodConfig(),
                                        fused_update=fused_update)
             self.method = make_method(mcfg)
+        if resident is None:
+            mcfg = self.method.cfg
+            # mesh.size == 1 qualifies like fused_update's own auto rule does
+            # (the launcher always passes a host mesh, 1-device on one chip)
+            resident = (fused_update and (mesh is None or mesh.size == 1)
+                        and self.method.name in RESIDENT_METHODS
+                        and getattr(optimizer, "fused_spec", None) is not None
+                        and (mcfg is None or mcfg.compressor == "none"))
+        if resident and mesh is not None and mesh.size > 1:
+            # flattening a model-sharded leaf into a global bucket would force
+            # an all-gather under pjit; per-shard bucketing is the ROADMAP
+            # follow-on, so a sharded mesh keeps the pytree representation
+            raise ValueError("bucket-resident state needs an unsharded step "
+                             f"(mesh size {mesh.size}); use resident=False or "
+                             "drop the mesh")
+        self.resident = bool(resident)
         self.optimizer = optimizer
         self.mesh = mesh
         self.model_cfg = model_cfg
@@ -105,10 +139,19 @@ class FusedExecutor:
         stack.enter_context(activation_sharding(self.mesh))
         return stack
 
+    def _residentize_params(self, params: Pytree) -> Pytree:
+        """Gather params into persistent buckets (once, at state birth);
+        optimizer.init / method.init then produce congruent resident moments
+        and ascent state by mapping over the buffers."""
+        if self.resident and not buckets.is_bucketed(params):
+            return buckets.BucketedState.from_tree(params)
+        return params
+
     # --- StepExecutor ---------------------------------------------------------
     def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
         donate = (0,) if self.donate else ()
         with self._scope():
+            params = self._residentize_params(params)
             state = init_train_state(params, self.optimizer, self.method, rng)
             if self.mesh is None:
                 self._jitted = jax.jit(self._step_raw, donate_argnums=donate)
@@ -127,10 +170,14 @@ class FusedExecutor:
 
         `params_fn` builds the parameter pytree; it only ever runs under
         `jax.eval_shape`, so a full-size production config costs nothing.
+        With `resident`, the abstract state carries BucketedState nodes, so
+        `lower` pins the same buffer-shaped signature (and donation aliasing)
+        the live step runs with.
         """
         with self._scope():
             return jax.eval_shape(lambda: init_train_state(
-                params_fn(), self.optimizer, self.method, rng))
+                self._residentize_params(params_fn()), self.optimizer,
+                self.method, rng))
 
     def lower(self, state_sds, batch_sds):
         """Jit-lower the step with explicit in/out shardings (compile

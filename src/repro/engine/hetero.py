@@ -24,6 +24,7 @@ from repro.core import (MethodConfig, TrainState, init_train_state,
 from repro.core.api import LossFn
 from repro.optim import GradientTransform
 from repro.runtime.async_executor import AsyncSamExecutor, ExecutorConfig
+from repro.utils import buckets
 
 Pytree = Any
 
@@ -64,6 +65,11 @@ class HeteroExecutor:
 
     # --- StepExecutor ---------------------------------------------------------
     def init_state(self, params: Pytree, rng: jax.Array) -> TrainState:
+        # bucket-resident descent lane (ExecutorConfig.resident, resolved by
+        # the inner executor): params persist as dtype buckets; optimizer /
+        # method init then build congruent resident moments + ascent state
+        if self._inner.resident and not buckets.is_bucketed(params):
+            params = buckets.BucketedState.from_tree(params)
         return init_train_state(params, self.optimizer, self.method, rng)
 
     @property

@@ -85,6 +85,12 @@ def main() -> None:
                     default="auto",
                     help="flat-buffer fused perturb + optimizer epilogue "
                          "(auto: on for TPU, off for CPU)")
+    ap.add_argument("--resident", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="bucket-resident training state: params/opt-state "
+                         "persist as dtype buckets, the step runs buffer->"
+                         "buffer (auto: follows the resolved fused path; "
+                         "checkpoints stay pytree-shaped either way)")
     ap.add_argument("--telemetry-jsonl", default="",
                     help="write per-step tau/perturbed/step-time records here")
     ap.add_argument("--steps", type=int, default=100)
@@ -135,6 +141,7 @@ def main() -> None:
                          if args.method in ("async_sam",) else 0.0)))
 
     fused_update = {"auto": None, "on": True, "off": False}[args.fused_update]
+    resident = {"auto": None, "on": True, "off": False}[args.resident]
     if args.executor == "hetero":
         # two host lanes; hand-offs are host arrays, no mesh required.
         # --ascent-device/--descent-device place the lanes on real devices
@@ -142,7 +149,7 @@ def main() -> None:
         exec_cfg = ExecutorConfig(
             ascent_device=_parse_device(args.ascent_device),
             descent_device=_parse_device(args.descent_device),
-            fused_update=fused_update)
+            fused_update=fused_update, resident=resident)
         executor = HeteroExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
@@ -155,7 +162,8 @@ def main() -> None:
         exec_cfg = ExecutorConfig(ascent_addr=args.ascent_addr,
                                   serve_ascent=args.serve_ascent,
                                   loss_spec=loss_spec,
-                                  fused_update=fused_update)
+                                  fused_update=fused_update,
+                                  resident=resident)
         executor = RemoteExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
@@ -163,7 +171,8 @@ def main() -> None:
         mesh = make_host_mesh(model_axis=args.model_axis)
         executor = FusedExecutor(bundle.loss_fn, mcfg, optimizer,
                                  mesh=mesh, model_cfg=cfg,
-                                 fused_update=fused_update)
+                                 fused_update=fused_update,
+                                 resident=resident)
 
     # init_state shards/jits inside the executor's mesh scope (fused) so the
     # launcher never touches jit/sharding plumbing itself

@@ -15,6 +15,13 @@ reduction order of the global grad norm, and within fp32-accumulation
 tolerance for bf16 parameters (the per-leaf path round-trips intermediates
 through bf16 between transforms; the kernel does not).
 
+With bucket-RESIDENT state (`utils.buckets.BucketedState` params/moments) the
+kernels additionally skip the per-call bucket gather/scatter entirely: the
+buffers come in as the state representation and go out as the next step's —
+under jit donation that is buffer-aliased in-place update, the regime
+`epilogue_hbm_bytes(resident=True)` models and `benchmarks/perf_cell.py`
+verifies by trace-counting conversions.
+
 Hand-built chains, masked weight decay, and every non-sgd/adamw optimizer
 return None here and keep the per-leaf path — `core.api._finish` falls back
 transparently.
@@ -71,17 +78,37 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
     Returns (new_params, new_opt_state, grad_norm); grad_norm is the global
     fp32 gradient norm (computed for clipping anyway, reused by the step's
     metric contract so the fused path adds no extra pass).
+
+    Bucket-resident operands (`buckets.BucketedState` params / moments /
+    grads) are consumed and produced AS buffers: no per-call
+    `tree_to_buckets`/`buckets_to_tree`, so under jit donation the kernels
+    alias input buffer to output buffer and the epilogue's realized HBM
+    traffic equals the `epilogue_hbm_bytes(resident=True)` model. Plain
+    pytrees keep the gather/scatter-per-call behavior (`resident=False`).
+    Bucket-resident params always run fused — the buffers ARE the
+    representation — regardless of the platform switch.
     """
     spec = getattr(optimizer, "fused_spec", None)
-    if spec is None or not buckets.fused_path_enabled(spec.enabled):
+    resident = buckets.is_bucketed(params)
+    if spec is None or not (resident or buckets.fused_path_enabled(spec.enabled)):
         return None
 
     from repro.kernels import ops
 
     fields = _chain_fields(spec)
-    layout = buckets.bucket_layout(params)
-    wb = buckets.tree_to_buckets(params, layout)
-    gb = buckets.tree_to_buckets(grads, layout)
+    layout = (params.layout if resident else buckets.bucket_layout(params))
+
+    def _bufs(tree):
+        return buckets.group_buffers(tree, layout)[0]
+
+    def _rebuild(bufs, like):
+        if buckets.is_bucketed(like):
+            return buckets.BucketedState(buffers=tuple(bufs),
+                                         layout=like.layout)
+        return buckets.buckets_to_tree(bufs, layout, like)
+
+    wb = _bufs(params)
+    gb = _bufs(grads)
 
     sq = jnp.sum(jnp.stack([ops.sq_norm(g, impl=impl) for g in gb]))
     gnorm = jnp.sqrt(sq)
@@ -96,8 +123,7 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
     if spec.family == "sgd":
         has_m = bool(spec.momentum)
         old_m = opt_state[fields.index("trace")].momentum if has_m else None
-        mb = (buckets.tree_to_buckets(old_m, layout) if has_m
-              else [None] * len(wb))
+        mb = _bufs(old_m) if has_m else [None] * len(wb)
         w_new, m_new = [], []
         for w, g, m in zip(wb, gb, mb):
             wn, mn = ops.sgd_epilogue(w, g, m, clip_scale, eta,
@@ -107,7 +133,7 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
                                       impl=impl)
             w_new.append(wn)
             m_new.append(mn)
-        params_new = buckets.buckets_to_tree(w_new, layout, params)
+        params_new = _rebuild(w_new, params)
         new_state = []
         for f in fields:
             if f == "clip":
@@ -115,8 +141,7 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
             elif f == "wd":
                 new_state.append(())
             elif f == "trace":
-                new_state.append(TraceState(
-                    momentum=buckets.buckets_to_tree(m_new, layout, old_m)))
+                new_state.append(TraceState(momentum=_rebuild(m_new, old_m)))
             else:
                 new_state.append(ScaleByScheduleState(step=sched_state.step + 1))
         return params_new, tuple(new_state), gnorm
@@ -126,8 +151,8 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
     step = adam_state.step + 1
     c1 = 1.0 - spec.b1 ** step.astype(jnp.float32)
     c2 = 1.0 - spec.b2 ** step.astype(jnp.float32)
-    mub = buckets.tree_to_buckets(adam_state.mu, layout)
-    nub = buckets.tree_to_buckets(adam_state.nu, layout)
+    mub = _bufs(adam_state.mu)
+    nub = _bufs(adam_state.nu)
     w_new, mu_new, nu_new = [], [], []
     for w, g, mu, nu in zip(wb, gb, mub, nub):
         wn, mn, vn = ops.adamw_epilogue(w, g, mu, nu, clip_scale, eta, c1, c2,
@@ -137,7 +162,7 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
         w_new.append(wn)
         mu_new.append(mn)
         nu_new.append(vn)
-    params_new = buckets.buckets_to_tree(w_new, layout, params)
+    params_new = _rebuild(w_new, params)
     new_state = []
     for f in fields:
         if f == "clip":
@@ -145,8 +170,8 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
         elif f == "adam":
             new_state.append(AdamState(
                 step=step,
-                mu=buckets.buckets_to_tree(mu_new, layout, adam_state.mu),
-                nu=buckets.buckets_to_tree(nu_new, layout, adam_state.nu)))
+                mu=_rebuild(mu_new, adam_state.mu),
+                nu=_rebuild(nu_new, adam_state.nu)))
         elif f == "wd":
             new_state.append(())
         else:
@@ -161,7 +186,8 @@ def fused_apply(optimizer: GradientTransform, grads: Pytree, opt_state: Pytree,
 def epilogue_hbm_bytes(param_count: int, param_bytes: int, *,
                        family: str = "adamw", clip: bool = True,
                        weight_decay: bool = True, momentum: bool = True,
-                       carried_norm: bool = True, fused: bool) -> int:
+                       carried_norm: bool = True, fused: bool,
+                       resident: bool = True) -> int:
     """Modeled HBM bytes of one step's weight-space epilogue (perturb + tail).
 
     Enumerates the HBM passes of the actual code path: every
@@ -172,15 +198,17 @@ def epilogue_hbm_bytes(param_count: int, param_bytes: int, *,
     `carried_norm=True` models AsyncSAM, where the perturbation norm is
     carried state rather than a fresh reduction over the ascent gradient.
 
-    Scope: the fused side counts KERNEL-STREAMED bytes only — it assumes each
-    dtype bucket is already a contiguous buffer. Today's implementation
-    re-gathers buckets from the pytree around every kernel call
-    (`buckets.tree_to_buckets` concatenate + slice-back), and a Pallas
-    custom-call materializes its operands, so per-step gather/scatter copies
-    are extra traffic this model excludes; they disappear once bucketed
-    state persists across steps (ROADMAP item). The reduction reported by
-    perf_cell is therefore the steady-state ceiling of the fused path, not a
-    measurement.
+    The fused side models BOTH residency regimes. `resident=True` counts
+    kernel-streamed bytes only — training state lives as persistent dtype
+    buckets (`buckets.BucketedState`) that the kernels consume and donate
+    directly, so no conversion copies exist; this is the number
+    `benchmarks/perf_cell.py`'s trace-counted realized traffic must match.
+    `resident=False` models the gather/scatter-per-call regime: each kernel
+    call re-gathers its operand buckets from the pytree (concatenate) and
+    scatters results back (slice), each conversion costing read + write of
+    its payload — which is why the fused kernels alone never realized their
+    reduction before bucketed state persisted across steps. (The ascent-grad
+    gather is approximated at param dtype, matching the perturb terms.)
     """
     P = param_bytes               # one full pass over params/grads
     F = 4 * param_count           # one full pass over an fp32 state tree
@@ -199,6 +227,20 @@ def epilogue_hbm_bytes(param_count: int, param_bytes: int, *,
             total += P                      # epilogue write: w'
             if momentum:
                 total += 2 * F              # read m / write m'
+        if not resident:
+            # per-call bucket conversions: gather = read tree + write buffer,
+            # scatter = read buffer + write tree (2x payload each)
+            total += 2 * 3 * P              # perturb: gather g,w / scatter w_hat
+            if not carried_norm:
+                total += 2 * P              # fresh-norm sq_norm: gather g
+            else:
+                total += 2 * 2 * F          # ascent refresh dot_norms: gather
+                                            # a_t, a_{t-1} (fp32 carried state)
+            total += 2 * 3 * P              # apply: gather w,g / scatter w'
+            if family == "adamw":
+                total += 2 * 4 * F          # gather mu,nu / scatter mu',nu'
+            elif momentum:
+                total += 2 * 2 * F          # gather m / scatter m'
         return total
     # per-leaf path, pass by pass
     if not carried_norm:

@@ -35,6 +35,7 @@ import time
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (Compressor, MethodConfig, StalenessLedger, TrainState,
@@ -43,7 +44,7 @@ from repro.core import (Compressor, MethodConfig, StalenessLedger, TrainState,
 from repro.core.ascent import CompressionState
 from repro.core.api import LossFn
 from repro.optim import GradientTransform
-from repro.utils import trees
+from repro.utils import buckets, trees
 
 Pytree = Any
 
@@ -57,6 +58,12 @@ class ExecutorConfig:
     # flat-buffer fused perturb + optimizer epilogue on the descent lane;
     # None -> platform default (on for TPU, off for CPU — ops._resolve style)
     fused_update: Optional[bool] = None
+    # bucket-RESIDENT descent-lane state: params/moments live as persistent
+    # dtype buckets and the jitted descent step is buffer -> buffer (donated).
+    # None follows fused_update when the chain qualifies (uncompressed
+    # exchange + FusedSpec-recognized optimizer). The ascent hand-off stays
+    # pytree-shaped either way — the lane/wire contract is unchanged.
+    resident: Optional[bool] = None
     # deterministic test mode: block for every submitted ascent result before
     # the next harvest, so the tau schedule is timing-independent (step 0
     # unperturbed, tau=1 thereafter) — the hook parity tests use to compare
@@ -256,6 +263,12 @@ class AsyncSamExecutor:
         from repro.optim import configure_fused
         optimizer = configure_fused(optimizer, fused_update)
         method_cfg = dataclasses.replace(method_cfg, fused_update=fused_update)
+        resident = self.xcfg.resident
+        if resident is None:
+            resident = (bool(fused_update)
+                        and method_cfg.compressor == "none"
+                        and getattr(optimizer, "fused_spec", None) is not None)
+        self.resident = bool(resident)
         self.cfg = method_cfg
         self.ledger = StalenessLedger(max_staleness=self.xcfg.max_staleness)
         # lossy compression of the cross-resource hand-off (the perturbation
@@ -276,6 +289,8 @@ class AsyncSamExecutor:
         self._closed = False
         # held perturbation direction (host-side fp32 pytree)
         self._held: Optional[tuple[Pytree, float]] = None
+        # cached pytree-shaped zeros for steps with no held gradient
+        self._zeros: Optional[Pytree] = None
         self._exchange_meta: dict = {}
         self.timings = {"ascent": getattr(self._lane, "timings", []),
                         "descent": []}
@@ -318,10 +333,15 @@ class AsyncSamExecutor:
 
         # submit the next ascent job against the CURRENT params (it will be
         # one step old when used — Algorithm 1 line 3); the full-check comes
-        # first so a busy lane never costs the whole-model D2H materialization
+        # first so a busy lane never costs the whole-model D2H materialization.
+        # The lane/wire hand-off is pytree-shaped: bucket-resident params
+        # leave the buffer representation at this edge only — transferred as
+        # whole buckets and cut into numpy views on the host (host_portable),
+        # so residency adds no device-side view pass to the exchange.
         if not self._lane.full():
             rng = jax.random.fold_in(state.rng, state.step)
-            if self._lane.submit(self._gen, jax.device_get(state.params),
+            if self._lane.submit(self._gen,
+                                 buckets.host_portable(state.params),
                                  ascent_batch, rng, int(state.step)):
                 self._inflight += 1
 
@@ -329,7 +349,14 @@ class AsyncSamExecutor:
         if self._held is not None:
             g, norm = self._held
         else:
-            g, norm = trees.tree_zeros_like(state.params), 0.0
+            # pytree-shaped zeros either way, so the jitted descent keeps ONE
+            # input structure for `a` whether it came from the lane or here;
+            # built from abstract shapes once (no device view pass) and cached
+            if self._zeros is None:
+                sds = jax.eval_shape(lambda: buckets.to_portable(state.params))
+                self._zeros = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), sds)
+            g, norm = self._zeros, 0.0
         new_state, metrics = self._descent(
             state, descent_batch, g, np.float32(norm), np.bool_(have))
         jax.block_until_ready(new_state.params)
@@ -369,14 +396,16 @@ class AsyncSamExecutor:
         if ascent_batch is None:
             ascent_batch = descent_batch
         rng = state.rng
-        params = jax.device_get(state.params)
+        # probes run the raw (pytree) ascent fn — view resident params out
+        params = jax.device_get(buckets.to_portable(state.params))
         elapsed = self._lane.probe(params, jax.device_get(ascent_batch),
                                    rng, probes)
         n_asc = jax.tree.leaves(ascent_batch)[0].shape[0]
         t_slow = elapsed / probes / n_asc
 
         # descent lane per-sample time (reuse ascent_fn as the probe kernel)
-        d_in = place_tree(state.params, self.xcfg.descent_device)
+        d_in = place_tree(buckets.to_portable(state.params),
+                          self.xcfg.descent_device)
         db_in = place_tree(descent_batch, self.xcfg.descent_device)
         jax.block_until_ready(self._ascent_raw(d_in, db_in, rng)[0])
         t0 = time.perf_counter()

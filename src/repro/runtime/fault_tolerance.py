@@ -21,7 +21,7 @@ import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrainState
-from repro.utils import scalar_metrics
+from repro.utils import buckets, scalar_metrics
 
 log = logging.getLogger("repro.fault_tolerance")
 
@@ -64,15 +64,29 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
     must expose state()/restore() (see repro.data.pipeline). `on_restore`
     is called with the restored state after every rollback so stateful
     executors (the hetero lane's held ascent gradient) can reset.
+
+    Checkpoints stay PYTREE-shaped on disk regardless of the live state's
+    representation: bucket-resident state (utils.buckets.BucketedState) is
+    viewed out (`to_portable`) before every save — the manifest is stamped
+    with the bucket layout for provenance — and re-bucketed against the live
+    state's layout after every restore. A pre-resident-era checkpoint
+    therefore restores into a bucket-resident run unchanged, and vice versa.
     """
     rcfg = rcfg or ResilienceConfig()
     t_start = time.time()
     restarts = 0
     history: list = []
+    resident = buckets.is_resident(state)
+
+    def snapshot_extras() -> dict:
+        extras = {"pipeline": pipeline.state()}
+        if resident:
+            extras["bucket_layout"] = buckets.layout_stamp(state)
+        return extras
 
     # step 0 baseline checkpoint so the first restart always has a target
-    manager.save(int(state.step), state, extras={"pipeline": pipeline.state()},
-                 blocking=True)
+    manager.save(int(state.step), buckets.to_portable(state),
+                 extras=snapshot_extras(), blocking=True)
 
     while True:
         it = iter(pipeline)
@@ -90,8 +104,8 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                 step = int(state.step)
                 history.append(scalar_metrics(metrics))
                 if step % rcfg.save_every == 0 or step == n_steps:
-                    manager.save(step, state,
-                                 extras={"pipeline": pipeline.state()},
+                    manager.save(step, buckets.to_portable(state),
+                                 extras=snapshot_extras(),
                                  blocking=not rcfg.async_save)
             manager.wait()
             return RunReport(final_state=state, steps_done=step,
@@ -105,8 +119,11 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                 raise RuntimeError(
                     f"exceeded restart budget ({rcfg.max_restarts})") from e
             manager.wait()
-            state, extras = manager.restore(jax.eval_shape(lambda: state),
-                                            shardings=shardings)
+            restored, extras = manager.restore(
+                jax.eval_shape(lambda: buckets.to_portable(state)),
+                shardings=shardings)
+            state = (buckets.residentize(restored, like=state)
+                     if resident else restored)
             pipeline.restore(extras["pipeline"])
             if on_restore is not None:
                 on_restore(state)

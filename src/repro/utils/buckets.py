@@ -15,12 +15,23 @@ momentum, Adam moments, the AsyncSAM ascent gradient) is bucketed by the SAME
 grouping using its own leaf dtypes, so a bf16 param bucket can pair with an
 fp32 gradient bucket inside one single-pass kernel.
 
+Beyond per-call bucketing, `BucketedState` makes the flat buffers the
+*persistent* representation: a registered pytree whose leaves ARE the dtype
+buckets, so params / optimizer moments / the AsyncSAM ascent gradient can live
+buffer-shaped across steps (jit donation then aliases buffer to buffer and the
+per-call gather/scatter copies disappear). Model code that needs the pytree
+shape gets it from `.to_tree()` — contiguous slices of the buffer that XLA
+treats as aliasing views, reconstructed from the cached `BucketLayout`
+offsets. `to_portable` / `residentize` convert whole training states at the
+checkpoint/wire boundary, where the pytree shape stays the on-disk contract.
+
 `fused_path_enabled` is the one switch every fused-weight-space call site
 consults: explicit override > process default (`set_fused_default`, the test
 hook) > platform (on for TPU, off elsewhere — the `ops._resolve` convention).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Any, Optional
@@ -82,6 +93,49 @@ def bucket_layout(tree: Pytree) -> BucketLayout:
     return layout
 
 
+# ---------------------------------------------------------------------------
+# Gather/scatter copy accounting (the realized-traffic counterpart of
+# optim.fused.epilogue_hbm_bytes's model)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CopyStats:
+    """Bytes moved by explicit representation conversions.
+
+    A gather (`tree_to_buckets`) or scatter (`buckets_to_tree`) of N payload
+    bytes costs 2N HBM bytes (read source + write destination); single-leaf
+    groups are skipped (reshape of one leaf is a view, not a copy).
+    `BucketedState.to_tree()` views are NOT counted: they are contiguous
+    slices of the buffer that XLA aliases rather than materializes.
+
+    Conversions run at trace time, so tracing a step function under
+    `track_copies()` (e.g. with `jax.eval_shape`) tallies exactly the copies
+    that would be baked into the compiled program.
+    """
+    gather_bytes: int = 0    # HBM bytes of tree -> buffer concatenations
+    scatter_bytes: int = 0   # HBM bytes of buffer -> tree slice-backs
+    gathers: int = 0
+    scatters: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.gather_bytes + self.scatter_bytes
+
+
+_COPY_STATS: Optional[CopyStats] = None
+
+
+@contextlib.contextmanager
+def track_copies():
+    """Context manager: count gather/scatter conversion traffic within."""
+    global _COPY_STATS
+    prev, _COPY_STATS = _COPY_STATS, CopyStats()
+    try:
+        yield _COPY_STATS
+    finally:
+        _COPY_STATS = prev
+
+
 def tree_to_buckets(tree: Pytree, layout: BucketLayout) -> list[jax.Array]:
     """Concatenate `tree`'s leaves into one flat buffer per layout group.
 
@@ -96,6 +150,9 @@ def tree_to_buckets(tree: Pytree, layout: BucketLayout) -> list[jax.Array]:
         dt = parts[0].dtype
         assert all(p.dtype == dt for p in parts), \
             f"mixed dtypes within bucket {grp.dtype}: {[p.dtype for p in parts]}"
+        if len(parts) > 1 and _COPY_STATS is not None:
+            _COPY_STATS.gathers += 1
+            _COPY_STATS.gather_bytes += 2 * grp.size * jnp.dtype(dt).itemsize
         out.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts))
     return out
 
@@ -107,10 +164,140 @@ def buckets_to_tree(bufs: list[jax.Array], layout: BucketLayout,
     assert len(leaves) == layout.n_leaves
     new = list(leaves)
     for buf, grp in zip(bufs, layout.groups):
+        if len(grp.leaf_indices) > 1 and _COPY_STATS is not None:
+            _COPY_STATS.scatters += 1
+            _COPY_STATS.scatter_bytes += 2 * grp.size * jnp.dtype(buf.dtype).itemsize
         for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
             new[i] = (buf[off:off + size]
                       .reshape(layout.shapes[i]).astype(leaves[i].dtype))
     return jax.tree.unflatten(treedef, new)
+
+
+# ---------------------------------------------------------------------------
+# BucketedState — flat buffers as the persistent training-state representation
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BucketedState:
+    """A pytree whose *leaves* are the dtype buckets themselves.
+
+    Where a plain parameter tree has one leaf per tensor, a BucketedState has
+    one leaf per dtype bucket — so `jax.jit` donation aliases buffer to buffer
+    across steps, `jax.grad` through `.to_tree()` delivers gradients already
+    bucket-shaped, and generic pytree arithmetic (`jax.tree.map`,
+    `trees.global_norm`, optimizer `init`) operates on the buffers directly.
+    The layout (treedef + shapes + offsets) rides along as static aux data;
+    a `jax.tree.map` over a BucketedState therefore yields a congruent
+    BucketedState (e.g. `tree_zeros_like(params, f32)` -> fp32 moment buckets
+    with the same grouping). The view dtype of each leaf is its bucket's
+    buffer dtype — exact for params (buffers keep native dtypes) and for
+    congruent fp32 state trees alike.
+    """
+    buffers: tuple
+    layout: BucketLayout
+
+    def tree_flatten(self):
+        return tuple(self.buffers), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(buffers=tuple(children), layout=layout)
+
+    @classmethod
+    def from_tree(cls, tree: Pytree,
+                  layout: Optional[BucketLayout] = None) -> "BucketedState":
+        """Gather `tree` into resident buckets (one copy, at the boundary)."""
+        layout = layout or bucket_layout(tree)
+        return cls(buffers=tuple(tree_to_buckets(tree, layout)), layout=layout)
+
+    def to_tree(self) -> Pytree:
+        """Zero-copy pytree view: contiguous slices at the cached offsets.
+
+        Not counted by `track_copies` — XLA aliases a contiguous slice into
+        its consumer instead of materializing it, and differentiating through
+        this view transposes to cotangent accumulation directly into the
+        buffer, so neither direction adds a gather/scatter pass.
+        """
+        leaves: list = [None] * self.layout.n_leaves
+        for buf, grp in zip(self.buffers, self.layout.groups):
+            for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
+                leaves[i] = buf[off:off + size].reshape(self.layout.shapes[i])
+        return jax.tree.unflatten(self.layout.treedef, leaves)
+
+
+def is_bucketed(x) -> bool:
+    return isinstance(x, BucketedState)
+
+
+def tree_view(x):
+    """The pytree view of `x`: `.to_tree()` for a BucketedState, else `x`."""
+    return x.to_tree() if is_bucketed(x) else x
+
+
+def to_portable(tree: Pytree) -> Pytree:
+    """Replace every BucketedState node with its pytree view.
+
+    The result has the exact leaf structure a never-resident state would have
+    — the checkpoint / wire / serve boundary contract (PR 1-3 interop).
+    """
+    return jax.tree.map(tree_view, tree, is_leaf=is_bucketed)
+
+
+def host_portable(tree: Pytree) -> Pytree:
+    """`jax.device_get(to_portable(tree))` without the device-side view pass.
+
+    A resident node's buckets transfer as whole contiguous buffers (one D2H
+    per dtype bucket instead of one per leaf), then the pytree shape is cut
+    as numpy views on the host — zero device compute, zero host copies. This
+    is the hot-path form for per-step host hand-offs (the hetero/remote
+    ascent lane ships a params snapshot every exchange).
+    """
+    import numpy as np
+
+    def f(n):
+        if not is_bucketed(n):
+            return jax.device_get(n)
+        bufs = [np.asarray(jax.device_get(b)) for b in n.buffers]
+        leaves: list = [None] * n.layout.n_leaves
+        for buf, grp in zip(bufs, n.layout.groups):
+            for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
+                leaves[i] = buf[off:off + size].reshape(n.layout.shapes[i])
+        return jax.tree.unflatten(n.layout.treedef, leaves)
+
+    return jax.tree.map(f, tree, is_leaf=is_bucketed)
+
+
+def residentize(tree: Pytree, like: Pytree) -> Pytree:
+    """Match `like`'s residency: bucket each subtree of `tree` wherever `like`
+    holds a BucketedState (same layout), pass everything else through.
+
+    The inverse of `to_portable` against a live template — how a
+    pytree-shaped checkpoint re-enters a bucket-resident executor.
+    """
+    def f(n_like, n):
+        if is_bucketed(n_like):
+            return BucketedState.from_tree(n, layout=n_like.layout)
+        return n
+    return jax.tree.map(f, like, tree, is_leaf=is_bucketed)
+
+
+def is_resident(tree: Pytree) -> bool:
+    """True when any node of `tree` is a BucketedState."""
+    return any(is_bucketed(n)
+               for n in jax.tree.leaves(tree, is_leaf=is_bucketed))
+
+
+def layout_stamp(tree: Pytree) -> list[dict]:
+    """JSON-able provenance record of every resident node's bucket layout
+    (checkpoint manifests stamp this next to the pytree-shaped arrays)."""
+    out = []
+    for n in jax.tree.leaves(tree, is_leaf=is_bucketed):
+        if is_bucketed(n):
+            out.append({"n_leaves": n.layout.n_leaves,
+                        "groups": [{"dtype": g.dtype, "size": g.size}
+                                   for g in n.layout.groups]})
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -139,36 +326,58 @@ def fused_path_enabled(override: Optional[bool] = None) -> bool:
 # Bucketed weight-space primitives (thin sums over the per-bucket kernels)
 # ---------------------------------------------------------------------------
 
+def group_buffers(tree: Pytree, layout: Optional[BucketLayout] = None
+                  ) -> tuple[list[jax.Array], BucketLayout]:
+    """`tree` as per-group flat buffers: free for a BucketedState (they ARE
+    its leaves), one gather for a plain pytree. Callers thread `layout` so a
+    hot path never rebuilds it per call (it is only consulted for plain
+    trees; a BucketedState carries its own)."""
+    if is_bucketed(tree):
+        return list(tree.buffers), tree.layout
+    layout = layout or bucket_layout(tree)
+    return tree_to_buckets(tree, layout), layout
+
+
 def bucketed_sq_norm(tree: Pytree, layout: Optional[BucketLayout] = None,
                      *, impl: Optional[str] = None) -> jax.Array:
     """Global squared L2 norm via one single-pass kernel per bucket."""
-    layout = layout or bucket_layout(tree)
-    bufs = tree_to_buckets(tree, layout)
+    bufs, _ = group_buffers(tree, layout)
     parts = [ops.sq_norm(b, impl=impl) for b in bufs]
     return jnp.sum(jnp.stack(parts)) if parts else jnp.float32(0.0)
 
 
 def bucketed_axpy(alpha, x: Pytree, y: Pytree, *,
+                  layout: Optional[BucketLayout] = None,
                   impl: Optional[str] = None) -> Pytree:
-    """alpha * x + y on buckets (the perturbation axpy), dtypes of `y` kept."""
-    layout = bucket_layout(y)
-    xb = tree_to_buckets(x, layout)
-    yb = tree_to_buckets(y, layout)
+    """alpha * x + y on buckets (the perturbation axpy), dtypes of `y` kept.
+
+    Resident in, resident out: when `y` is a BucketedState the result stays
+    bucket-shaped (no scatter); a plain `y` keeps the gather/scatter-per-call
+    behavior with its layout threaded by the caller.
+    """
+    yb, layout = group_buffers(y, layout)
+    xb, _ = group_buffers(x, layout)
+    assert len(xb) == len(yb), (len(xb), len(yb))
     out = [ops.fused_axpy(alpha, xi, yi, impl=impl) for xi, yi in zip(xb, yb)]
+    if is_bucketed(y):
+        return BucketedState(buffers=tuple(out), layout=layout)
     return buckets_to_tree(out, layout, y)
 
 
-def bucketed_dot_norms(a: Pytree, b: Pytree, *, impl: Optional[str] = None
+def bucketed_dot_norms(a: Pytree, b: Pytree, *,
+                       layout: Optional[BucketLayout] = None,
+                       impl: Optional[str] = None
                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(<a,b>, ||a||^2, ||b||^2) in one HBM pass over (a, b) per bucket.
 
     The AsyncSAM ascent-state refresh needs all three (cosine metric + the
     carried ascent norm); the per-leaf composition streams both trees three
-    times.
+    times. Resident operands use their own buffers; plain trees use the
+    caller-threaded `layout` (no per-call layout rebuild).
     """
-    layout = bucket_layout(a)
-    ab = tree_to_buckets(a, layout)
-    bb = tree_to_buckets(b, layout)
+    ab, layout = group_buffers(a, layout)
+    bb, _ = group_buffers(b, layout)
+    assert len(ab) == len(bb), (len(ab), len(bb))
     parts = [ops.fused_dot_norms(ai, bi, impl=impl) for ai, bi in zip(ab, bb)]
     if not parts:
         z = jnp.float32(0.0)

@@ -16,6 +16,18 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
+# REPRO_FUSED=1 (scripts/tier1.sh --resident): force the fused flat-buffer
+# weight-space path on and run its kernels as real Pallas code in interpret
+# mode, so the bucket-resident parity/interop tests exercise the kernel
+# implementations on CPU instead of the jnp oracles. Tests that pin explicit
+# fused=False/True flags are unaffected (explicit override beats the default).
+if os.environ.get("REPRO_FUSED") == "1":
+    from repro.kernels import ops as _ops
+    from repro.utils import buckets as _buckets
+
+    _buckets.set_fused_default(True)
+    _ops.set_default_impl("pallas_interpret")
+
 
 @pytest.fixture(scope="session")
 def repo_root() -> pathlib.Path:

@@ -6,6 +6,11 @@ summation-order tolerance for fp32 params; bf16 params differ only by the
 per-leaf path's intermediate bf16 round-trips, which the fp32 kernels skip).
 On CPU the kernels dispatch to the jnp oracles (ops._resolve), so these tests
 exercise the full bucketing + chain-recognition + state-rebuild machinery.
+
+The bucket-RESIDENT tests additionally pin the PR-4 invariants: a resident
+step traces with ZERO gather/scatter conversion copies, steps allocate no
+extra device buffers, and pytree-shaped checkpoints round-trip through
+resident executors bitwise (per-leaf save -> resident restore and back).
 """
 import json
 
@@ -15,6 +20,7 @@ import numpy as np
 import pytest
 
 from repro import optim
+from repro.checkpoint import CheckpointManager
 from repro.core import MethodConfig, init_train_state, make_method
 from repro.core.perturb import perturb
 from repro.engine import Engine, FusedExecutor, StalenessTelemetry
@@ -219,7 +225,12 @@ def test_method_steps_fused_matches_per_leaf(method, opt_name, opt_kw):
 
 
 def test_fused_executor_flag_resolution_and_fit():
-    """fused_update=True on the executor drives the loss down like False."""
+    """fused_update=True on the executor drives the loss down like False.
+
+    A forced-fused executor goes bucket-RESIDENT by default (the buffers are
+    the source of truth); its final params are viewed back to the pytree
+    shape for the comparison.
+    """
     params = _params()
     batches = [_batch(seed=s) for s in range(20)]
     finals = {}
@@ -228,12 +239,15 @@ def test_fused_executor_flag_resolution_and_fit():
                            optim.adamw(0.01, clip_norm=1.0),
                            donate=False, fused_update=fused)
         assert ex.fused_update is fused
+        assert ex.resident is fused     # resident follows the resolved switch
         with ex:
             state = ex.init_state(params, jax.random.PRNGKey(0))
+            assert buckets.is_resident(state.params) is fused
             report = Engine(ex, batches).fit(state, 20)
         assert report.metrics_history[-1]["loss"] < report.metrics_history[0]["loss"]
         finals[fused] = report.final_state
-    _allclose_trees(finals[False].params, finals[True].params, **F32_TOL)
+    _allclose_trees(finals[False].params,
+                    buckets.to_portable(finals[True].params), **F32_TOL)
 
 
 def test_fused_executor_default_off_on_cpu():
@@ -265,6 +279,203 @@ def test_staleness_telemetry_jsonl_sink(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# bucket-resident state: buffer-to-buffer steps, no conversions, interop
+# ---------------------------------------------------------------------------
+
+def _resident_executor(method="async_sam", **kw):
+    return FusedExecutor(_loss_fn, MethodConfig(name=method, rho=0.05),
+                         optim.adamw(0.01, clip_norm=1.0),
+                         fused_update=True, resident=True, **kw)
+
+
+def test_resident_state_representation():
+    ex = _resident_executor(donate=False)
+    state = ex.init_state(_params(), jax.random.PRNGKey(0))
+    assert buckets.is_bucketed(state.params)
+    adam = state.opt_state[1]
+    assert buckets.is_bucketed(adam.mu) and buckets.is_bucketed(adam.nu)
+    assert buckets.is_bucketed(state.method_state.ascent_grad)
+    # the view reproduces the exact pytree contract (structure/shape/dtype)
+    view = buckets.to_portable(state.params)
+    ref = _params()
+    assert jax.tree.structure(view) == jax.tree.structure(ref)
+    for a, b in zip(jax.tree.leaves(view), jax.tree.leaves(ref)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    ex.close()
+
+
+@pytest.mark.parametrize("method", ["sam", "async_sam"])
+@pytest.mark.parametrize("opt_name,opt_kw", [
+    ("sgd", dict(momentum=0.9, weight_decay=1e-4, clip_norm=1.0)),
+    ("adamw", dict(clip_norm=1.0)),
+])
+def test_resident_matches_per_leaf(method, opt_name, opt_kw):
+    """Bucket-resident fit == per-leaf fit across sgd/adamw x sam/async_sam."""
+    params = _params()
+    batches = [_batch(seed=s) for s in range(6)]
+    finals, metrics = {}, {}
+    for resident in (False, True):
+        ex = FusedExecutor(_loss_fn, MethodConfig(name=method, rho=0.05),
+                           optim.make_optimizer(opt_name, 0.05, **opt_kw),
+                           donate=False, fused_update=resident,
+                           resident=resident)
+        with ex:
+            state = ex.init_state(params, jax.random.PRNGKey(0))
+            report = Engine(ex, batches).fit(state, 6)
+        finals[resident] = buckets.to_portable(report.final_state)
+        metrics[resident] = report.metrics_history[-1]
+    assert jax.tree.structure(finals[False]) == jax.tree.structure(finals[True])
+    _allclose_trees(finals[False], finals[True], **F32_TOL)
+    np.testing.assert_allclose(metrics[False]["loss"], metrics[True]["loss"],
+                               rtol=1e-5)
+
+
+def test_resident_step_traces_with_zero_conversion_copies():
+    """The whole resident step is buffer -> buffer: tracing it performs no
+    tree_to_buckets/buckets_to_tree copies, while the same step over plain
+    pytree state re-gathers buckets around every kernel call."""
+    batch = _batch()
+    realized = {}
+    for resident in (False, True):
+        ex = FusedExecutor(_loss_fn, MethodConfig(name="async_sam", rho=0.05),
+                           optim.adamw(0.01, clip_norm=1.0), donate=False,
+                           fused_update=True, resident=resident)
+        sds = ex.abstract_state(_params, jax.random.PRNGKey(0))
+        with buckets.track_copies() as stats:
+            jax.eval_shape(ex._step_raw, sds, batch)
+        realized[resident] = stats
+        ex.close()
+    assert realized[True].total_bytes == 0, realized[True]
+    assert realized[True].gathers == realized[True].scatters == 0
+    assert realized[False].gathers >= 4 and realized[False].scatters >= 2
+    # the modeled resident=False overhead and the trace agree on the sign
+    # and rough size of the gap (the model folds the fp32 ascent-grad gather
+    # to param dtype, so exact equality is not expected)
+    n = trees.tree_size(_params())
+    modeled_gap = (epilogue_hbm_bytes(n, 4 * n, fused=True, resident=False)
+                   - epilogue_hbm_bytes(n, 4 * n, fused=True, resident=True))
+    assert 0.5 * modeled_gap <= realized[False].total_bytes <= 2.0 * modeled_gap
+
+
+def test_resident_steps_allocate_no_extra_buffers():
+    """Donated resident steps are allocation-neutral: after warmup, the count
+    of live device arrays is identical from step to step (buffer in, buffer
+    out — no gather/scatter temporaries survive, nothing accumulates)."""
+    ex = _resident_executor(donate=True, block=True)
+    state = ex.init_state(_params(), jax.random.PRNGKey(0))
+    batches = [_batch(seed=s) for s in range(6)]
+    metrics = None
+    with ex:
+        for b in batches[:2]:          # warmup: compile + constant caches
+            state, metrics = ex.step(state, b)
+        baseline = len(jax.live_arrays())
+        for b in batches[2:]:
+            state, metrics = ex.step(state, b)
+            assert len(jax.live_arrays()) == baseline
+    del metrics
+
+
+def test_checkpoint_interop_per_leaf_and_resident(tmp_path):
+    """Pytree checkpoints are the interchange format: a per-leaf (PR 1-3-era)
+    save restores into a bucket-resident executor and resumes bitwise-equal
+    to the directly-converted state; a resident save restores back into a
+    per-leaf executor unchanged."""
+    params = _params()
+    batches = [_batch(seed=s) for s in range(8)]
+    mcfg = MethodConfig(name="async_sam", rho=0.05)
+    opt = lambda: optim.adamw(0.01, clip_norm=1.0)  # noqa: E731
+
+    # --- per-leaf run to step 3, saved pytree-shaped (the PR 1-3 format)
+    ex_pl = FusedExecutor(_loss_fn, mcfg, opt(), donate=False,
+                          fused_update=False, resident=False)
+    st_pl = ex_pl.init_state(params, jax.random.PRNGKey(0))
+    for b in batches[:3]:
+        st_pl, _ = ex_pl.step(st_pl, b)
+    mgr = CheckpointManager(tmp_path / "ck", keep=3)
+    mgr.save(3, st_pl)
+
+    # --- restore into a bucket-resident executor via the portable edge
+    ex_r = _resident_executor(donate=False)
+    template = ex_r.init_state(params, jax.random.PRNGKey(0))
+    like = jax.eval_shape(lambda: buckets.to_portable(template))
+    restored, _ = mgr.restore(like, step=3)
+    st_restored = buckets.residentize(restored, like=template)
+    st_direct = buckets.residentize(st_pl, like=template)
+
+    losses = {}
+    finals = {}
+    for tag, st in [("restored", st_restored), ("direct", st_direct)]:
+        cur, ls = st, []
+        for b in batches[3:6]:
+            cur, m = ex_r.step(cur, b)
+            ls.append(np.asarray(m["loss"]))
+        losses[tag] = ls
+        finals[tag] = cur
+    # bitwise: restore went through .npy files but the values are identical,
+    # and the resident steps are deterministic
+    for a, b in zip(losses["restored"], losses["direct"]):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(buckets.to_portable(finals["restored"])),
+                    jax.tree.leaves(buckets.to_portable(finals["direct"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # --- and back: resident state saves pytree-shaped, restores per-leaf
+    mgr.save(6, buckets.to_portable(finals["restored"]))
+    back, _ = mgr.restore(jax.eval_shape(lambda: st_pl), step=6)
+    assert jax.tree.structure(back) == jax.tree.structure(st_pl)
+    st_after, m = ex_pl.step(back, batches[6])
+    assert np.isfinite(float(m["loss"]))
+    ex_pl.close()
+    ex_r.close()
+
+
+def test_run_resilient_converts_resident_state_at_the_edge(tmp_path):
+    """Engine.fit + CheckpointCallback on a resident executor writes pytree
+    checkpoints (layout-stamped) and survives an injected crash by
+    re-residentizing the restored state."""
+    from repro.engine import CheckpointCallback
+    from repro.runtime import ResilienceConfig
+
+    class ListPipe(list):
+        def state(self):
+            return {"cursor": 0}
+
+        def restore(self, s):
+            pass
+
+    batches = ListPipe([_batch(seed=s) for s in range(8)])
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 5 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected")
+
+    ex = _resident_executor(donate=False)
+    state = ex.init_state(_params(), jax.random.PRNGKey(0))
+    mgr = CheckpointManager(tmp_path / "ck", keep=5)
+    cb = CheckpointCallback(mgr, ResilienceConfig(save_every=4,
+                                                  async_save=False))
+    with ex:
+        report = Engine(ex, batches, [cb]).fit(state, 8,
+                                               failure_injector=injector)
+    assert report.steps_done == 8 and report.restarts == 1
+    assert buckets.is_resident(report.final_state.params)
+    # on-disk: pytree-shaped arrays + the layout stamp in the manifest
+    d = mgr.root / "step_00000008"
+    manifest = json.loads((d / "manifest.json").read_text())
+    paths = [rec["path"] for rec in manifest["leaves"]]
+    plain = FusedExecutor(_loss_fn, MethodConfig(name="async_sam", rho=0.05),
+                          optim.adamw(0.01, clip_norm=1.0), donate=False,
+                          fused_update=False)
+    plain_paths = trees.tree_paths(
+        plain.init_state(_params(), jax.random.PRNGKey(0)))
+    plain.close()
+    assert paths == plain_paths
+    assert manifest["extras"]["bucket_layout"], "resident saves are stamped"
+
+
+# ---------------------------------------------------------------------------
 # modeled epilogue bytes (perf_cell artifact contract)
 # ---------------------------------------------------------------------------
 
@@ -278,3 +489,50 @@ def test_modeled_epilogue_reduction_at_least_2x(family, param_bytes_per):
     unfused = epilogue_hbm_bytes(n, param_bytes_per * n, fused=False, **kw)
     fused = epilogue_hbm_bytes(n, param_bytes_per * n, fused=True, **kw)
     assert unfused / fused >= 2.0, (family, param_bytes_per, unfused / fused)
+
+
+@pytest.mark.parametrize("family", ["adamw", "sgd"])
+@pytest.mark.parametrize("carried_norm", [True, False])
+def test_modeled_nonresident_fused_forfeits_the_win(family, carried_norm):
+    """resident=False models the gather/scatter-per-call regime: the kernels'
+    reduction is eaten by conversion copies (~1x unfused or worse) — exactly
+    the gap bucket residency closes."""
+    n = 1_000_000
+    kw = dict(family=family, clip=True, weight_decay=True, momentum=True,
+              carried_norm=carried_norm)
+    unfused = epilogue_hbm_bytes(n, 4 * n, fused=False, **kw)
+    ceiling = epilogue_hbm_bytes(n, 4 * n, fused=True, resident=True, **kw)
+    realized = epilogue_hbm_bytes(n, 4 * n, fused=True, resident=False, **kw)
+    assert ceiling < unfused
+    assert realized > ceiling
+    # the non-resident "win" is no better than ~1.1x of per-leaf
+    assert unfused / realized < 1.1, (family, carried_norm, unfused / realized)
+
+
+def test_bucketed_primitives_accept_threaded_layout_and_resident_operands():
+    a, b = _params(), _grads(_params())
+    layout = buckets.bucket_layout(a)
+    # threading the cached layout changes nothing numerically
+    np.testing.assert_allclose(
+        float(buckets.bucketed_sq_norm(a, layout)),
+        float(buckets.bucketed_sq_norm(a)), rtol=1e-6)
+    d1 = buckets.bucketed_dot_norms(a, b, layout=layout)
+    d2 = buckets.bucketed_dot_norms(a, b)
+    for x, y in zip(d1, d2):
+        np.testing.assert_allclose(float(x), float(y), rtol=1e-6)
+    # resident operands use their own buffers — same numbers, zero gathers
+    ra = buckets.BucketedState.from_tree(a, layout)
+    rb = buckets.BucketedState.from_tree(b, layout)
+    with buckets.track_copies() as stats:
+        d3 = buckets.bucketed_dot_norms(ra, rb)
+        sq = buckets.bucketed_sq_norm(ra)
+    assert stats.gathers == 0
+    for x, y in zip(d3, d2):
+        np.testing.assert_allclose(float(x), float(y), rtol=1e-6)
+    np.testing.assert_allclose(float(sq), float(trees.tree_sq_norm(a)),
+                               rtol=1e-6)
+    # resident axpy stays resident
+    out = buckets.bucketed_axpy(jnp.float32(0.5), rb, ra)
+    assert buckets.is_bucketed(out)
+    _allclose_trees(out.to_tree(),
+                    jax.tree.map(lambda x, y: 0.5 * y + x, a, b), **F32_TOL)
