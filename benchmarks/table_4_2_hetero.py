@@ -11,12 +11,21 @@ Runs through `Engine.fit` with the HeteroExecutor (the same path as
 `run_remote()` adds the multi-host lane: the same schedule with the ascent
 gradient crossing a real socket to a spawned `repro.service.ascent_server`
 subprocess (the `--executor remote --serve-ascent` path), reporting the
-*measured* wire bytes per exchange against the `Compressor.wire_bytes` +
-`protocol.grad_frame_bytes` model — the two must agree exactly for the
-gradient-return frame.
+*measured* wire bytes per exchange against the byte models — exact-match
+asserted in BOTH directions: the gradient-return frame against
+`Compressor.wire_bytes` + `protocol.grad_frame_bytes`, and the JOB frame
+(full snapshot or delta-encoded, per `--job-compress`) against
+`protocol.job_frame_bytes`.
+
+`run_wire_budget()` sweeps the three JOB encodings through short measured
+loopback runs, then models the olmo-1b wire budget per exchange
+(fp32 snapshot vs int8 delta vs topk delta) from abstract params — the
+artifact behind the README wire-budget table and the >=4x JOB-direction
+acceptance claim.
 """
 from __future__ import annotations
 
+import json
 import pathlib
 
 import jax
@@ -34,6 +43,8 @@ from repro.service import protocol
 RATIOS = [1, 2, 3, 5]     # b / b'
 TELEMETRY_DIR = (pathlib.Path(__file__).resolve().parents[1]
                  / "artifacts" / "telemetry")
+PERF_DIR = (pathlib.Path(__file__).resolve().parents[1]
+            / "artifacts" / "perf")
 
 
 def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
@@ -71,14 +82,17 @@ def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
 
 
 def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
+               job_compress: str = "int8", job_delta: bool = True,
                verbose: bool = True) -> dict:
     """Multi-host lane: ascent over a real socket (loopback subprocess).
 
-    Reports measured wire traffic per exchange vs the modeled GRAD frame
-    length (`protocol.grad_frame_bytes` on top of `Compressor.wire_bytes`).
-    The server holds `repro.service.testing:mlp_loss` — the same generic
-    w{i}/b{i} MLP math as `benchmarks.common.mlp_loss`, importable from the
-    subprocess regardless of cwd.
+    Reports measured wire traffic per exchange vs the byte models, exact in
+    both directions: GRAD (`protocol.grad_frame_bytes` on top of
+    `Compressor.wire_bytes`) and JOB (`protocol.job_frame_bytes` — full
+    snapshot and, when `job_compress`/`job_delta` enable it, the
+    delta-encoded form). The server holds `repro.service.testing:mlp_loss`
+    — the same generic w{i}/b{i} MLP math as `benchmarks.common.mlp_loss`,
+    importable from the subprocess regardless of cwd.
     """
     frac = 0.5
     mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac,
@@ -90,7 +104,8 @@ def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
     meter = ThroughputMeter()
     telemetry = StalenessTelemetry(
         print_summary=False,
-        jsonl_path=TELEMETRY_DIR / f"table_4_2_remote_{compressor}.jsonl")
+        jsonl_path=TELEMETRY_DIR
+        / f"table_4_2_remote_{compressor}_job_{job_compress}.jsonl")
     # calibrate=True doubles as the lane warmup: the pre-fit probe pays the
     # server spawn + connect + jit compile in blocking round trips, so the
     # timed loop below measures the steady-state exchange, not startup
@@ -98,24 +113,62 @@ def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
                         calibration_probes=1,
                         exec_cfg=ExecutorConfig(
                             max_staleness=3, serve_ascent=True,
+                            job_compress=job_compress, job_delta=job_delta,
                             loss_spec="repro.service.testing:mlp_loss")) as ex:
         state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
                               jax.random.PRNGKey(1))
         report = Engine(ex, batches, [meter, telemetry]).fit(
             state, steps, warmup=1)
         client = ex.client
-        grad_template = jax.device_get(mlp_init(jax.random.PRNGKey(0)))
+        params_t = jax.device_get(mlp_init(jax.random.PRNGKey(0)))
+        ascent_t = jax.device_get(batches[0]["ascent"])
+        # steady-state jobs carry the ascent batch trimmed to the CALIBRATED
+        # b' (HeteroExecutor._cap_ascent); the one snapshot JOB was the
+        # uncapped calibration probe — model each with its actual shapes
+        target = max(1, int(round(batch * min(frac, ex.calibrated_fraction
+                                              or frac))))
+        ascent_capped = jax.tree.map(lambda x: x[:target], ascent_t)
+        rng_t = np.asarray(jax.device_get(jax.random.PRNGKey(1)))
         comp = Compressor(kind=compressor, topk_fraction=mcfg.topk_fraction)
-        modeled = protocol.grad_frame_bytes(comp, grad_template)
+        modeled = protocol.grad_frame_bytes(comp, params_t)
         measured = client.wire_bytes_per_exchange
+        delta_active = job_delta and job_compress != "none"
+        # a snapshot is either the uncapped calibration probe or a capped
+        # fit-loop job (job_compress none every step; delta runs only on a
+        # resync fallback) — both shapes are legal on the wire
+        snap_modeled = {protocol.job_frame_bytes(
+            job_compress, params_t, a, rng_t, delta=False)
+            for a in (ascent_t, ascent_capped)}
+        job_modeled = {"snapshot": max(snap_modeled)}
+        if delta_active:
+            job_modeled[job_compress] = protocol.job_frame_bytes(
+                job_compress, params_t, ascent_capped, rng_t, delta=True,
+                topk_fraction=mcfg.topk_fraction)
+        # measured == modeled, asserted per job kind seen on the wire
+        for kind, measured_job in client.job_frame_measured.items():
+            if kind == "snapshot":
+                assert measured_job in snap_modeled, \
+                    (measured_job, snap_modeled)
+            else:
+                assert measured_job == job_modeled[kind], \
+                    (kind, measured_job, job_modeled)
         out = {
             "val_acc": accuracy(report.final_state.params, val),
             "epoch_time_s": sum(meter.step_times),
             "exchanges": client.exchanges,
             "grad_frame_measured": measured,
             "grad_frame_modeled": modeled,
-            "payload_modeled": comp.wire_bytes(grad_template),
-            "job_frame_bytes": client.last_wire_out_bytes,
+            "payload_modeled": comp.wire_bytes(params_t),
+            "job_compress": job_compress,
+            "job_delta": delta_active,
+            "job_frame_measured": dict(client.job_frame_measured),
+            "job_frame_modeled": job_modeled,
+            "job_snapshot_jobs": client.job_encoder.snapshot_jobs,
+            "job_delta_jobs": client.job_encoder.delta_jobs,
+            # steady-state per-exchange split (the delta form once synced,
+            # else the snapshot): the JOB/GRAD byte report
+            "job_bytes_per_exchange": client.last_wire_out_bytes,
+            "grad_bytes_per_exchange": client.last_wire_in_bytes,
         }
         # steady-state RTT from the per-step records: client.timings also
         # holds the calibration warmup (connect + server jit, ~30x larger)
@@ -130,13 +183,99 @@ def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
         print(f"table_4_2_remote,wire,grad_frame_measured="
               f"{out['grad_frame_measured']},grad_frame_modeled="
               f"{out['grad_frame_modeled']},payload_modeled="
-              f"{out['payload_modeled']},job_frame={out['job_frame_bytes']},"
+              f"{out['payload_modeled']},"
+              f"job={out['job_bytes_per_exchange']},"
+              f"grad={out['grad_bytes_per_exchange']},"
               f"rtt_mean_s={out['rtt_mean_s']:.4f}")
+        print(f"table_4_2_remote,job_wire,compress={job_compress},"
+              f"measured={out['job_frame_measured']},"
+              f"modeled={out['job_frame_modeled']}")
         print(f"table_4_2_remote,claim_wire_model_exact,"
               f"{'PASS' if out['grad_frame_measured'] == out['grad_frame_modeled'] else 'FAIL'}")
+    return out
+
+
+def run_wire_budget(steps: int = 40, batch: int = 128,
+                    verbose: bool = True) -> dict:
+    """JOB-direction wire budget: measured sweep + modeled olmo-1b table.
+
+    Three short loopback runs (one per JOB encoding) assert measured ==
+    modeled `job_frame_bytes` on the live wire; the olmo-1b budget is then
+    modeled from abstract params (`jax.eval_shape`) at full scale — the
+    numbers in the README wire-budget table and
+    `artifacts/perf/olmo-1b_remote_wire.json`. Asserts the acceptance
+    claim: int8 delta cuts the JOB-direction (params) bytes >= 4x vs the
+    fp32 snapshot, both measured (MLP loopback) and modeled (olmo-1b).
+    """
+    measured = {}
+    for enc in ("none", "int8", "topk"):
+        r = run_remote(steps=steps, batch=batch, compressor="int8",
+                       job_compress=enc, job_delta=(enc != "none"),
+                       verbose=False)
+        measured[enc] = {
+            "job_frame_measured": r["job_frame_measured"],
+            "job_frame_modeled": r["job_frame_modeled"],
+            "grad_frame_measured": r["grad_frame_measured"],
+        }
+        if verbose:
+            print(f"table_4_2_wire,{enc},measured={r['job_frame_measured']},"
+                  f"modeled={r['job_frame_modeled']}")
+
+    # params-direction ratio on the loopback MLP: the breakdown's params
+    # term is batch-independent, and run_remote already asserted measured ==
+    # modeled frame-for-frame, so this ratio is pinned to the live wire
+    params_t = jax.device_get(mlp_init(jax.random.PRNGKey(0)))
+    ascent_t = jax.device_get(slice_ascent_batch(
+        next(iter(TASK.train_batches(batch, 1))), 0.5))
+    rng_t = np.asarray(jax.device_get(jax.random.PRNGKey(1)))
+    m_snap = protocol.job_frame_breakdown(
+        "none", params_t, ascent_t, rng_t, delta=False)["params"]
+    m_i8 = protocol.job_frame_breakdown(
+        "int8", params_t, ascent_t, rng_t, delta=True)["params"]
+    measured_ratio = m_snap / m_i8
+    assert measured_ratio >= 4.0, (m_snap, m_i8)
+
+    # modeled olmo-1b budget from abstract shapes (no weights materialized)
+    from repro.configs import get_config
+    from repro.models import batch_spec, build_model
+    from repro.models.config import SHAPES
+    cfg = get_config("olmo-1b")
+    bundle = build_model(cfg)
+    params_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    ascent_sds = batch_spec(cfg, SHAPES["train_4k"],
+                            ascent_fraction=0.25)["ascent"]
+    rng_sds = jax.ShapeDtypeStruct((2,), np.uint32)
+    olmo = {}
+    for enc, delta in (("none", False), ("int8", True), ("topk", True)):
+        olmo[enc] = protocol.job_frame_breakdown(
+            enc, params_sds, ascent_sds, rng_sds, delta=delta,
+            topk_fraction=0.01)
+    modeled_ratio = olmo["none"]["params"] / olmo["int8"]["params"]
+    assert modeled_ratio >= 4.0, olmo
+    out = {
+        "measured_mlp": measured,
+        "measured_job_params_ratio_int8": measured_ratio,
+        "olmo_1b_modeled": olmo,
+        "olmo_1b_job_params_ratio_int8": modeled_ratio,
+        "olmo_1b_job_frame_ratio_int8":
+            olmo["none"]["frame"] / olmo["int8"]["frame"],
+    }
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    with open(PERF_DIR / "olmo-1b_remote_wire.json", "w") as f:
+        json.dump(out, f, indent=1)
+    if verbose:
+        gb = 1 << 30
+        print(f"table_4_2_wire,olmo-1b,snapshot="
+              f"{olmo['none']['frame'] / gb:.3f}GiB,int8_delta="
+              f"{olmo['int8']['frame'] / gb:.3f}GiB,topk_delta="
+              f"{olmo['topk']['frame'] / gb:.4f}GiB")
+        print(f"table_4_2_wire,claim_job_4x,"
+              f"{'PASS' if min(measured_ratio, modeled_ratio) >= 4.0 else 'FAIL'},"
+              f"measured={measured_ratio:.2f}x,modeled={modeled_ratio:.2f}x")
     return out
 
 
 if __name__ == "__main__":
     run()
     run_remote()
+    run_wire_budget()

@@ -7,7 +7,12 @@
 #   ./scripts/tier1.sh --service             # multi-host ascent service lane
 #                                            # (loopback tests with a spawned
 #                                            # server subprocess; hard timeout
-#                                            # so a wedged socket can't hang)
+#                                            # so a wedged socket can't hang).
+#                                            # Runs with REPRO_KERNELS=interpret
+#                                            # so the JOB delta-encode kernels
+#                                            # execute as Pallas interpret-mode
+#                                            # code, covering the delta/resync
+#                                            # tests on the kernel path
 #   ./scripts/tier1.sh --resident            # bucket-resident lane: fused
 #                                            # parity + checkpoint-interop
 #                                            # tests with REPRO_FUSED=1, i.e.
@@ -29,6 +34,6 @@ fi
 if [[ "${1:-}" == "--service" ]]; then
   shift
   exec timeout --signal=TERM --kill-after=30 900 \
-    python -m pytest -q tests/test_service.py "$@"
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_service.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -14,6 +14,7 @@ contract; `Engine.fit` drives any of them with the same callbacks.
 """
 from repro.engine.api import (  # noqa: F401
     ENGINE_METRIC_KEYS,
+    ENGINE_OPTIONAL_METRIC_KEYS,
     FitReport,
     StepExecutor,
     cost_analysis_dict,

@@ -39,6 +39,18 @@ Pytree = Any
 #:                to (or is) plain SGD
 ENGINE_METRIC_KEYS = ("loss", "grad_norm", "tau", "perturbed")
 
+#: Optional keys an executor MAY emit, only on steps where they are real
+#: measurements (callbacks must tolerate their absence). Today these come
+#: from the remote ascent lane, on the step that harvested an exchange:
+#:   wire_bytes — measured bytes of that JOB+GRAD exchange (job + grad sum,
+#:                kept for backward compat with pre-split telemetry)
+#:   job_bytes  — the JOB frame (params direction out: full snapshot or
+#:                delta-encoded bucket sections)
+#:   grad_bytes — the GRAD frame (compressed ascent gradient back)
+#:   rtt_s      — round-trip seconds of that exchange
+ENGINE_OPTIONAL_METRIC_KEYS = ("wire_bytes", "job_bytes", "grad_bytes",
+                               "rtt_s")
+
 
 @runtime_checkable
 class StepExecutor(Protocol):

@@ -21,6 +21,7 @@ from typing import Callable, Optional, Union
 
 from repro.checkpoint import CheckpointManager
 from repro.core import TrainState
+from repro.engine.api import ENGINE_OPTIONAL_METRIC_KEYS
 from repro.runtime import ResilienceConfig
 from repro.utils import scalar_metrics
 
@@ -127,12 +128,16 @@ class StalenessTelemetry(Callback):
     crashed run keeps its trace) — the input `benchmarks/fig3_throughput.py`
     and `benchmarks/table_4_2_hetero.py` use to plot straggler-degradation
     curves. When the remote ascent lane is active (`RemoteExecutor`), the
-    step metrics also carry `wire_bytes` (measured bytes of the JOB+GRAD
-    exchange) and `rtt_s`, and each record gains those fields.
+    step metrics also carry the `ENGINE_OPTIONAL_METRIC_KEYS` wire telemetry
+    — `wire_bytes` (measured bytes of the JOB+GRAD exchange), its
+    per-direction split `job_bytes`/`grad_bytes`, and `rtt_s` — and each
+    record gains those fields, so the JOB-direction win of delta-encoded
+    payloads is visible per step while `wire_bytes` stays the sum for
+    backward compatibility.
     """
 
     #: metric keys recorded per step when the executor emits them (remote lane)
-    OPTIONAL_KEYS = ("wire_bytes", "rtt_s")
+    OPTIONAL_KEYS = ENGINE_OPTIONAL_METRIC_KEYS
 
     def __init__(self, print_summary: bool = True,
                  jsonl_path: Union[str, pathlib.Path, None] = None):

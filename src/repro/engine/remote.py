@@ -21,8 +21,12 @@ Wiring (ExecutorConfig fields):
                    degrades to SGD-past-max-staleness and still completes.
 
 Step metrics additionally carry `wire_bytes` (measured bytes of the last
-JOB+GRAD exchange) and `rtt_s`, which `StalenessTelemetry(jsonl_path=...)`
-streams per step.
+JOB+GRAD exchange), its per-direction split `job_bytes`/`grad_bytes`, and
+`rtt_s`, which `StalenessTelemetry(jsonl_path=...)` streams per step. The
+JOB direction is delta-encoded against the server's shadow of the
+last-synced params when `ExecutorConfig.job_compress` is "int8"/"topk"
+(`service.delta`); `--job-compress none` keeps full fp32 snapshots and the
+pinned lockstep remote==hetero parity.
 """
 from __future__ import annotations
 
@@ -72,7 +76,15 @@ class RemoteExecutor(HeteroExecutor):
             Compressor(kind=method_cfg.compressor,
                        topk_fraction=method_cfg.topk_fraction),
             connect_timeout_s=xcfg.connect_timeout_s,
-            reconnect_backoff_s=xcfg.reconnect_backoff_s)
+            reconnect_backoff_s=xcfg.reconnect_backoff_s,
+            # JOB-direction encoding (ExecutorConfig.job_compress/job_delta):
+            # delta+quantized params out when the server supports it, full
+            # snapshots otherwise. Lockstep runs retry an interrupted
+            # exchange as a snapshot of the encoder's shadow, so a mid-fit
+            # server kill stays bitwise transparent to the schedule.
+            job_encoding=xcfg.job_compress,
+            job_delta=xcfg.job_delta,
+            retry_inflight=xcfg.lockstep)
         try:
             super().__init__(loss_fn, method_cfg, optimizer, exec_cfg=xcfg,
                              calibrate=calibrate,

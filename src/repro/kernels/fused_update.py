@@ -6,10 +6,15 @@ re-streaming every parameter element through HBM. These kernels collapse the
 whole optimizer tail into ONE pass per dtype bucket: read (w, g, state),
 write (w', state'), everything else lives in VMEM registers.
 
-  sgd_epilogue    w' = w - lr * d,  d = nesterov/momentum(clip*g + wd*w)
-  adamw_epilogue  w' = w - lr * ((mu'/c1)/(sqrt(nu'/c2)+eps) + wd*w)
-  fused_axpy      out = y + alpha * x          (the SAM perturbation axpy)
-  fused_dot_norms (<a,b>, ||a||^2, ||b||^2)    (AsyncSAM ascent refresh)
+  sgd_epilogue     w' = w - lr * d,  d = nesterov/momentum(clip*g + wd*w)
+  adamw_epilogue   w' = w - lr * ((mu'/c1)/(sqrt(nu'/c2)+eps) + wd*w)
+  fused_axpy       out = y + alpha * x          (the SAM perturbation axpy)
+  fused_dot_norms  (<a,b>, ||a||^2, ||b||^2)    (AsyncSAM ascent refresh)
+  delta_amax       max|p - s + e|               (JOB-delta int8 scale probe)
+  delta_encode_i8  q = int8((p-s+e)/scale); s' = s + scale*q; e' = d - scale*q
+                   (the remote lane's delta+quantize JOB encoding: one read
+                   pass over the resident param / shadow / residual buckets
+                   instead of per-leaf host-side tree walks)
 
 Scalar operands (clip scale, lr, bias corrections) enter through SMEM;
 static hyperparameters (momentum, betas, weight decay) are baked into the
@@ -93,6 +98,77 @@ def fused_dot_norms(a_flat: jax.Array, b_flat: jax.Array, *,
         interpret=interpret,
     )(a, b)
     return jnp.sum(dot), jnp.sum(aa), jnp.sum(bb)
+
+
+# ---------------------------------------------------------------------------
+# JOB-delta encoding: amax probe + quantize/shadow/residual in one pass
+# ---------------------------------------------------------------------------
+
+def _delta_amax_kernel(p_ref, s_ref, e_ref, out_ref):
+    d = _f32(p_ref) - _f32(s_ref) + _f32(e_ref)
+    out_ref[0] = jnp.max(jnp.abs(d))
+
+
+def delta_amax(p_flat: jax.Array, s_flat: jax.Array, e_flat: jax.Array, *,
+               interpret: bool = False) -> jax.Array:
+    """max |p - s + e| (fp32 chunk partials, final max outside).
+
+    The scale probe for the int8 JOB-delta encoding: one read pass over the
+    params bucket, its shadow, and the error-feedback residual.
+    """
+    p, _ = _pad_flat(p_flat)     # zero padding is |.|-neutral
+    s, _ = _pad_flat(s_flat)
+    e, _ = _pad_flat(e_flat)
+    n_chunks = p.shape[0] // CHUNK
+    partials = pl.pallas_call(
+        _delta_amax_kernel,
+        grid=(n_chunks,),
+        in_specs=[_VEC, _VEC, _VEC],
+        out_specs=_PART,
+        out_shape=jax.ShapeDtypeStruct((n_chunks,), jnp.float32),
+        interpret=interpret,
+    )(p, s, e)
+    return jnp.max(partials)
+
+
+def _delta_i8_kernel(scale_ref, p_ref, s_ref, e_ref, q_out, s_out, e_out):
+    scale = scale_ref[0]
+    s = _f32(s_ref)
+    d = _f32(p_ref) - s + _f32(e_ref)
+    q = jnp.clip(jnp.round(d / scale), -127, 127)
+    recon = q * scale
+    q_out[...] = q.astype(jnp.int8)
+    s_out[...] = s + recon
+    e_out[...] = d - recon
+
+
+def delta_encode_i8(p_flat: jax.Array, s_flat: jax.Array, e_flat: jax.Array,
+                    scale, *, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-pass int8 delta encode: (q, shadow', residual').
+
+    Reads (p, s, e) once and writes the int8 payload plus the advanced fp32
+    shadow/residual buckets; `scale` is a traced scalar (SMEM). The oracle is
+    ref.delta_encode_i8_flat_jnp; the shadow advance is exactly
+    `q.astype(f32) * f32(scale)` so the server's numpy apply reconstructs the
+    same fp32 shadow.
+    """
+    p, n = _pad_flat(p_flat)
+    s, _ = _pad_flat(s_flat)
+    e, _ = _pad_flat(e_flat)
+    n_chunks = p.shape[0] // CHUNK
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    q, s_new, e_new = pl.pallas_call(
+        _delta_i8_kernel,
+        grid=(n_chunks,),
+        in_specs=[_SCAL, _VEC, _VEC, _VEC],
+        out_specs=[_VEC, _VEC, _VEC],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                   jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(p.shape, jnp.float32)],
+        interpret=interpret,
+    )(scale, p, s, e)
+    return q[:n], s_new[:n], e_new[:n]
 
 
 # ---------------------------------------------------------------------------

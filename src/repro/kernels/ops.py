@@ -135,6 +135,29 @@ def fused_dot_norms(a_flat: jax.Array, b_flat: jax.Array, *,
                               interpret=(mode == "pallas_interpret"))
 
 
+def delta_amax(p_flat: jax.Array, s_flat: jax.Array, e_flat: jax.Array, *,
+               impl: Optional[str] = None) -> jax.Array:
+    """max |p - s + e| over flat buckets (JOB-delta int8 scale probe)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.delta_amax_flat_jnp(p_flat, s_flat, e_flat)
+    from repro.kernels import fused_update as fu
+    return fu.delta_amax(p_flat, s_flat, e_flat,
+                         interpret=(mode == "pallas_interpret"))
+
+
+def delta_encode_i8(p_flat: jax.Array, s_flat: jax.Array, e_flat: jax.Array,
+                    scale, *, impl: Optional[str] = None
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-pass int8 delta encode: (q int8, shadow' fp32, residual' fp32)."""
+    mode = _resolve(impl)
+    if mode == "jnp":
+        return ref.delta_encode_i8_flat_jnp(p_flat, s_flat, e_flat, scale)
+    from repro.kernels import fused_update as fu
+    return fu.delta_encode_i8(p_flat, s_flat, e_flat, scale,
+                              interpret=(mode == "pallas_interpret"))
+
+
 def sgd_epilogue(w_flat: jax.Array, g_flat: jax.Array, m_flat, clip_scale, lr,
                  *, momentum: float = 0.0, nesterov: bool = False,
                  weight_decay: float = 0.0, impl: Optional[str] = None):

@@ -165,6 +165,40 @@ def dot_norms_flat_jnp(a: jax.Array, b: jax.Array
     return jnp.sum(a32 * b32), jnp.sum(a32 * a32), jnp.sum(b32 * b32)
 
 
+def delta_amax_flat_jnp(p: jax.Array, s: jax.Array, e: jax.Array) -> jax.Array:
+    """max |p - s + e| over flat vectors (fp32) — the int8 delta scale probe.
+
+    `p` is the current params bucket (native dtype), `s` the fp32 shadow of
+    the last-synced params, `e` the fp32 error-feedback residual.
+    """
+    d = p.astype(jnp.float32) - s.astype(jnp.float32) + e.astype(jnp.float32)
+    return jnp.max(jnp.abs(d))
+
+
+def delta_encode_i8_flat_jnp(p: jax.Array, s: jax.Array, e: jax.Array, scale
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.fused_update.delta_encode_i8.
+
+    One pass over (p, s, e): quantize the error-corrected delta
+    d = p - s + e to int8 at `scale`, advance the shadow by the *quantized*
+    value (so client and server shadows stay in lockstep), and carry the
+    quantization error forward:
+
+        q  = clip(round(d / scale), -127, 127)
+        s' = s + scale * q
+        e' = d - scale * q
+
+    Returns (q int8, s' fp32, e' fp32). All arithmetic in fp32; the shadow
+    update uses exactly `q.astype(f32) * f32(scale)` so the receiver's numpy
+    reconstruction is bit-compatible.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    d = p.astype(jnp.float32) - s.astype(jnp.float32) + e.astype(jnp.float32)
+    q = jnp.clip(jnp.round(d / scale), -127, 127).astype(jnp.int8)
+    recon = q.astype(jnp.float32) * scale
+    return q, s.astype(jnp.float32) + recon, d - recon
+
+
 def sgd_epilogue_flat_jnp(w: jax.Array, g: jax.Array, m, clip_scale, lr, *,
                           momentum: float = 0.0, nesterov: bool = False,
                           weight_decay: float = 0.0):

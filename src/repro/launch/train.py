@@ -27,6 +27,11 @@ Examples:
   # single-host loopback (server spawned as a subprocess)
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 20 --executor remote --serve-ascent
+  # delta-encoded JOB payloads: ship int8 deltas against the server's params
+  # shadow instead of full fp32 snapshots (~4x less wire out)
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 20 --executor remote --serve-ascent \
+      --job-compress int8
 """
 from __future__ import annotations
 
@@ -75,6 +80,17 @@ def main() -> None:
     ap.add_argument("--serve-ascent", action="store_true",
                     help="remote only: spawn the ascent server as a localhost "
                          "subprocess (loopback mode; --ascent-addr optional)")
+    ap.add_argument("--job-compress", choices=("none", "int8", "topk"),
+                    default="none",
+                    help="remote only: JOB-direction (params out) encoding. "
+                         "'none' ships full fp32 snapshots (bitwise parity "
+                         "with --executor hetero under lockstep); int8/topk "
+                         "quantize the delta against the server's shadow of "
+                         "the last-synced params (~4x less wire for int8)")
+    ap.add_argument("--job-delta", choices=("on", "off"), default="on",
+                    help="remote only: delta-encode JOB payloads against the "
+                         "server's params shadow (off: every exchange ships "
+                         "a full snapshot even with --job-compress set)")
     ap.add_argument("--ascent-device", default="",
                     help="hetero only: device for the slow ascent lane, e.g. "
                          "'cpu:0' (paper's CPU helper on a CPU+accelerator host)")
@@ -122,6 +138,10 @@ def main() -> None:
                  "only (the remote ascent device is the server's --device)")
     if (args.ascent_addr or args.serve_ascent) and args.executor != "remote":
         ap.error("--ascent-addr/--serve-ascent apply to --executor remote only")
+    if ((args.job_compress != "none" or args.job_delta != "on")
+            and args.executor != "remote"):
+        ap.error("--job-compress/--job-delta apply to --executor remote only "
+                 "(the JOB direction exists only on the wire)")
     if args.executor == "remote" and not (args.ascent_addr or args.serve_ascent):
         ap.error("--executor remote needs --ascent-addr (a running "
                  "ascent server) or --serve-ascent (loopback subprocess)")
@@ -163,7 +183,9 @@ def main() -> None:
                                   serve_ascent=args.serve_ascent,
                                   loss_spec=loss_spec,
                                   fused_update=fused_update,
-                                  resident=resident)
+                                  resident=resident,
+                                  job_compress=args.job_compress,
+                                  job_delta=(args.job_delta == "on"))
         executor = RemoteExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)

@@ -76,6 +76,13 @@ class ExecutorConfig:
     connect_timeout_s: float = 60.0
     reconnect_backoff_s: float = 0.25
     max_server_respawns: int = 1   # loopback only: respawn a server that died
+    # JOB-direction (params snapshot out) encoding: "none" ships full fp32
+    # snapshots (PR-3 behavior, lockstep remote==hetero parity pinned);
+    # "int8"/"topk" + job_delta delta-encode against the server's shadow of
+    # the last-synced params (service.delta), cutting the wire's dominant
+    # direction ~4x. Degrades to snapshots against a revision-1 server.
+    job_compress: str = "none"
+    job_delta: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -337,11 +344,17 @@ class AsyncSamExecutor:
         # The lane/wire hand-off is pytree-shaped: bucket-resident params
         # leave the buffer representation at this edge only — transferred as
         # whole buckets and cut into numpy views on the host (host_portable),
-        # so residency adds no device-side view pass to the exchange.
+        # so residency adds no device-side view pass to the exchange. A lane
+        # that encodes its own jobs (the remote client's delta encoder) gets
+        # the raw device params instead: the encode runs here, synchronously,
+        # while the donated buffers are still alive, and ships the quantized
+        # delta across the host hop instead of the full fp32 snapshot.
         if not self._lane.full():
             rng = jax.random.fold_in(state.rng, state.step)
-            if self._lane.submit(self._gen,
-                                 buckets.host_portable(state.params),
+            lane_params = (state.params
+                           if getattr(self._lane, "encodes_jobs", False)
+                           else buckets.host_portable(state.params))
+            if self._lane.submit(self._gen, lane_params,
                                  ascent_batch, rng, int(state.step)):
                 self._inflight += 1
 
@@ -367,8 +380,9 @@ class AsyncSamExecutor:
         # remote-lane telemetry, present only on the step that actually
         # harvested an exchange (summing a jsonl's wire_bytes column then
         # gives true total traffic) and only when the lane reports it, so
-        # the in-process lane's metric surface is unchanged
-        for key in ("wire_bytes", "rtt_s"):
+        # the in-process lane's metric surface is unchanged; job_bytes /
+        # grad_bytes split wire_bytes by direction (job + grad == wire)
+        for key in ("wire_bytes", "job_bytes", "grad_bytes", "rtt_s"):
             if key in self._exchange_meta:
                 metrics[key] = float(self._exchange_meta[key])
         return new_state, metrics

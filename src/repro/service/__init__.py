@@ -9,8 +9,11 @@ frames out and compressed gradient frames back over TCP or Unix sockets.
 `engine.RemoteExecutor` plugs the client into `Engine.fit` unchanged.
 
 `protocol` owns the length-prefixed, versioned, checksummed frame format and
-the exact wire-byte accounting (`grad_frame_bytes`) layered on
-`core.ascent.Compressor.wire_bytes`.
+the exact wire-byte accounting in both directions: `grad_frame_bytes`
+layered on `core.ascent.Compressor.wire_bytes` for the gradient coming
+back, `job_frame_bytes` for the params direction going out — full fp32
+snapshots, or the delta-encoded bucket sections `delta` implements
+(client-side `JobEncoder` with error feedback, server-side `ShadowState`).
 """
 from repro.service.ascent_server import (  # noqa: F401
     AscentServer,
@@ -19,10 +22,13 @@ from repro.service.ascent_server import (  # noqa: F401
     spawn_server,
 )
 from repro.service.client import RemoteAscentClient  # noqa: F401
+from repro.service.delta import JobEncoder, ShadowState  # noqa: F401
 from repro.service.protocol import (  # noqa: F401
     FrameType,
     ProtocolError,
     decode_frame,
     encode_frame,
     grad_frame_bytes,
+    job_frame_bytes,
+    job_frame_breakdown,
 )

@@ -43,6 +43,7 @@ import numpy as np
 from repro.core import make_ascent_fn
 from repro.runtime.async_executor import ascent_exchange
 from repro.service import protocol
+from repro.service.delta import ShadowState
 from repro.service.protocol import FrameType, ProtocolError
 from repro.utils import trees
 
@@ -76,18 +77,26 @@ class AscentServer:
     """Serves ascent-gradient exchanges to one client at a time."""
 
     def __init__(self, loss_fn: Callable, *, bind: str = "127.0.0.1:0",
-                 device: Optional[jax.Device] = None, delay_s: float = 0.0):
+                 device: Optional[jax.Device] = None, delay_s: float = 0.0,
+                 legacy_hello: bool = False):
         self._ascent = jax.jit(make_ascent_fn(loss_fn))
         self._norm = jax.jit(trees.global_norm)
         self._device = device
         self._delay_s = delay_s
         self._bind_spec = bind
+        # test hook: behave like a revision-1 server (no capability keys in
+        # the HELLO_ACK, JOB_DELTA frames rejected) so the client's degrade
+        # path is testable without an old binary
+        self._legacy_hello = legacy_hello
         self._listener: Optional[socket.socket] = None
         self.address: Optional[str] = None
         self._stop = threading.Event()
         self._conn: Optional[socket.socket] = None
         self.exchanges = 0
         self.connections = 0
+        self.resyncs_sent = 0
+        self.shadow_installs = 0
+        self.deltas_applied = 0
 
     def start(self) -> str:
         """Bind + listen; returns the resolved address ("host:port"/"unix:...")."""
@@ -134,24 +143,63 @@ class AscentServer:
                                                 timeout=30.0)
         if ftype != FrameType.HELLO:
             raise ProtocolError(f"expected HELLO, got {ftype.name}")
-        compressor = protocol.decode_hello(payload)
-        protocol.send_frame(conn, FrameType.HELLO_ACK,
-                            protocol.encode_hello(compressor))
-        # error-feedback residual is per-connection: a reconnect starts the
-        # quantizer's memory fresh (the residual belonged to a dropped stream)
+        compressor, _hello = protocol.decode_hello(payload)
+        protocol.send_frame(
+            conn, FrameType.HELLO_ACK,
+            protocol.encode_hello(
+                compressor, proto=None if self._legacy_hello else
+                protocol.PROTO_REVISION))
+        # error-feedback residual and the params shadow are per-connection:
+        # a reconnect starts the quantizer's memory fresh and requires a
+        # full-snapshot JOB before any delta (the old stream's state
+        # belonged to a connection that no longer exists)
         comp_state = None
+        shadow = ShadowState()
         while not self._stop.is_set():
             try:
                 ftype, payload, _ = protocol.recv_frame(conn, stop=self._stop)
             except ConnectionAbortedError:
                 break       # stop was set while waiting for the next job
-            if ftype != FrameType.JOB:
+            if ftype == FrameType.JOB:
+                try:
+                    gen, step, params, batch, rng = \
+                        protocol.decode_job(payload)
+                except Exception as e:  # checksummed but malformed: this
+                    raise ProtocolError(  # client is skewed — drop it
+                        f"malformed JOB payload ({type(e).__name__}: {e})"
+                    ) from e
+            elif ftype == FrameType.JOB_DELTA and not self._legacy_hello:
+                # decode + (for deltas) shadow-apply happen BEFORE any
+                # compute; a corrupted frame raises here and drops the
+                # connection with the shadow untouched
+                try:
+                    (sync, seq, gen, step, kind, params, batch, rng,
+                     sections) = protocol.decode_job_v2(payload)
+                except ProtocolError:
+                    raise
+                except Exception as e:
+                    raise ProtocolError(
+                        f"malformed JOB_DELTA payload "
+                        f"({type(e).__name__}: {e})") from e
+                if kind == "snapshot":
+                    if sync:     # sync == 0: stateless, no delta stream
+                        shadow.install(params, sync)
+                        self.shadow_installs += 1
+                else:
+                    if not shadow.can_apply(sync, seq):
+                        self.resyncs_sent += 1
+                        protocol.send_frame(
+                            conn, FrameType.RESYNC,
+                            protocol.encode_resync(
+                                f"shadow at (sync={shadow.sync}, "
+                                f"seq={shadow.seq}) cannot take "
+                                f"(sync={sync}, seq={seq})", shadow.sync))
+                        continue
+                    shadow.apply(kind, sections, sync, seq)
+                    self.deltas_applied += 1
+                    params = shadow.params()
+            else:
                 raise ProtocolError(f"expected JOB, got {ftype.name}")
-            try:
-                gen, step, params, batch, rng = protocol.decode_job(payload)
-            except Exception as e:   # checksummed but malformed: this client
-                raise ProtocolError(  # is skewed — drop the connection
-                    f"malformed JOB payload ({type(e).__name__}: {e})") from e
             t0 = time.perf_counter()
             try:
                 g, norm, _wire, comp_state = ascent_exchange(
@@ -277,11 +325,15 @@ def main(argv=None) -> None:
                     help="jax device for the ascent compute, e.g. 'cpu:0'")
     ap.add_argument("--delay-s", type=float, default=0.0,
                     help="injected per-exchange delay (straggler emulation)")
+    ap.add_argument("--legacy-hello", action="store_true",
+                    help="test hook: behave like a protocol-revision-1 "
+                         "server (no JOB_DELTA support announced or accepted)")
     args = ap.parse_args(argv)
 
     server = AscentServer(resolve_loss(args.loss), bind=args.bind,
                           device=parse_device(args.device),
-                          delay_s=args.delay_s)
+                          delay_s=args.delay_s,
+                          legacy_hello=args.legacy_hello)
     addr = server.start()
     print(f"{_LISTEN_SENTINEL}{addr}", flush=True)
     signal.signal(signal.SIGTERM, lambda *_: server.close())

@@ -14,6 +14,17 @@ gradient staleness ledger on the executor side keeps aging (tau grows, then
 SGD fallback), and training never stalls on a dead helper. `close()` is
 shutdown-safe for a client that never managed to connect: the connect loop
 polls the stop event between bounded attempts, so the join cannot hang.
+
+The JOB direction is encoded by `service.delta.JobEncoder` at submit time
+(on the executor thread, while the donated device params are still alive):
+full snapshots by default, delta+quantized bucket sections against a shared
+shadow when `job_encoding`/`job_delta` ask for it and the HELLO handshake
+negotiated a server that understands them. Any event that could skew the
+server's shadow — connection drop, RESYNC frame, executor reset — falls
+back to a full-snapshot JOB. With `retry_inflight` (the lockstep test
+mode), a dropped exchange is resent as a snapshot of the encoder's shadow
+instead of being reported lost, so a mid-fit server kill stays bitwise
+transparent to the training schedule.
 """
 from __future__ import annotations
 
@@ -28,6 +39,7 @@ import jax
 from repro.core.ascent import Compressor
 from repro.runtime.async_executor import drain_queue, poll_queue
 from repro.service import protocol
+from repro.service.delta import EncodedJob, JobEncoder
 from repro.service.protocol import FrameType, ProtocolError
 
 Pytree = Any
@@ -36,14 +48,34 @@ Pytree = Any
 class RemoteAscentClient:
     """Non-blocking client for `repro.service.ascent_server`."""
 
+    #: the executor hands this lane raw (device) params; the encoder owns
+    #: the host hop (and shrinks it to the quantized delta when enabled)
+    encodes_jobs = True
+
     def __init__(self, addr: str, compressor: Optional[Compressor] = None, *,
                  connect_timeout_s: float = 60.0,
-                 reconnect_backoff_s: float = 0.25):
+                 reconnect_backoff_s: float = 0.25,
+                 job_encoding: str = "none", job_delta: bool = True,
+                 job_topk_fraction: Optional[float] = None,
+                 retry_inflight: bool = False):
         self._addr = addr
         self._addr_lock = threading.Lock()
         self._compressor = compressor or Compressor(kind="none")
         self.connect_timeout_s = connect_timeout_s
         self.reconnect_backoff_s = reconnect_backoff_s
+        self.retry_inflight = retry_inflight
+        # negotiated server capabilities (set by the worker at HELLO time):
+        # None = never connected, False = revision-1 server (legacy JOB
+        # frames only), True = v2 jobs accepted
+        self._v2_ok: Optional[bool] = None
+        self._srv_encodings: set = set()
+        self._encoder = JobEncoder(
+            job_encoding,
+            topk_fraction=(job_topk_fraction
+                           if job_topk_fraction is not None
+                           else self._compressor.topk_fraction),
+            delta=job_delta,
+            caps_fn=lambda: (self._v2_ok, self._srv_encodings))
         self._jobs: queue.Queue = queue.Queue(maxsize=1)
         self._results: queue.Queue = queue.Queue(maxsize=2)
         self._stop = threading.Event()
@@ -53,6 +85,7 @@ class RemoteAscentClient:
         # telemetry
         self.reconnects = 0          # successful (re)connections after the first
         self.drops = 0               # exchanges lost to a dead connection
+        self.retried_exchanges = 0   # exchanges resent after a drop (lockstep)
         self.server_errors = 0       # ERROR frames (connection stayed up)
         self.last_error = ""         # last server/exchange failure, for ops
         self.exchanges = 0
@@ -62,6 +95,10 @@ class RemoteAscentClient:
         self.last_wire_in_bytes = 0  # GRAD frame length of the last exchange
         self.last_wire_out_bytes = 0
         self.wire_bytes_per_exchange = 0   # measured GRAD frame bytes
+        self.last_job_kind = ""            # "snapshot" | "int8" | "topk"
+        #: measured JOB frame bytes of the last exchange, per job kind —
+        #: what run_remote asserts against `protocol.job_frame_bytes`
+        self.job_frame_measured: dict = {}
         self.timings: list[float] = []     # per-exchange round-trip seconds
         self._ever_connected = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -71,14 +108,21 @@ class RemoteAscentClient:
     def full(self) -> bool:
         return self._jobs.full()
 
+    @property
+    def job_encoder(self) -> JobEncoder:
+        return self._encoder
+
     def submit(self, gen: int, params: Pytree, batch: Pytree, rng,
                step: int) -> bool:
         if self._jobs.full():
             return False
+        # encode advances the shadow, so it must not run for a job that
+        # cannot be queued — with the executor as the only submitter the
+        # full() check above guarantees the put below succeeds
+        job = self._encoder.encode(gen, params, jax.device_get(batch),
+                                   jax.device_get(rng), step)
         try:
-            self._jobs.put_nowait((gen, jax.device_get(params),
-                                   jax.device_get(batch),
-                                   jax.device_get(rng), step))
+            self._jobs.put_nowait(job)
         except queue.Full:
             return False
         return True
@@ -109,6 +153,9 @@ class RemoteAscentClient:
     def reset(self) -> None:
         drain_queue(self._jobs)
         drain_queue(self._results)
+        # a reset means the params timeline moved under us (checkpoint
+        # restore / generation fence) — resync the delta stream
+        self._encoder.invalidate()
 
     def close(self) -> None:
         if self._closed:
@@ -167,16 +214,25 @@ class RemoteAscentClient:
         try:
             protocol.send_frame(sock, FrameType.HELLO,
                                 protocol.encode_hello(self._compressor))
-            ftype, _payload, _ = protocol.recv_frame(sock, stop=self._stop,
-                                                     timeout=30.0)
+            ftype, payload, _ = protocol.recv_frame(sock, stop=self._stop,
+                                                    timeout=30.0)
             if ftype != FrameType.HELLO_ACK:
                 raise ProtocolError(f"expected HELLO_ACK, got {ftype.name}")
+            _, ack = protocol.decode_hello(payload)
         except (OSError, ProtocolError, TimeoutError, ConnectionError):
             try:
                 sock.close()
             except OSError:
                 pass
             return None
+        # capability negotiation: a revision-1 server's ACK has no "proto"
+        # key — degrade to full-snapshot legacy JOB frames instead of
+        # failing mid-fit with an unknown-frame error
+        v2 = int(ack.get("proto") or 0) >= 2
+        self._srv_encodings = set(ack.get("job_encodings") or []) if v2 else set()
+        self._v2_ok = v2
+        if not v2:
+            self._encoder.invalidate()
         self._sock = sock
         if self._ever_connected:
             self.reconnects += 1
@@ -185,7 +241,22 @@ class RemoteAscentClient:
         return sock
 
     # --- worker ----------------------------------------------------------------
+    def _frame_for(self, job: EncodedJob) -> tuple[FrameType, bytes]:
+        """Frame a queued job for the negotiated protocol revision."""
+        if self._v2_ok:
+            return FrameType.JOB_DELTA, protocol.encode_job_v2(
+                job.sync, job.seq, job.gen, job.step, job.batch, job.rng,
+                params=job.params, kind=job.kind, deltas=job.deltas)
+        if job.kind != "snapshot":
+            # a delta job raced a reconnect onto a revision-1 server; it
+            # cannot be expressed there — the caller drops the exchange
+            raise ProtocolError(
+                "delta-encoded job against a revision-1 server")
+        return FrameType.JOB, protocol.encode_job(
+            job.gen, job.step, job.params, job.batch, job.rng)
+
     def _worker(self) -> None:
+        pending: Optional[EncodedJob] = None   # carried across retries
         while not self._stop.is_set():
             # local reference: set_address()/close() may null self._sock from
             # another thread at any point (the closed socket then raises
@@ -198,59 +269,95 @@ class RemoteAscentClient:
                     # connects still closes promptly (no hanging join)
                     self._stop.wait(self.reconnect_backoff_s)
                     continue
-            try:
-                job = self._jobs.get(timeout=0.1)
-            except queue.Empty:
-                continue
+            if pending is None:
+                try:
+                    pending = self._jobs.get(timeout=0.1)
+                except queue.Empty:
+                    continue
             if self._stop.is_set():
                 break
-            gen, params, batch, rng, step = job
-            treedef = jax.tree.structure(params)
+            job = pending
             t0 = time.perf_counter()
             try:
-                out_bytes = protocol.send_frame(
-                    sock, FrameType.JOB,
-                    protocol.encode_job(gen, step, params, batch, rng))
+                ftype_out, out_payload = self._frame_for(job)
+                out_bytes = protocol.send_frame(sock, ftype_out, out_payload)
                 # no deadline: a slow helper is staleness, not an error —
                 # a dead one surfaces as a socket error / EOF
                 ftype, payload, in_bytes = protocol.recv_frame(
                     sock, stop=self._stop)
                 if ftype == FrameType.ERROR:
                     # server-side compute failure: the connection is still
-                    # good (the server kept its loop), only this exchange is
-                    # lost — surface the server's diagnostic, don't tear down
+                    # good (the server kept its loop and its shadow — a
+                    # delta job was applied before the ascent ran), only
+                    # this exchange is lost — surface the diagnostic
+                    pending = None
                     self.server_errors += 1
                     self._note_error("ascent server error: "
                                      + payload.decode(errors="replace"))
-                    self._post_failure(gen)
+                    self._post_failure(job.gen)
+                    continue
+                if ftype == FrameType.RESYNC:
+                    # the server's shadow cannot take this delta (fresh
+                    # process, skewed sync/seq): resend as a full snapshot
+                    # of the encoder's shadow — bitwise the same params
+                    info = protocol.decode_resync(payload)
+                    retry = self._encoder.resync_job(job)
+                    if retry is None:
+                        pending = None
+                        self._encoder.invalidate()
+                        self.drops += 1
+                        self._note_error("resync requested "
+                                         f"({info.get('reason')}); "
+                                         "exchange dropped")
+                        self._post_failure(job.gen)
+                    else:
+                        pending = retry
+                        self.retried_exchanges += 1
                     continue
                 if ftype != FrameType.GRAD:
                     raise ProtocolError(f"expected GRAD, got {ftype.name}")
                 rtt = time.perf_counter() - t0
                 rgen, _job_step, norm, compute_s, leaves = \
                     protocol.decode_grad(payload)
-                g = jax.tree.unflatten(treedef, leaves)
+                g = jax.tree.unflatten(job.treedef, leaves)
             except ConnectionAbortedError:
                 break        # close() interrupted the wait
             except (OSError, ConnectionError, ProtocolError, TimeoutError) as e:
                 if self._stop.is_set():
                     break    # close() tore the socket down, not a real drop
-                self.drops += 1
+                self._drop_socket()   # in-flight exchange is interrupted
+                if self.retry_inflight:
+                    # lockstep mode: the exchange is recoverable — resend it
+                    # (as a snapshot of the shadow if it was a delta) once
+                    # the reconnect loop lands on a live server
+                    retry = self._encoder.resync_job(job)
+                    if retry is not None:
+                        pending = retry
+                        self.retried_exchanges += 1
+                        self._note_error(
+                            f"exchange interrupted ({type(e).__name__}: {e});"
+                            " retrying as full snapshot")
+                        continue
+                pending = None
+                self._encoder.invalidate()   # server shadow died with the
+                self.drops += 1              # connection
                 self._note_error(f"exchange dropped ({type(e).__name__}: {e})")
-                self._post_failure(gen)
-                self._drop_socket()   # in-flight exchange is lost; reconnect
+                self._post_failure(job.gen)
                 continue
             except Exception as e:  # noqa: BLE001 — the lane must never die
                 # silently: an encode/decode bug (e.g. a >4GiB frame
                 # overflowing the u32 length, or an unflatten mismatch)
                 # would otherwise kill this daemon thread and leave training
                 # in permanent SGD fallback with a forever-full job queue
+                pending = None
                 self.drops += 1
                 self._note_error(
                     f"exchange failed ({type(e).__name__}: {e})")
-                self._post_failure(gen)
+                self._post_failure(job.gen)
                 self._drop_socket()
+                self._encoder.invalidate()
                 continue
+            pending = None
             self.exchanges += 1
             self.timings.append(rtt)
             self.last_rtt_s = rtt
@@ -259,8 +366,12 @@ class RemoteAscentClient:
             self.wire_in_bytes += in_bytes
             self.wire_out_bytes += out_bytes
             self.wire_bytes_per_exchange = in_bytes
+            self.last_job_kind = job.kind
+            self.job_frame_measured[job.kind] = out_bytes
             meta = {"wire_bytes": float(in_bytes + out_bytes), "rtt_s": rtt,
                     "wire_in_bytes": in_bytes, "wire_out_bytes": out_bytes,
+                    "job_bytes": float(out_bytes),
+                    "grad_bytes": float(in_bytes),
                     "server_compute_s": compute_s}
             try:
                 self._results.put((rgen, g, norm, meta), timeout=1.0)

@@ -1,0 +1,343 @@
+"""Delta-encoded JOB payloads: the params direction of the ascent exchange.
+
+The remote lane's wire is dominated by the direction PR 3 never compressed:
+every exchange ships a full fp32 params snapshot out, ~4x the compressed
+GRAD frame coming back. Distributed-SAM results (LSAM, SAMPa) show the
+ascent signal tolerates stale/approximate weights, so this is exactly where
+lossy, delta-coded encoding belongs.
+
+Both ends keep a generation-stamped fp32 *shadow* of the last-synced params,
+bucketed by dtype (`utils.buckets.bucket_layout` — the same grouping the
+fused weight-space path persists, so a bucket-resident executor's buffers
+feed the encoder with zero gathers). Per exchange the client ships
+`quantize(params - shadow + residual)` per bucket and BOTH ends advance
+their shadow by the *quantized* value, so the server's reconstruction never
+drifts from the client's; the quantization error stays client-side as an
+error-feedback residual folded into the next delta. Any doubt about the
+server's shadow (reconnect, respawn, RESYNC, checkpoint restore) is resolved
+by falling back to a full-snapshot JOB that re-installs the shadow under a
+fresh sync id.
+
+`JobEncoder` (client) owns shadow/residual/sync state and the
+delta+quantize pass — `kernels.ops.delta_amax`/`delta_encode_i8` (Pallas on
+TPU, jnp oracle elsewhere) read the param and shadow buckets once per
+exchange instead of walking the tree per leaf. `ShadowState` (server) is the
+numpy receiving end: install from a snapshot, apply int8/topk bucket
+sections, cut the params pytree back out of the shadow buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.service import protocol
+from repro.service.protocol import ProtocolError
+from repro.utils import buckets
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class EncodedJob:
+    """One encoded exchange-out, ready for the client worker to frame.
+
+    `params` (host tree) is present only for kind "snapshot"; `deltas` holds
+    the per-bucket sections (`protocol.encode_job_v2` format) otherwise.
+    `treedef` is the params tree structure the GRAD reply unflattens into.
+    """
+    kind: str
+    sync: int
+    seq: int
+    gen: int
+    step: int
+    batch: Pytree
+    rng: Any
+    treedef: Any
+    params: Pytree = None
+    deltas: Optional[list] = None
+
+
+def _caps_default() -> tuple[Optional[bool], set]:
+    return None, set()
+
+
+def _pow2_scale(amax: float) -> np.float32:
+    """Smallest power-of-two >= amax/127 (1.0 for a zero delta).
+
+    A power-of-two scale makes `q * scale` EXACT in fp32 (int8 mantissa,
+    exponent shift only), so the shadow advance `s + q * scale` rounds
+    identically whether it runs as the Pallas kernel, the jnp oracle, or the
+    server's numpy apply — FMA contraction cannot skew the two shadows. The
+    cost is <= 2x quantization granularity, absorbed by error feedback.
+    """
+    import math
+    raw = amax / 127.0
+    if not (raw > 0.0) or not math.isfinite(raw):
+        return np.float32(1.0)
+    return np.float32(2.0 ** math.ceil(math.log2(raw)))
+
+
+class JobEncoder:
+    """Client-side JOB encoding with shadow + error-feedback state.
+
+    `caps_fn` reports the negotiated server capabilities
+    `(v2_ok: True/False/None-unknown, supported encodings)`; the encoder
+    degrades to full snapshots whenever delta encoding is not (yet) known to
+    be safe. Thread-safe: `encode` runs on the executor thread at submit
+    time (while the donated device params are still alive), `invalidate` /
+    `resync_job` on the client worker thread.
+    """
+
+    def __init__(self, encoding: str = "none", *, topk_fraction: float = 0.01,
+                 delta: bool = True,
+                 caps_fn: Callable[[], tuple] = _caps_default,
+                 impl: Optional[str] = None):
+        if encoding not in protocol.JOB_ENCODINGS:
+            raise ValueError(f"unknown job encoding {encoding!r}")
+        self.encoding = encoding
+        self.topk_fraction = topk_fraction
+        self.delta = delta
+        self._caps_fn = caps_fn
+        self._impl = impl
+        self._lock = threading.Lock()
+        self._shadow: Optional[list] = None   # fp32 jax buffers, per bucket
+        self._err: Optional[list] = None      # fp32 residual, congruent
+        self._layout = None
+        self._leaf_dtypes: Optional[list] = None
+        self._sync = 0          # monotonically increasing install id
+        self._seq = 0           # delta counter within the current sync
+        # telemetry
+        self.snapshot_jobs = 0
+        self.delta_jobs = 0
+        self.resyncs = 0
+        self.encode_failures = 0
+        self.last_encode_error = ""
+
+    # --- state management ------------------------------------------------------
+    def invalidate(self) -> None:
+        """Drop the shadow: the next job is a full snapshot under a new sync
+        id. Called on connection drops (the server's per-connection shadow is
+        gone), on RESYNC, and on executor reset (checkpoint restore)."""
+        with self._lock:
+            self._shadow = self._err = None
+            self._layout = self._leaf_dtypes = None
+
+    def _wants_delta(self) -> bool:
+        if not self.delta or self.encoding == "none":
+            return False
+        v2, encodings = self._caps_fn()
+        if v2 is False:
+            return False          # revision-1 server: snapshots only
+        return v2 is None or self.encoding in encodings
+
+    # --- encoding --------------------------------------------------------------
+    def encode(self, gen: int, params: Pytree, batch: Pytree, rng,
+               step: int) -> EncodedJob:
+        """Encode one job against the current shadow (delta when possible).
+
+        `params` may be a device pytree, a `BucketedState`, or a host numpy
+        tree (the calibration probe path); `batch`/`rng` are host values.
+        """
+        with self._lock:
+            if self._wants_delta() and self._shadow is not None:
+                try:
+                    return self._encode_delta(gen, params, batch, rng, step)
+                except Exception as e:  # noqa: BLE001 — layout drift or a
+                    # kernel failure must degrade to a snapshot, not kill
+                    # training; but a PERSISTENT failure silently re-running
+                    # full fp32 snapshots would defeat --job-compress, so
+                    # surface each distinct failure once
+                    self._shadow = self._err = None
+                    self.encode_failures += 1
+                    msg = f"delta encode failed ({type(e).__name__}: {e}); " \
+                          "sending full snapshot"
+                    if msg != self.last_encode_error:
+                        import sys
+                        print(f"[job-encoder] {msg}", file=sys.stderr,
+                              flush=True)
+                    self.last_encode_error = msg
+            return self._encode_snapshot(gen, params, batch, rng, step)
+
+    def _encode_snapshot(self, gen, params, batch, rng, step) -> EncodedJob:
+        host = buckets.host_portable(params)
+        treedef = jax.tree.structure(host)
+        sync = 0
+        if self._wants_delta():
+            layout = buckets.bucket_layout(host)
+            bufs, _ = buckets.group_buffers(host, layout)
+            self._shadow = [b.astype(jnp.float32) for b in bufs]
+            self._err = [jnp.zeros_like(s) for s in self._shadow]
+            self._layout = layout
+            self._leaf_dtypes = [np.asarray(x).dtype
+                                 for x in jax.tree.leaves(host)]
+            self._sync += 1
+            self._seq = 0
+            sync = self._sync
+        self.snapshot_jobs += 1
+        return EncodedJob(kind="snapshot", sync=sync, seq=0, gen=gen,
+                          step=step, batch=batch, rng=rng, treedef=treedef,
+                          params=host)
+
+    def _encode_delta(self, gen, params, batch, rng, step) -> EncodedJob:
+        bufs, layout = buckets.group_buffers(params, self._layout)
+        if (len(bufs) != len(self._shadow)
+                or any(b.shape != s.shape for b, s in zip(bufs, self._shadow))):
+            raise ValueError("params layout no longer matches the shadow")
+        deltas = []
+        new_shadow, new_err = [], []
+        for p, s, e in zip(bufs, self._shadow, self._err):
+            if self.encoding == "int8":
+                amax = float(ops.delta_amax(p, s, e, impl=self._impl))
+                scale = _pow2_scale(amax)
+                q, s2, e2 = ops.delta_encode_i8(p, s, e, scale,
+                                                impl=self._impl)
+                deltas.append((float(scale), np.asarray(jax.device_get(q))))
+            else:                                   # topk
+                d = (p.astype(jnp.float32) - s + e)
+                k = max(1, int(d.shape[0] * self.topk_fraction))
+                _, idx = jax.lax.top_k(jnp.abs(d), k)
+                val = d[idx]
+                s2 = s.at[idx].add(val)
+                e2 = d.at[idx].set(0.0)
+                deltas.append((int(d.shape[0]),
+                               np.asarray(jax.device_get(idx),
+                                          dtype=np.uint32),
+                               np.asarray(jax.device_get(val))))
+            new_shadow.append(s2)
+            new_err.append(e2)
+        self._shadow, self._err = new_shadow, new_err
+        self._seq += 1
+        self.delta_jobs += 1
+        return EncodedJob(kind=self.encoding, sync=self._sync, seq=self._seq,
+                          gen=gen, step=step, batch=batch, rng=rng,
+                          treedef=self._layout.treedef, deltas=deltas)
+
+    # --- resync ----------------------------------------------------------------
+    def resync_job(self, job: EncodedJob) -> Optional[EncodedJob]:
+        """Rebuild `job` as a full-snapshot JOB of the *current shadow*.
+
+        The shadow after encoding `job` is exactly the params the server
+        would have reconstructed from it, so resending it as a snapshot
+        yields a bitwise-identical exchange — the retry path after a dropped
+        connection or a RESYNC. Returns None when the shadow has advanced
+        past `job` (a newer job was encoded meanwhile): the exchange is
+        unrecoverable and must be reported lost.
+        """
+        if job.kind == "snapshot":
+            return job               # snapshots are naturally idempotent
+        with self._lock:
+            if (self._shadow is None or self._layout is None
+                    or job.sync != self._sync or job.seq != self._seq):
+                return None
+            host_bufs = [np.asarray(jax.device_get(s)) for s in self._shadow]
+            tree = buckets.host_buckets_to_tree(host_bufs, self._layout,
+                                                self._leaf_dtypes)
+            # a lossy leaf dtype (e.g. bf16) rounds the snapshot the server
+            # will install; re-derive our shadow through the same cast and
+            # fold the rounding into the residual so p - (shadow + err) is
+            # preserved and both shadows stay bit-identical
+            if any(g.dtype != "float32" for g in self._layout.groups):
+                cast_bufs = buckets.host_tree_to_buckets(tree, self._layout)
+                for gi, grp in enumerate(self._layout.groups):
+                    if grp.dtype == "float32":
+                        continue
+                    s_new = jnp.asarray(cast_bufs[gi].astype(np.float32))
+                    self._err[gi] = self._err[gi] + (self._shadow[gi] - s_new)
+                    self._shadow[gi] = s_new
+            self._sync += 1
+            self._seq = 0
+            self.resyncs += 1
+            self.snapshot_jobs += 1
+            return EncodedJob(kind="snapshot", sync=self._sync, seq=0,
+                              gen=job.gen, step=job.step, batch=job.batch,
+                              rng=job.rng, treedef=job.treedef, params=tree)
+
+
+# ---------------------------------------------------------------------------
+# Server side: the numpy shadow a connection reconstructs params from
+# ---------------------------------------------------------------------------
+
+class ShadowState:
+    """Per-connection receiving end of the delta stream.
+
+    Installed from a snapshot JOB (sync >= 1), advanced by int8/topk bucket
+    sections with strict sync/seq checking — any mismatch means the ends
+    have skewed and the caller must ask for a RESYNC. Deltas are fully
+    decoded (and validated by `protocol.decode_job_v2`) before any buffer is
+    touched, so a corrupted frame never half-applies.
+    """
+
+    def __init__(self):
+        self.layout = None
+        self.bufs: Optional[list] = None      # fp32 numpy, one per bucket
+        self.leaf_dtypes: Optional[list] = None
+        self.sync = 0
+        self.seq = 0
+        self.installs = 0
+        self.deltas_applied = 0
+
+    def install(self, params: Pytree, sync: int) -> None:
+        self.layout = buckets.bucket_layout(params)
+        self.leaf_dtypes = [np.asarray(x).dtype
+                            for x in jax.tree.leaves(params)]
+        # force writable owned buffers: decode_trees leaves are read-only
+        # frombuffer views and a single-leaf bucket would alias them
+        self.bufs = [np.array(b, dtype=np.float32, copy=True) for b in
+                     buckets.host_tree_to_buckets(params, self.layout)]
+        self.sync = int(sync)
+        self.seq = 0
+        self.installs += 1
+
+    def can_apply(self, sync: int, seq: int) -> bool:
+        return (self.bufs is not None and int(sync) == self.sync
+                and int(seq) == self.seq + 1)
+
+    def apply(self, kind: str, sections: list, sync: int, seq: int) -> None:
+        """Advance the shadow by one fully-decoded delta."""
+        if not self.can_apply(sync, seq):
+            raise ProtocolError(
+                f"delta (sync={sync}, seq={seq}) does not extend shadow "
+                f"(sync={self.sync}, seq={self.seq})")
+        if len(sections) != len(self.bufs):
+            raise ProtocolError(
+                f"delta has {len(sections)} buckets, shadow has "
+                f"{len(self.bufs)}")
+        # validate every section BEFORE touching any buffer, so a malformed
+        # delta can never leave the shadow half-applied
+        for i, (entry, buf) in enumerate(zip(sections, self.bufs)):
+            if kind == "int8":
+                _scale, q = entry
+                if q.size != buf.size:
+                    raise ProtocolError(
+                        f"bucket {i}: int8 payload of {q.size} elements "
+                        f"!= shadow size {buf.size}")
+            else:                                   # topk
+                size, idx, _val = entry
+                if size != buf.size:
+                    raise ProtocolError(
+                        f"bucket {i}: topk section for {size} elements "
+                        f"!= shadow size {buf.size}")
+                if idx.size and int(idx.max()) >= buf.size:
+                    raise ProtocolError(f"bucket {i}: topk index out of range")
+        for entry, buf in zip(sections, self.bufs):
+            if kind == "int8":
+                scale, q = entry
+                # f32 mul-then-add; the power-of-two scale makes the product
+                # exact, matching the encoder kernel's advance bit for bit
+                buf += q.astype(np.float32) * np.float32(scale)
+            else:                                   # topk
+                _size, idx, val = entry
+                buf[idx] += val
+        self.seq = int(seq)
+        self.deltas_applied += 1
+
+    def params(self) -> Pytree:
+        """The params pytree the current shadow encodes (original dtypes)."""
+        return buckets.host_buckets_to_tree(self.bufs, self.layout,
+                                            self.leaf_dtypes)

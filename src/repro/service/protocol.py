@@ -10,14 +10,19 @@ One frame format carries everything that crosses the process boundary:
     12  4  crc32 of the payload
     16  N  payload
 
-Frames out (client -> server): HELLO (compressor config handshake) and JOB
-(a params snapshot + ascent batch + rng, i.e. the tuple the in-process lane
-hands its worker thread). Frames back: HELLO_ACK, GRAD (the compressed ascent
-gradient + its norm + staleness metadata), and ERROR (server-side exception
-text). JOB/HELLO payloads are self-describing (JSON tree spec + raw leaf
-bytes); GRAD payloads are fixed-layout binary so their length is exactly
-modeled: `grad_frame_bytes(compressor, grad)` == len of the encoded frame,
-with `Compressor.wire_bytes` as the payload term and the framing/shape
+Frames out (client -> server): HELLO (compressor config + capability
+handshake), JOB (legacy v1: a params snapshot + ascent batch + rng, i.e. the
+tuple the in-process lane hands its worker thread), and JOB_DELTA (v2: the
+same job with the params direction either a generation-stamped full snapshot
+or a delta-encoded update against the server's shadow of the last-synced
+params). Frames back: HELLO_ACK, GRAD (the compressed ascent gradient + its
+norm + staleness metadata), RESYNC (the server's shadow cannot take this
+delta — resend as a full snapshot), and ERROR (server-side exception text).
+JOB/HELLO payloads are self-describing (JSON tree spec + raw leaf bytes);
+GRAD and the JOB_DELTA bucket sections are fixed-layout binary so their
+length is exactly modeled: `grad_frame_bytes(compressor, grad)` /
+`job_frame_bytes(encoding, params, batch, rng)` == len of the encoded frame,
+with `Compressor.wire_bytes` as the GRAD payload term and the framing/shape
 metadata accounted here (the frame-overhead model `Compressor.wire_bytes`
 deliberately excludes).
 
@@ -30,6 +35,17 @@ The GRAD encodings mirror `core.ascent.Compressor`'s representations:
 so re-encoding the *reconstruction* `Compressor.compress` produced is
 lossless for "none"/"topk" and exact up to one rounding ulp for "int8"
 (the reconstruction is scale * int8 already).
+
+The JOB_DELTA bucket sections carry the params direction per *dtype bucket*
+(`utils.buckets.bucket_layout` grouping — both ends derive the same layout
+from the snapshot's tree spec), not per leaf:
+
+    int8  u32 size + f32 scale + int8 payload           n + 8 bytes/bucket
+    topk  u32 size + u32 k + k (u32 index, f32 value)   8k + 8 bytes/bucket
+
+HELLO carries `proto`/`job_encodings` capability keys a v1 server ignores
+(and whose absence from HELLO_ACK tells a v2 client to degrade to
+full-snapshot v1 JOB frames — no codec error mid-fit against an old server).
 """
 from __future__ import annotations
 
@@ -53,14 +69,27 @@ Pytree = Any
 
 MAGIC = b"ASAM"
 PROTOCOL_VERSION = 1
+#: application-level protocol revision, negotiated in HELLO/HELLO_ACK (the
+#: frame-header version stays at PROTOCOL_VERSION so v1 peers still parse
+#: the handshake); revision 2 adds JOB_DELTA/RESYNC and the job encodings
+PROTO_REVISION = 2
+#: JOB-direction encodings a revision-2 server accepts
+JOB_ENCODINGS = ("none", "int8", "topk")
 FRAME_HEADER_BYTES = 16
 #: fixed GRAD-payload prelude: gen u32 + job_step u32 + norm f64 +
 #: compute_time f64 + kind u8 + n_leaves u32
 GRAD_FIXED_BYTES = 4 + 4 + 8 + 8 + 1 + 4
+#: fixed JOB_DELTA-payload prelude: sync u32 + seq u32 + gen u32 + step u32 +
+#: kind u8 + n_buckets u32
+JOB_FIXED_BYTES = 4 + 4 + 4 + 4 + 1 + 4
 _MAX_PAYLOAD = 1 << 31   # sanity bound against corrupt length fields
 
 _KIND_CODES = {"none": 0, "int8": 1, "topk": 2}
 _KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+
+#: JOB_DELTA params-direction kinds ("snapshot" installs/refreshes the shadow)
+_JOB_KIND_CODES = {"snapshot": 0, "int8": 1, "topk": 2}
+_JOB_KIND_NAMES = {v: k for k, v in _JOB_KIND_CODES.items()}
 
 
 class FrameType(IntEnum):
@@ -69,6 +98,8 @@ class FrameType(IntEnum):
     JOB = 3
     GRAD = 4
     ERROR = 5
+    JOB_DELTA = 6
+    RESYNC = 7
 
 
 class ProtocolError(RuntimeError):
@@ -266,6 +297,11 @@ def _unpack_tree(spec: Any, leaves: "list[np.ndarray]", cursor: list) -> Pytree:
     return arr
 
 
+def _trees_header(meta: dict, specs: dict) -> bytes:
+    return json.dumps({"meta": meta, "trees": specs},
+                      separators=(",", ":")).encode()
+
+
 def encode_trees(meta: dict, **trees: Pytree) -> bytes:
     """Pack host pytrees + JSON-able metadata into one payload.
 
@@ -273,14 +309,47 @@ def encode_trees(meta: dict, **trees: Pytree) -> bytes:
     """
     leaves: list[np.ndarray] = []
     specs = {name: _pack_tree(tree, leaves) for name, tree in trees.items()}
-    header = json.dumps({"meta": meta, "trees": specs},
-                        separators=(",", ":")).encode()
+    header = _trees_header(meta, specs)
     out = io.BytesIO()
     out.write(struct.pack(">I", len(header)))
     out.write(header)
     for arr in leaves:
         out.write(arr.tobytes())
     return out.getvalue()
+
+
+def _spec_tree(tree: Pytree, nbytes: list) -> Any:
+    """`_pack_tree`'s spec for the byte model: same JSON, no serialization.
+
+    Works on anything with .shape/.dtype (numpy arrays, jax arrays,
+    ShapeDtypeStructs) so wire budgets can be modeled from abstract params.
+    """
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {"t": "dict", "k": list(tree),
+                "v": [_spec_tree(tree[k], nbytes) for k in tree]}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "tuple" if isinstance(tree, tuple) else "list",
+                "v": [_spec_tree(x, nbytes) for x in tree]}
+    if not hasattr(tree, "shape"):
+        tree = np.asarray(tree)
+    dtype = np.dtype(tree.dtype)
+    n = int(np.prod(tree.shape, dtype=np.int64)) if len(tree.shape) else 1
+    nbytes.append(n * dtype.itemsize)
+    return {"t": "leaf", "dtype": dtype.name, "shape": list(tree.shape)}
+
+
+def trees_payload_bytes(meta: dict, **trees: Pytree) -> int:
+    """Exact `len(encode_trees(meta, **trees))` without serializing.
+
+    Exact only when `meta`'s JSON rendering is value-independent (the v2 JOB
+    path keeps all varying integers in the fixed binary prelude for this
+    reason); leaf shapes/dtypes may come from abstract arrays.
+    """
+    nbytes: list[int] = []
+    specs = {name: _spec_tree(tree, nbytes) for name, tree in trees.items()}
+    return 4 + len(_trees_header(meta, specs)) + sum(nbytes)
 
 
 def decode_trees(payload: bytes) -> tuple[dict, dict]:
@@ -319,21 +388,40 @@ def decode_trees(payload: bytes) -> tuple[dict, dict]:
 # JOB / HELLO payloads
 # ---------------------------------------------------------------------------
 
-def encode_hello(compressor: Compressor) -> bytes:
-    return json.dumps({"version": PROTOCOL_VERSION, "kind": compressor.kind,
-                       "topk_fraction": compressor.topk_fraction}).encode()
+def encode_hello(compressor: Compressor, *,
+                 proto: Optional[int] = PROTO_REVISION,
+                 job_encodings: Optional[tuple] = JOB_ENCODINGS) -> bytes:
+    """HELLO / HELLO_ACK payload.
+
+    `version` stays the v1 key a revision-1 peer validates; `proto` and
+    `job_encodings` are capability keys it ignores. `proto=None` renders the
+    exact revision-1 payload (the degrade test's "old server" mode).
+    """
+    meta = {"version": PROTOCOL_VERSION, "kind": compressor.kind,
+            "topk_fraction": compressor.topk_fraction}
+    if proto is not None:
+        meta["proto"] = int(proto)
+        meta["job_encodings"] = list(job_encodings or ())
+    return json.dumps(meta).encode()
 
 
-def decode_hello(payload: bytes) -> Compressor:
+def decode_hello(payload: bytes) -> tuple[Compressor, dict]:
+    """-> (gradient-direction Compressor, full handshake meta).
+
+    `meta.get("proto")` is None for a revision-1 peer — the signal to stay on
+    full-snapshot v1 JOB frames.
+    """
     meta = json.loads(payload.decode())
     if meta.get("version") != PROTOCOL_VERSION:
         raise ProtocolError(f"client protocol version {meta.get('version')} "
                             f"!= {PROTOCOL_VERSION}")
-    return Compressor(kind=meta["kind"], topk_fraction=meta["topk_fraction"])
+    return Compressor(kind=meta["kind"],
+                      topk_fraction=meta["topk_fraction"]), meta
 
 
 def encode_job(gen: int, step: int, params: Pytree, batch: Pytree,
                rng) -> bytes:
+    """Legacy (revision-1) JOB payload: full snapshot, JSON meta."""
     return encode_trees({"gen": int(gen), "step": int(step)},
                         params=params, batch=batch, rng=rng)
 
@@ -342,6 +430,117 @@ def decode_job(payload: bytes) -> tuple[int, int, Pytree, Pytree, Any]:
     meta, trees = decode_trees(payload)
     return (int(meta["gen"]), int(meta["step"]),
             trees["params"], trees["batch"], trees["rng"])
+
+
+# ---------------------------------------------------------------------------
+# JOB_DELTA payload (v2 jobs): fixed prelude + aux trees + bucket sections
+#
+#   sync u32 | seq u32 | gen u32 | step u32 | kind u8 | n_buckets u32
+#   aux_len u32 | encode_trees({}, [params,] batch, rng)
+#   per bucket:  int8: size u32 | scale f32 | int8[size]
+#                topk: size u32 | k u32 | u32 idx[k] | f32 val[k]
+#
+# kind "snapshot" ships the full params tree inside the aux (self-describing
+# — it is what defines the bucket layout on both ends) with n_buckets == 0;
+# sync == 0 marks a *stateless* snapshot (no delta stream will follow, the
+# server need not keep a shadow). All varying integers live in the fixed
+# prelude so `job_frame_bytes` is exact.
+# ---------------------------------------------------------------------------
+
+def encode_job_v2(sync: int, seq: int, gen: int, step: int, batch: Pytree,
+                  rng, *, params: Pytree = None, kind: str = "snapshot",
+                  deltas: Optional[list] = None) -> bytes:
+    """v2 job payload. `deltas` per bucket: (scale, q int8) for "int8",
+    (idx u32, val f32) for "topk"; `params` only for kind "snapshot"."""
+    deltas = deltas or []
+    if kind == "snapshot":
+        aux = encode_trees({}, params=params, batch=batch, rng=rng)
+    else:
+        aux = encode_trees({}, batch=batch, rng=rng)
+    out = io.BytesIO()
+    out.write(struct.pack(">IIIIBI", int(sync), int(seq), int(gen), int(step),
+                          _JOB_KIND_CODES[kind], len(deltas)))
+    out.write(struct.pack(">I", len(aux)))
+    out.write(aux)
+    for entry in deltas:
+        if kind == "int8":
+            scale, q = entry
+            q = np.ascontiguousarray(np.asarray(q, dtype=np.int8))
+            out.write(struct.pack(">If", q.size, float(scale)))
+            out.write(q.tobytes())
+        elif kind == "topk":
+            size, idx, val = entry
+            idx = np.ascontiguousarray(np.asarray(idx, dtype=np.uint32))
+            val = np.ascontiguousarray(np.asarray(val, dtype=np.float32))
+            out.write(struct.pack(">II", int(size), idx.size))
+            out.write(idx.tobytes())
+            out.write(val.tobytes())
+        else:
+            raise ValueError(f"kind {kind!r} carries no bucket sections")
+    return out.getvalue()
+
+
+def decode_job_v2(payload: bytes):
+    """-> (sync, seq, gen, step, kind, params-or-None, batch, rng, buckets).
+
+    `buckets` mirrors encode_job_v2's `deltas`. Raises ProtocolError on any
+    structural damage, before the caller touches its shadow.
+    """
+    if len(payload) < JOB_FIXED_BYTES + 4:
+        raise ProtocolError("JOB_DELTA payload shorter than its prelude")
+    sync, seq, gen, step, kind_code, n_buckets = struct.unpack_from(
+        ">IIIIBI", payload, 0)
+    kind = _JOB_KIND_NAMES.get(kind_code)
+    if kind is None:
+        raise ProtocolError(f"unknown job kind code {kind_code}")
+    (aux_len,) = struct.unpack_from(">I", payload, JOB_FIXED_BYTES)
+    off = JOB_FIXED_BYTES + 4
+    if off + aux_len > len(payload):
+        raise ProtocolError("JOB_DELTA aux overruns payload")
+    meta, trees = decode_trees(payload[off:off + aux_len])
+    off += aux_len
+    buckets = []
+    for _ in range(n_buckets):
+        if kind == "int8":
+            if off + 8 > len(payload):
+                raise ProtocolError("JOB_DELTA bucket header overruns payload")
+            size, scale = struct.unpack_from(">If", payload, off)
+            off += 8
+            if off + size > len(payload):
+                raise ProtocolError("JOB_DELTA int8 bucket overruns payload")
+            q = np.frombuffer(payload, np.int8, size, off)
+            off += size
+            buckets.append((float(scale), q))
+        elif kind == "topk":
+            if off + 8 > len(payload):
+                raise ProtocolError("JOB_DELTA bucket header overruns payload")
+            size, k = struct.unpack_from(">II", payload, off)
+            off += 8
+            if off + 8 * k > len(payload):
+                raise ProtocolError("JOB_DELTA topk bucket overruns payload")
+            idx = np.frombuffer(payload, np.uint32, k, off)
+            off += 4 * k
+            val = np.frombuffer(payload, np.float32, k, off)
+            off += 4 * k
+            buckets.append((int(size), idx, val))
+        else:
+            raise ProtocolError("snapshot job carries bucket sections")
+    if off != len(payload):
+        raise ProtocolError(
+            f"JOB_DELTA payload has {len(payload) - off} trailing bytes")
+    return (int(sync), int(seq), int(gen), int(step), kind,
+            trees.get("params"), trees["batch"], trees["rng"], buckets)
+
+
+def encode_resync(reason: str, sync: int = 0) -> bytes:
+    return json.dumps({"reason": reason, "sync": int(sync)}).encode()
+
+
+def decode_resync(payload: bytes) -> dict:
+    try:
+        return json.loads(payload.decode())
+    except Exception:  # diagnostics only — never fail the resync itself
+        return {"reason": payload.decode(errors="replace"), "sync": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -451,3 +650,60 @@ def grad_frame_bytes(compressor: Compressor, grad: Pytree) -> int:
     # int8's per-leaf 8-byte scale is already part of the payload model
     return (FRAME_HEADER_BYTES + GRAD_FIXED_BYTES + structural
             + compressor.wire_bytes(grad))
+
+
+# ---------------------------------------------------------------------------
+# JOB frame: exact length model (v2 jobs), layered like grad_frame_bytes
+# ---------------------------------------------------------------------------
+
+def _bucket_sizes(params: Pytree) -> list[int]:
+    """Element count per dtype bucket, via the canonical layout grouping."""
+    from repro.utils.buckets import bucket_layout
+    return [g.size for g in bucket_layout(params).groups]
+
+
+def job_frame_breakdown(encoding: str, params: Pytree, batch: Pytree, rng, *,
+                        delta: bool = True,
+                        topk_fraction: float = 0.01) -> dict:
+    """Exact v2 JOB *frame* length model, split by wire direction content.
+
+    Returns {"frame": total frame bytes, "aux": the params-free cost every
+    job form pays (frame header, fixed prelude, batch + rng payload and
+    their tree-spec JSON), "params": frame - aux, i.e. every byte the params
+    direction adds — raw fp32 leaves plus their tree-spec JSON for a
+    snapshot, the delta bucket sections for int8/topk}. `params`/`batch`/
+    `rng` may be abstract (ShapeDtypeStructs) — wire budgets for pod-scale
+    models are modeled without materializing them. Exact because every
+    run-varying integer (sync/seq/gen/step) lives in the fixed-width binary
+    prelude; a test asserts modeled == len(encode_frame(...)) per encoding.
+    """
+    common = (FRAME_HEADER_BYTES + JOB_FIXED_BYTES + 4
+              + trees_payload_bytes({}, batch=batch, rng=rng))
+    snapshot = (encoding == "none") or not delta
+    if snapshot:
+        frame = (FRAME_HEADER_BYTES + JOB_FIXED_BYTES + 4
+                 + trees_payload_bytes({}, params=params, batch=batch,
+                                       rng=rng))
+        return {"frame": frame, "params": frame - common, "aux": common}
+    sizes = _bucket_sizes(params)
+    if encoding == "int8":
+        section = sum(8 + n for n in sizes)
+    elif encoding == "topk":
+        section = sum(8 + 8 * max(1, int(n * topk_fraction)) for n in sizes)
+    else:
+        raise ValueError(f"unknown job encoding {encoding!r}")
+    return {"frame": common + section, "params": section, "aux": common}
+
+
+def job_frame_bytes(encoding: str, params: Pytree, batch: Pytree, rng, *,
+                    delta: bool = True, topk_fraction: float = 0.01) -> int:
+    """Exact length of the v2 JOB frame carrying one exchange out.
+
+    `encoding` "none" (or `delta=False`) models the full-snapshot form;
+    "int8"/"topk" model the delta-encoded bucket sections. The legacy
+    (revision-1) JOB frame is not modeled — its JSON meta length varies with
+    gen/step digits; v2 keeps those in the fixed prelude precisely so this
+    model can be exact.
+    """
+    return job_frame_breakdown(encoding, params, batch, rng, delta=delta,
+                               topk_fraction=topk_fraction)["frame"]

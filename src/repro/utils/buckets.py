@@ -268,6 +268,48 @@ def host_portable(tree: Pytree) -> Pytree:
     return jax.tree.map(f, tree, is_leaf=is_bucketed)
 
 
+def host_tree_to_buckets(tree: Pytree, layout: BucketLayout,
+                         dtype=None) -> list:
+    """Numpy-side `tree_to_buckets`: concatenate host leaves per layout group.
+
+    Pure numpy (no device round trip) — the form the ascent server uses to
+    install its params shadow from a decoded JOB snapshot, and the client's
+    resync path uses on host pytrees. `dtype` (e.g. float32) casts every
+    bucket; None keeps each group's native dtype.
+    """
+    import numpy as np
+
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == layout.n_leaves, (len(leaves), layout.n_leaves)
+    out = []
+    for grp in layout.groups:
+        parts = [np.asarray(leaves[i]).reshape(-1) for i in grp.leaf_indices]
+        buf = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        if dtype is not None:
+            buf = buf.astype(dtype, copy=False)
+        out.append(np.ascontiguousarray(buf))
+    return out
+
+
+def host_buckets_to_tree(bufs: list, layout: BucketLayout,
+                         leaf_dtypes=None) -> Pytree:
+    """Numpy-side inverse of `host_tree_to_buckets`: cut the flat host
+    buffers into the layout's pytree shape (views where the dtype already
+    matches). `leaf_dtypes` (flatten order) casts each leaf back to its
+    original dtype — how an fp32 shadow re-enters a bf16 params tree."""
+    import numpy as np
+
+    leaves: list = [None] * layout.n_leaves
+    for buf, grp in zip(bufs, layout.groups):
+        buf = np.asarray(buf)
+        for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
+            leaf = buf[off:off + size].reshape(layout.shapes[i])
+            if leaf_dtypes is not None:
+                leaf = leaf.astype(leaf_dtypes[i], copy=False)
+            leaves[i] = leaf
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
 def residentize(tree: Pytree, like: Pytree) -> Pytree:
     """Match `like`'s residency: bucket each subtree of `tree` wherever `like`
     holds a BucketedState (same layout), pass everything else through.

@@ -28,6 +28,16 @@ if os.environ.get("REPRO_FUSED") == "1":
     _buckets.set_fused_default(True)
     _ops.set_default_impl("pallas_interpret")
 
+# REPRO_KERNELS=interpret (scripts/tier1.sh --service): run every dispatched
+# kernel as real Pallas code in interpret mode WITHOUT forcing the fused
+# weight-space default — the service lane uses this so the JOB delta-encode
+# kernels (ops.delta_amax / delta_encode_i8) exercise the Pallas
+# implementations on CPU while executor behavior stays the platform default.
+elif os.environ.get("REPRO_KERNELS") == "interpret":
+    from repro.kernels import ops as _ops
+
+    _ops.set_default_impl("pallas_interpret")
+
 
 @pytest.fixture(scope="session")
 def repo_root() -> pathlib.Path:

@@ -154,6 +154,41 @@ def test_sgd_epilogue_kernel(momentum, nesterov, wd, dtype, n=200_001):
         assert m_k is None and m_r is None
 
 
+@pytest.mark.parametrize("n", [1000, 65536, 200_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_delta_amax_kernel(n, dtype):
+    from repro.kernels.fused_update import delta_amax
+    ks = jax.random.split(KEY, 3)
+    p = jax.random.normal(ks[0], (n,), dtype)
+    s = jax.random.normal(ks[1], (n,), jnp.float32)
+    e = 0.01 * jax.random.normal(ks[2], (n,), jnp.float32)
+    got = delta_amax(p, s, e, interpret=True)
+    expect = ref.delta_amax_flat_jnp(p, s, e)
+    np.testing.assert_allclose(float(got), float(expect), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1000, 200_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_delta_encode_i8_kernel(n, dtype):
+    from repro.kernels.fused_update import delta_amax, delta_encode_i8
+    ks = jax.random.split(KEY, 3)
+    p = jax.random.normal(ks[0], (n,), dtype)
+    s = jax.random.normal(ks[1], (n,), jnp.float32)
+    e = 0.01 * jax.random.normal(ks[2], (n,), jnp.float32)
+    from repro.service.delta import _pow2_scale
+    scale = _pow2_scale(float(delta_amax(p, s, e, interpret=True)))
+    q_k, s_k, e_k = delta_encode_i8(p, s, e, scale, interpret=True)
+    q_r, s_r, e_r = ref.delta_encode_i8_flat_jnp(p, s, e, scale)
+    assert q_k.dtype == jnp.int8 and s_k.dtype == jnp.float32
+    # with the power-of-two scale the int8 payload AND the shadow advance
+    # must match the oracle bit for bit (q * scale is exact in fp32, so FMA
+    # contraction cannot skew the result) — that is the property that keeps
+    # the client's and the server's shadows identical
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("wd", [0.0, 0.01])
 def test_adamw_epilogue_kernel(wd, dtype, n=200_001):

@@ -131,6 +131,285 @@ def test_parse_addr():
 
 
 # ---------------------------------------------------------------------------
+# v2 JOB payloads: delta codec, shadow sync, exact frame-length model
+# ---------------------------------------------------------------------------
+
+def _job_aux(seed=0):
+    rs = np.random.RandomState(seed)
+    batch = {"x": rs.randn(16, 8).astype(np.float32),
+             "y": np.arange(16, dtype=np.int32)}
+    rng = np.asarray(jax.device_get(jax.random.PRNGKey(7)))
+    return batch, rng
+
+
+def _caps_v2():
+    return True, {"none", "int8", "topk"}
+
+
+def test_job_v2_snapshot_roundtrip_and_length_model():
+    params = jax.device_get(_params())
+    batch, rng = _job_aux()
+    payload = protocol.encode_job_v2(1, 0, 3, 11, batch, rng, params=params)
+    frame = protocol.encode_frame(FrameType.JOB_DELTA, payload)
+    assert len(frame) == protocol.job_frame_bytes("none", params, batch, rng)
+    assert len(frame) == protocol.job_frame_bytes("int8", params, batch, rng,
+                                                  delta=False)
+    sync, seq, gen, step, kind, p2, b2, r2, sections = \
+        protocol.decode_job_v2(payload)
+    assert (sync, seq, gen, step, kind) == (1, 0, 3, 11, "snapshot")
+    assert sections == []
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert np.array_equal(a, b)
+    assert np.array_equal(batch["y"], b2["y"]) and np.array_equal(rng, r2)
+
+
+@pytest.mark.parametrize("encoding,frac", [("int8", 0.01), ("topk", 0.1)])
+def test_job_delta_roundtrip_shadow_bitwise_and_length_model(encoding, frac):
+    """The load-bearing invariant: after every delta the server's numpy
+    shadow equals the client encoder's shadow bit for bit, the reconstructed
+    params track the true params within the quantization step, and the frame
+    length equals `job_frame_bytes` exactly."""
+    from repro.service.delta import JobEncoder, ShadowState
+    params = jax.device_get(_grad_tree())
+    batch, rng = _job_aux()
+    enc = JobEncoder(encoding, topk_fraction=frac, delta=True,
+                     caps_fn=_caps_v2)
+    srv = ShadowState()
+    rs = np.random.RandomState(1)
+    for step in range(4):
+        job = enc.encode(0, params, batch, rng, step)
+        payload = protocol.encode_job_v2(job.sync, job.seq, job.gen, job.step,
+                                         job.batch, job.rng, params=job.params,
+                                         kind=job.kind, deltas=job.deltas)
+        frame = protocol.encode_frame(FrameType.JOB_DELTA, payload)
+        assert len(frame) == protocol.job_frame_bytes(
+            encoding, params, batch, rng, delta=(job.kind != "snapshot"),
+            topk_fraction=frac)
+        sync, seq, gen, jstep, kind, p2, b2, r2, sections = \
+            protocol.decode_job_v2(payload)
+        assert kind == ("snapshot" if step == 0 else encoding)
+        if kind == "snapshot":
+            srv.install(p2, sync)
+        else:
+            srv.apply(kind, sections, sync, seq)
+        cli_shadow = [np.asarray(jax.device_get(s)) for s in enc._shadow]
+        for a, b in zip(cli_shadow, srv.bufs):
+            np.testing.assert_array_equal(a, b)
+        # the walk keeps the reconstruction within the coder's granularity
+        if encoding == "int8":
+            for a, b in zip(jax.tree.leaves(srv.params()),
+                            jax.tree.leaves(params)):
+                amax = float(np.max(np.abs(np.asarray(b)))) or 1.0
+                assert np.allclose(a, b, atol=2 * amax / 127 + 1e-7)
+        params = jax.tree.map(
+            lambda x: x + np.float32(0.02) * rs.randn(*x.shape)
+            .astype(np.float32), params)
+
+
+def test_delta_encoder_error_feedback_converges():
+    """With params held FIXED, error feedback drives the topk shadow to the
+    true params even though each delta ships only a fraction of entries."""
+    from repro.service.delta import JobEncoder
+    params = jax.device_get(_grad_tree())
+    batch, rng = _job_aux()
+    enc = JobEncoder("topk", topk_fraction=0.2, delta=True, caps_fn=_caps_v2)
+    for step in range(12):
+        enc.encode(0, params, batch, rng, step)
+    shadow_tree = None
+    from repro.utils import buckets
+    host = [np.asarray(jax.device_get(s)) for s in enc._shadow]
+    shadow_tree = buckets.host_buckets_to_tree(host, enc._layout,
+                                               enc._leaf_dtypes)
+    for a, b in zip(jax.tree.leaves(shadow_tree), jax.tree.leaves(params)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_resync_frame_recovers_skewed_stream():
+    """A delta the server's shadow cannot extend draws a RESYNC (not an
+    error); a fresh snapshot then re-installs and deltas flow again."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    params = jax.device_get(_params())
+    batch = jax.device_get(_batches(1)[0]["ascent"])
+    rng = np.asarray(jax.device_get(jax.random.PRNGKey(5)))
+    from repro.utils import buckets
+    layout = buckets.bucket_layout(params)
+    sock = protocol.connect(server.address)
+    try:
+        protocol.send_frame(sock, FrameType.HELLO,
+                            protocol.encode_hello(Compressor("none")))
+        ftype, payload, _ = protocol.recv_frame(sock, timeout=30.0)
+        assert ftype == FrameType.HELLO_ACK
+        _, ack = protocol.decode_hello(payload)
+        assert ack.get("proto") == protocol.PROTO_REVISION
+        assert set(ack.get("job_encodings")) == set(protocol.JOB_ENCODINGS)
+
+        def snapshot(sync):
+            protocol.send_frame(sock, FrameType.JOB_DELTA,
+                                protocol.encode_job_v2(sync, 0, 0, 0, batch,
+                                                       rng, params=params))
+            ftype, _p, _ = protocol.recv_frame(sock, timeout=120.0)
+            return ftype
+
+        def zero_delta(sync, seq):
+            deltas = [(1.0, np.zeros(g.size, np.int8)) for g in layout.groups]
+            protocol.send_frame(
+                sock, FrameType.JOB_DELTA,
+                protocol.encode_job_v2(sync, seq, 0, 0, batch, rng,
+                                       kind="int8", deltas=deltas))
+            ftype, _p, _ = protocol.recv_frame(sock, timeout=120.0)
+            return ftype
+
+        assert snapshot(1) == FrameType.GRAD
+        assert zero_delta(1, 1) == FrameType.GRAD       # extends the shadow
+        assert zero_delta(1, 5) == FrameType.RESYNC     # seq gap -> resync
+        assert zero_delta(2, 1) == FrameType.RESYNC     # unknown sync
+        assert server.resyncs_sent == 2
+        assert snapshot(2) == FrameType.GRAD            # re-install
+        assert zero_delta(2, 1) == FrameType.GRAD       # stream flows again
+    finally:
+        sock.close()
+        server.close()
+
+
+def test_corrupted_job_delta_drops_connection_without_poisoning_shadow():
+    """A checksummed-but-malformed JOB_DELTA must drop the connection before
+    any buffer is touched; the server survives and serves the next client."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    params = jax.device_get(_params())
+    batch = jax.device_get(_batches(1)[0]["ascent"])
+    rng = np.asarray(jax.device_get(jax.random.PRNGKey(5)))
+    from repro.utils import buckets
+    layout = buckets.bucket_layout(params)
+
+    def connect():
+        sock = protocol.connect(server.address)
+        protocol.send_frame(sock, FrameType.HELLO,
+                            protocol.encode_hello(Compressor("none")))
+        ftype, _p, _ = protocol.recv_frame(sock, timeout=30.0)
+        assert ftype == FrameType.HELLO_ACK
+        return sock
+
+    sock = connect()
+    try:
+        protocol.send_frame(sock, FrameType.JOB_DELTA,
+                            protocol.encode_job_v2(1, 0, 0, 0, batch, rng,
+                                                   params=params))
+        ftype, _p, _ = protocol.recv_frame(sock, timeout=120.0)
+        assert ftype == FrameType.GRAD
+        # truncated delta: the frame itself is valid (crc over the truncated
+        # payload), the payload is not — decode must raise server-side and
+        # the connection must drop without a half-applied shadow
+        deltas = [(1.0, np.zeros(g.size, np.int8)) for g in layout.groups]
+        good = protocol.encode_job_v2(1, 1, 0, 0, batch, rng,
+                                      kind="int8", deltas=deltas)
+        protocol.send_frame(sock, FrameType.JOB_DELTA, good[:-3])
+        with pytest.raises((ConnectionError, TimeoutError)):
+            protocol.recv_frame(sock, timeout=30.0)
+    finally:
+        sock.close()
+    # the helper is still up: a fresh connection full-syncs and exchanges
+    sock = connect()
+    try:
+        protocol.send_frame(sock, FrameType.JOB_DELTA,
+                            protocol.encode_job_v2(1, 0, 0, 0, batch, rng,
+                                                   params=params))
+        ftype, _p, _ = protocol.recv_frame(sock, timeout=120.0)
+        assert ftype == FrameType.GRAD
+    finally:
+        sock.close()
+        server.close()
+
+
+def test_new_client_old_server_degrades_to_full_snapshots():
+    """Satellite: a delta-configured client against a revision-1 server must
+    keep training on legacy full-snapshot JOB frames — no codec error, no
+    drops, no JOB_DELTA frames on the wire."""
+    server = AscentServer(mlp_loss, legacy_hello=True)
+    server.serve_in_thread()
+    client = RemoteAscentClient(server.address, Compressor("none"),
+                                job_encoding="int8", job_delta=True)
+    try:
+        params = jax.device_get(_params())
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        for step in range(3):
+            assert client.submit(0, params, batch, jax.random.PRNGKey(step),
+                                 step)
+            got = client.poll(block=True, timeout=120.0)
+            assert got is not None and got[1] is not None
+        assert client._v2_ok is False
+        assert client.last_job_kind == "snapshot"
+        assert client.job_encoder.delta_jobs == 0
+        assert client.job_encoder.snapshot_jobs == 3
+        assert client.drops == 0 and client.exchanges == 3
+        assert server.deltas_applied == 0 and server.shadow_installs == 0
+    finally:
+        client.close()
+        server.close()
+
+
+@pytest.mark.parametrize("encoding", ["int8", "topk"])
+def test_loopback_delta_exchange_tracks_true_gradient(encoding):
+    """Delta-encoded JOBs: the server computes on its shadow reconstruction,
+    so the gradient must track the true-params gradient (not bitwise);
+    measured JOB frame bytes must equal the model for both job kinds."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    client = RemoteAscentClient(server.address, Compressor("none"),
+                                job_encoding=encoding, job_delta=True,
+                                job_topk_fraction=0.2)
+    try:
+        params = jax.device_get(_params())
+        rng = jax.random.PRNGKey(5)
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        rs = np.random.RandomState(0)
+        for step in range(4):
+            assert client.submit(0, params, batch, rng, step)
+            got = client.poll(block=True, timeout=120.0)
+            assert got is not None and got[1] is not None
+            _, g, norm, meta = got
+            assert meta["job_bytes"] + meta["grad_bytes"] == meta["wire_bytes"]
+            g_ref, _n, _ = jax.jit(make_ascent_fn(mlp_loss))(params, batch,
+                                                             rng)
+            num = sum(float(np.sum(a * np.asarray(b))) for a, b in
+                      zip(jax.tree.leaves(g),
+                          jax.tree.leaves(jax.device_get(g_ref))))
+            na = np.sqrt(sum(float(np.sum(np.square(a)))
+                             for a in jax.tree.leaves(g)))
+            nb = np.sqrt(sum(float(np.sum(np.square(np.asarray(b))))
+                             for b in jax.tree.leaves(jax.device_get(g_ref))))
+            assert num / (na * nb + 1e-12) > 0.99
+            params = jax.tree.map(
+                lambda x: x + np.float32(0.01) * rs.randn(*x.shape)
+                .astype(np.float32), params)
+        host_rng = np.asarray(jax.device_get(rng))
+        assert client.job_frame_measured["snapshot"] == \
+            protocol.job_frame_bytes(encoding, params, batch, host_rng,
+                                     delta=False)
+        assert client.job_frame_measured[encoding] == \
+            protocol.job_frame_bytes(encoding, params, batch, host_rng,
+                                     delta=True, topk_fraction=0.2)
+        assert client.job_encoder.delta_jobs == 3
+        # the params direction shrank ~4x (whole-frame ratio is diluted at
+        # toy scale by the shared batch/rng aux; the olmo-1b budget in
+        # benchmarks/table_4_2_hetero.py pins the >=4x acceptance claim)
+        if encoding == "int8":
+            snap = protocol.job_frame_breakdown(encoding, params, batch,
+                                                host_rng, delta=False)
+            dlt = protocol.job_frame_breakdown(encoding, params, batch,
+                                               host_rng, delta=True)
+            measured_snap = client.job_frame_measured["snapshot"] - snap["aux"]
+            measured_dlt = client.job_frame_measured["int8"] - dlt["aux"]
+            assert measured_snap == snap["params"]
+            assert measured_dlt == dlt["params"]
+            assert measured_snap >= 4.0 * measured_dlt
+    finally:
+        client.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
 # server/client exchange (in-process server thread: fast, no subprocess)
 # ---------------------------------------------------------------------------
 
@@ -273,9 +552,11 @@ def test_remote_matches_hetero_step_for_step():
     losses_h = [h["loss"] for h in rep_h.metrics_history]
     losses_r = [h["loss"] for h in rep_r.metrics_history]
     np.testing.assert_allclose(losses_r, losses_h, rtol=1e-6, atol=1e-7)
-    # remote metrics carry the wire telemetry; hetero's do not
-    assert "wire_bytes" in rep_r.metrics_history[-1]
-    assert "rtt_s" in rep_r.metrics_history[-1]
+    # remote metrics carry the wire telemetry; hetero's do not. wire_bytes
+    # stays the sum of the per-direction split (backward compat)
+    last = rep_r.metrics_history[-1]
+    assert "wire_bytes" in last and "rtt_s" in last
+    assert last["job_bytes"] + last["grad_bytes"] == last["wire_bytes"]
     assert "wire_bytes" not in rep_h.metrics_history[-1]
 
 
@@ -347,6 +628,53 @@ def test_server_killed_midfit_training_recovers(tmp_path):
     assert any(r["perturbed"] == 0.0 for r in records)
     assert any(r.get("wire_bytes", 0) > 0 and r.get("rtt_s", 0) > 0
                for r in records)
+
+
+def _lockstep_delta_run(steps=12, kill_at=None):
+    """One lockstep remote run with int8 JOB deltas; optionally kill the
+    loopback server right before step `kill_at` (it respawns)."""
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+    opt = optim.sgd(0.1, momentum=0.9)
+    xcfg = ExecutorConfig(lockstep=True, serve_ascent=True,
+                          loss_spec=MLP_LOSS_SPEC, job_compress="int8",
+                          job_delta=True, max_server_respawns=2,
+                          reconnect_backoff_s=0.1)
+    losses, stats = [], {}
+    with RemoteExecutor(mlp_loss, mcfg, opt, exec_cfg=xcfg) as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        for i, b in enumerate(_batches(steps)):
+            if kill_at is not None and i == kill_at:
+                ex.server.proc.kill()
+                ex.server.proc.wait()
+            state, m = ex.step(state, b)
+            losses.append(float(m["loss"]))
+        stats = dict(respawns=ex.server_respawns,
+                     reconnects=ex.client.reconnects,
+                     retried=ex.client.retried_exchanges,
+                     resyncs=ex.client.job_encoder.resyncs,
+                     snapshots=ex.client.job_encoder.snapshot_jobs,
+                     deltas=ex.client.job_encoder.delta_jobs)
+    return losses, stats
+
+
+def test_server_killed_midfit_delta_stream_reconverges_bitwise():
+    """Satellite: killing the server mid-fit under lockstep with int8 JOB
+    deltas must be invisible to the schedule — the client reconnects to the
+    respawned server and falls back to a full-snapshot JOB of its shadow
+    (exactly the params the lost delta encoded), so every loss matches the
+    never-disconnected run bit for bit."""
+    base, base_stats = _lockstep_delta_run()
+    killed, stats = _lockstep_delta_run(kill_at=6)
+    assert base_stats["respawns"] == 0 and base_stats["resyncs"] == 0
+    assert stats["respawns"] == 1, stats
+    assert stats["reconnects"] >= 1
+    # the recovery went through the full-snapshot fallback: either the
+    # in-flight exchange was resent as a snapshot (retried>0) or the next
+    # delta drew a RESYNC from the fresh server (resyncs>0)
+    assert stats["retried"] + stats["resyncs"] >= 1, stats
+    assert stats["snapshots"] >= 2        # initial sync + the resync
+    assert np.array_equal(np.asarray(killed), np.asarray(base)), \
+        (base, killed)
 
 
 def test_remote_calibration_probe_measures_the_wire():
