@@ -22,11 +22,19 @@ loopback runs, then models the olmo-1b wire budget per exchange
 (fp32 snapshot vs int8 delta vs topk delta) from abstract params — the
 artifact behind the README wire-budget table and the >=4x JOB-direction
 acceptance claim.
+
+Both entry points take `clients=N` (CLI `--clients N`): N descent clients
+attach to ONE spawned pool server (`--pool-workers 2`) in the same
+ascent-sync group, each fit on its own thread. The wire models are then
+asserted measured == modeled per client, and the fleet aggregate
+(sum of per-client JOB/GRAD bytes) plus the pool's shutdown stats line are
+reported — the multi-client half of the Table 4.2 wire story.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import threading
 
 import jax
 import numpy as np
@@ -83,17 +91,24 @@ def run(steps: int = 250, batch: int = 128, verbose: bool = True) -> dict:
 
 def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
                job_compress: str = "int8", job_delta: bool = True,
-               verbose: bool = True) -> dict:
+               clients: int = 1, verbose: bool = True) -> dict:
     """Multi-host lane: ascent over a real socket (loopback subprocess).
 
     Reports measured wire traffic per exchange vs the byte models, exact in
     both directions: GRAD (`protocol.grad_frame_bytes` on top of
-    `Compressor.wire_bytes`) and JOB (`protocol.job_frame_bytes` — full
-    snapshot and, when `job_compress`/`job_delta` enable it, the
+    `Compressor.wire_bytes` — including the revision-3 pool-telemetry
+    prelude the pooled server now sends) and JOB (`protocol.job_frame_bytes`
+    — full snapshot and, when `job_compress`/`job_delta` enable it, the
     delta-encoded form). The server holds `repro.service.testing:mlp_loss`
     — the same generic w{i}/b{i} MLP math as `benchmarks.common.mlp_loss`,
     importable from the subprocess regardless of cwd.
+
+    `clients > 1` switches to the pool topology: one spawned server with two
+    ascent workers, N concurrent client fits (see `_run_remote_pool`).
     """
+    if clients > 1:
+        return _run_remote_pool(steps, batch, compressor, job_compress,
+                                job_delta, clients, verbose)
     frac = 0.5
     mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac,
                         compressor=compressor)
@@ -130,7 +145,9 @@ def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
         ascent_capped = jax.tree.map(lambda x: x[:target], ascent_t)
         rng_t = np.asarray(jax.device_get(jax.random.PRNGKey(1)))
         comp = Compressor(kind=compressor, topk_fraction=mcfg.topk_fraction)
-        modeled = protocol.grad_frame_bytes(comp, params_t)
+        # the pooled server negotiates protocol revision 3, so every GRAD
+        # frame carries the pool-telemetry prelude — model it
+        modeled = protocol.grad_frame_bytes(comp, params_t, pool=True)
         measured = client.wire_bytes_per_exchange
         delta_active = job_delta and job_compress != "none"
         # a snapshot is either the uncapped calibration probe or a capped
@@ -195,7 +212,152 @@ def run_remote(steps: int = 120, batch: int = 128, compressor: str = "int8",
     return out
 
 
-def run_wire_budget(steps: int = 40, batch: int = 128,
+def _run_remote_pool(steps: int, batch: int, compressor: str,
+                     job_compress: str, job_delta: bool, clients: int,
+                     verbose: bool) -> dict:
+    """N descent clients against ONE spawned pool server (2 ascent workers).
+
+    Each client runs the same fit on its own thread, attached to the shared
+    `fleet` ascent-sync group with a stable numeric `client_id`, and the
+    wire models are asserted measured == modeled for every client's own
+    stream. The aggregate (summed per-client JOB/GRAD bytes) is the fleet
+    wire budget; the pool's shutdown stats line (parsed from the subprocess
+    tail after kill) is the scheduler-side evidence — connections, served
+    exchanges, shared-shadow install/replay counters.
+
+    The fits run lockstep with a per-step barrier across the replicas (a DP
+    launcher's collective would impose the same cadence): every step is a
+    real exchange — no warmup race against the subprocess jit — and the
+    replica skew stays within the canonical shadow's replay ring.
+    """
+    from repro.engine.callbacks import Callback
+    from repro.service import spawn_server
+
+    class _StepBarrier(Callback):
+        def __init__(self, barrier):
+            self.barrier = barrier
+
+        def on_step(self, engine, state, metrics, step_time_s):
+            self.barrier.wait(timeout=600)
+    frac = 0.5
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=frac,
+                        compressor=compressor)
+    val = TASK.valid_set()
+    batches = [{**b, "ascent": slice_ascent_batch(b, frac)}
+               for b in TASK.train_batches(batch, steps)]
+    handle = spawn_server("repro.service.testing:mlp_loss",
+                          pool_workers=2,
+                          queue_depth=max(4, 2 * clients))
+    barrier = threading.Barrier(clients)
+    results: list = [None] * clients
+    errors: list = []
+
+    def _one(idx: int) -> None:
+        opt = optim.sgd(optim.cosine_schedule(0.05, steps), momentum=0.9)
+        meter = ThroughputMeter()
+        telemetry = StalenessTelemetry(
+            print_summary=False,
+            jsonl_path=TELEMETRY_DIR /
+            f"table_4_2_pool_{compressor}_job_{job_compress}_c{idx}.jsonl")
+        with RemoteExecutor(mlp_loss, mcfg, opt, exec_cfg=ExecutorConfig(
+                max_staleness=3, lockstep=True, ascent_addr=handle.addr,
+                job_compress=job_compress, job_delta=job_delta,
+                client_id=str(idx), sync_group="fleet")) as ex:
+            state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
+                                  jax.random.PRNGKey(1))
+            report = Engine(ex, batches,
+                            [meter, telemetry, _StepBarrier(barrier)]).fit(
+                state, steps, warmup=1)
+            c = ex.client
+            results[idx] = {
+                "client_id": idx,
+                "val_acc": accuracy(report.final_state.params, val),
+                "exchanges": c.exchanges,
+                "grad_frame_measured": c.wire_bytes_per_exchange,
+                "job_frame_measured": dict(c.job_frame_measured),
+                "wire_in_bytes": c.wire_in_bytes,
+                "wire_out_bytes": c.wire_out_bytes,
+                "busy_rejections": c.busy_rejections,
+                "detaches": c.detaches,
+            }
+
+    def _guard(idx: int) -> None:
+        try:
+            _one(idx)
+        except BaseException as e:  # noqa: BLE001 — re-raised on the caller
+            errors.append((idx, e))
+            barrier.abort()          # release any replica waiting on us
+
+    try:
+        threads = [threading.Thread(target=_guard, args=(i,), daemon=True)
+                   for i in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        handle.kill()
+    if errors:
+        raise RuntimeError(f"pool client {errors[0][0]} failed") \
+            from errors[0][1]
+    stats = handle.stats()
+
+    # measured == modeled, per client, both wire directions
+    params_t = jax.device_get(mlp_init(jax.random.PRNGKey(0)))
+    ascent_t = jax.device_get(batches[0]["ascent"])
+    rng_t = np.asarray(jax.device_get(jax.random.PRNGKey(1)))
+    comp = Compressor(kind=compressor, topk_fraction=mcfg.topk_fraction)
+    modeled = protocol.grad_frame_bytes(comp, params_t, pool=True)
+    delta_active = job_delta and job_compress != "none"
+    job_modeled = {"snapshot": protocol.job_frame_bytes(
+        job_compress, params_t, ascent_t, rng_t, delta=False)}
+    if delta_active:
+        job_modeled[job_compress] = protocol.job_frame_bytes(
+            job_compress, params_t, ascent_t, rng_t, delta=True,
+            topk_fraction=mcfg.topk_fraction)
+    for r in results:
+        assert r["exchanges"] > 0, r
+        assert r["grad_frame_measured"] == modeled, (r, modeled)
+        for kind, measured_job in r["job_frame_measured"].items():
+            assert measured_job == job_modeled[kind], \
+                (r["client_id"], kind, measured_job, job_modeled)
+    out = {
+        "clients": clients,
+        "per_client": results,
+        "val_acc": float(np.mean([r["val_acc"] for r in results])),
+        "exchanges": sum(r["exchanges"] for r in results),
+        "grad_frame_measured": results[0]["grad_frame_measured"],
+        "grad_frame_modeled": modeled,
+        "job_frame_measured": dict(results[0]["job_frame_measured"]),
+        "job_frame_modeled": job_modeled,
+        "fleet_wire_out_bytes": sum(r["wire_out_bytes"] for r in results),
+        "fleet_wire_in_bytes": sum(r["wire_in_bytes"] for r in results),
+        "pool_stats": stats,
+    }
+    if stats:
+        # scheduler-side cross-check: every client attached, and the pool
+        # served at least as many exchanges as any single client saw
+        assert stats["connections"] >= clients, (stats, clients)
+        assert stats["exchanges"] >= max(r["exchanges"] for r in results), \
+            stats
+    if verbose:
+        for r in results:
+            print(f"table_4_2_pool,client={r['client_id']},"
+                  f"exchanges={r['exchanges']},acc={r['val_acc']:.4f},"
+                  f"job_bytes={r['wire_out_bytes']},"
+                  f"grad_bytes={r['wire_in_bytes']},"
+                  f"busy={r['busy_rejections']},detaches={r['detaches']}")
+        print(f"table_4_2_pool,fleet,clients={clients},"
+              f"exchanges={out['exchanges']},"
+              f"job_bytes={out['fleet_wire_out_bytes']},"
+              f"grad_bytes={out['fleet_wire_in_bytes']}")
+        print("table_4_2_pool,claim_wire_model_exact_per_client,PASS")
+        if stats:
+            print(f"table_4_2_pool,server_stats,{json.dumps(stats)}")
+    return out
+
+
+def run_wire_budget(steps: int = 40, batch: int = 128, clients: int = 1,
                     verbose: bool = True) -> dict:
     """JOB-direction wire budget: measured sweep + modeled olmo-1b table.
 
@@ -211,7 +373,7 @@ def run_wire_budget(steps: int = 40, batch: int = 128,
     for enc in ("none", "int8", "topk"):
         r = run_remote(steps=steps, batch=batch, compressor="int8",
                        job_compress=enc, job_delta=(enc != "none"),
-                       verbose=False)
+                       clients=clients, verbose=False)
         measured[enc] = {
             "job_frame_measured": r["job_frame_measured"],
             "job_frame_modeled": r["job_frame_modeled"],
@@ -276,6 +438,13 @@ def run_wire_budget(steps: int = 40, batch: int = 128,
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Table 4.2: AsyncSAM hetero + remote/pool wire budget")
+    ap.add_argument("--clients", type=int, default=1,
+                    help="descent clients attached to one pool server "
+                         "(>1 switches the remote runs to pool topology)")
+    args = ap.parse_args()
     run()
-    run_remote()
-    run_wire_budget()
+    run_remote(clients=args.clients)
+    run_wire_budget(clients=args.clients)

@@ -18,6 +18,13 @@
 #                                            # tests with REPRO_FUSED=1, i.e.
 #                                            # fused path forced and kernels
 #                                            # in Pallas interpret mode on CPU
+#   ./scripts/tier1.sh --pool                # multi-client ascent pool lane
+#                                            # (N concurrent clients, shared
+#                                            # canonical shadow, BUSY/auth
+#                                            # hardening, subprocess fleet
+#                                            # acceptance) under the same hard
+#                                            # timeout + interpret kernels as
+#                                            # the --service lane
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -35,5 +42,10 @@ if [[ "${1:-}" == "--service" ]]; then
   shift
   exec timeout --signal=TERM --kill-after=30 900 \
     env REPRO_KERNELS=interpret python -m pytest -q tests/test_service.py "$@"
+fi
+if [[ "${1:-}" == "--pool" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_pool.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -48,8 +48,14 @@ ENGINE_METRIC_KEYS = ("loss", "grad_norm", "tau", "perturbed")
 #:                delta-encoded bucket sections)
 #:   grad_bytes — the GRAD frame (compressed ascent gradient back)
 #:   rtt_s      — round-trip seconds of that exchange
+#: The pool lane (multi-client ascent pool, protocol revision 3) adds:
+#:   pool_depth  — queue depth the exchange was admitted behind
+#:   pool_wait_s — seconds the job waited before a pool worker took it
+#:   client_id   — numeric client identity (crc32 of the declared id, so
+#:                 fleet jsonl traces from many clients can be joined)
 ENGINE_OPTIONAL_METRIC_KEYS = ("wire_bytes", "job_bytes", "grad_bytes",
-                               "rtt_s")
+                               "rtt_s", "pool_depth", "pool_wait_s",
+                               "client_id")
 
 
 @runtime_checkable

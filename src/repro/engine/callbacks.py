@@ -133,7 +133,10 @@ class StalenessTelemetry(Callback):
     per-direction split `job_bytes`/`grad_bytes`, and `rtt_s` — and each
     record gains those fields, so the JOB-direction win of delta-encoded
     payloads is visible per step while `wire_bytes` stays the sum for
-    backward compatibility.
+    backward compatibility. Against a multi-client ascent pool the records
+    additionally carry `pool_depth`/`pool_wait_s` (scheduler pressure seen
+    by this exchange) and `client_id` (numeric identity), so one merged
+    fleet trace can be split back per descent client.
     """
 
     #: metric keys recorded per step when the executor emits them (remote lane)

@@ -66,7 +66,9 @@ class RemoteExecutor(HeteroExecutor):
                     "server knows which loss function to hold")
             self.server = spawn_server(self._loss_spec,
                                        bind=addr or "127.0.0.1:0",
-                                       delay_s=xcfg.ascent_delay_s)
+                                       delay_s=xcfg.ascent_delay_s,
+                                       pool_workers=xcfg.pool_workers,
+                                       auth_token=xcfg.auth_token)
             addr = self.server.addr
         if not addr:
             raise ValueError("RemoteExecutor needs ExecutorConfig.ascent_addr "
@@ -84,7 +86,13 @@ class RemoteExecutor(HeteroExecutor):
             # server kill stays bitwise transparent to the schedule.
             job_encoding=xcfg.job_compress,
             job_delta=xcfg.job_delta,
-            retry_inflight=xcfg.lockstep)
+            retry_inflight=xcfg.lockstep,
+            # pool identity: a stable client_id keys this client's canonical
+            # shadow and telemetry; sync_group opts into the pool's shared
+            # (LSAM-smoothed) group gradient; auth_token for non-loopback
+            client_id=xcfg.client_id,
+            sync_group=xcfg.sync_group,
+            auth_token=xcfg.auth_token)
         try:
             super().__init__(loss_fn, method_cfg, optimizer, exec_cfg=xcfg,
                              calibrate=calibrate,
@@ -115,7 +123,9 @@ class RemoteExecutor(HeteroExecutor):
         self.server_respawns += 1
         try:
             self.server = spawn_server(self._loss_spec, bind="127.0.0.1:0",
-                                       delay_s=self.xcfg.ascent_delay_s)
+                                       delay_s=self.xcfg.ascent_delay_s,
+                                       pool_workers=self.xcfg.pool_workers,
+                                       auth_token=self.xcfg.auth_token)
         except RuntimeError as e:
             self.client._note_error(f"server respawn failed: {e}")
             return

@@ -32,6 +32,11 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 20 --executor remote --serve-ascent \
       --job-compress int8
+  # fleet mode: several descent hosts sharing one multi-client ascent pool,
+  # perturbing coherently via a `global` sync group (run per descent host)
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 20 --executor remote \
+      --ascent-addr pool-host:7431 --sync-group dp0 --auth-token "$TOKEN"
 """
 from __future__ import annotations
 
@@ -91,6 +96,20 @@ def main() -> None:
                     help="remote only: delta-encode JOB payloads against the "
                          "server's params shadow (off: every exchange ships "
                          "a full snapshot even with --job-compress set)")
+    ap.add_argument("--pool-workers", type=int, default=0,
+                    help="remote + --serve-ascent only: ascent workers in the "
+                         "spawned pool server (0 = server default; a shared "
+                         "pool serving several descent hosts wants >= 2)")
+    ap.add_argument("--sync-group", default="",
+                    help="remote only: `global` ascent-sync group name — "
+                         "clients declaring the same group receive the "
+                         "pool's shared LSAM-smoothed ascent gradient per "
+                         "(generation, step), so data-parallel replicas "
+                         "perturb coherently")
+    ap.add_argument("--auth-token", default="",
+                    help="remote only: shared secret presented in HELLO "
+                         "(must match the pool server's --auth-token; "
+                         "required for non-loopback deployments)")
     ap.add_argument("--ascent-device", default="",
                     help="hetero only: device for the slow ascent lane, e.g. "
                          "'cpu:0' (paper's CPU helper on a CPU+accelerator host)")
@@ -142,6 +161,14 @@ def main() -> None:
             and args.executor != "remote"):
         ap.error("--job-compress/--job-delta apply to --executor remote only "
                  "(the JOB direction exists only on the wire)")
+    if ((args.sync_group or args.auth_token or args.pool_workers)
+            and args.executor != "remote"):
+        ap.error("--pool-workers/--sync-group/--auth-token apply to "
+                 "--executor remote only (they configure the ascent pool)")
+    if args.pool_workers and not args.serve_ascent:
+        ap.error("--pool-workers configures the spawned loopback server; "
+                 "with --ascent-addr the pool size is the server's "
+                 "--pool-workers")
     if args.executor == "remote" and not (args.ascent_addr or args.serve_ascent):
         ap.error("--executor remote needs --ascent-addr (a running "
                  "ascent server) or --serve-ascent (loopback subprocess)")
@@ -185,7 +212,10 @@ def main() -> None:
                                   fused_update=fused_update,
                                   resident=resident,
                                   job_compress=args.job_compress,
-                                  job_delta=(args.job_delta == "on"))
+                                  job_delta=(args.job_delta == "on"),
+                                  pool_workers=args.pool_workers,
+                                  sync_group=args.sync_group,
+                                  auth_token=args.auth_token)
         executor = RemoteExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)

@@ -83,6 +83,13 @@ class ExecutorConfig:
     # direction ~4x. Degrades to snapshots against a revision-1 server.
     job_compress: str = "none"
     job_delta: bool = True
+    # --- multi-client pool (service.pool.AscentPool) ------------------------
+    client_id: str = ""            # stable identity; "" -> per-client default
+    sync_group: str = ""           # `global` ascent-sync group: same-group
+    #                                clients get the pool's shared smoothed
+    #                                ascent gradient per (generation, step)
+    auth_token: str = ""           # shared secret for non-loopback pools
+    pool_workers: int = 0          # loopback spawn only: 0 = server default
 
 
 # ---------------------------------------------------------------------------
@@ -381,8 +388,11 @@ class AsyncSamExecutor:
         # harvested an exchange (summing a jsonl's wire_bytes column then
         # gives true total traffic) and only when the lane reports it, so
         # the in-process lane's metric surface is unchanged; job_bytes /
-        # grad_bytes split wire_bytes by direction (job + grad == wire)
-        for key in ("wire_bytes", "job_bytes", "grad_bytes", "rtt_s"):
+        # grad_bytes split wire_bytes by direction (job + grad == wire);
+        # pool_depth / pool_wait_s / client_id are the pool-lane fleet
+        # telemetry (ENGINE_OPTIONAL_METRIC_KEYS mirrors this list)
+        for key in ("wire_bytes", "job_bytes", "grad_bytes", "rtt_s",
+                    "pool_depth", "pool_wait_s", "client_id"):
             if key in self._exchange_meta:
                 metrics[key] = float(self._exchange_meta[key])
         return new_state, metrics

@@ -14,6 +14,14 @@ layered on `core.ascent.Compressor.wire_bytes` for the gradient coming
 back, `job_frame_bytes` for the params direction going out — full fp32
 snapshots, or the delta-encoded bucket sections `delta` implements
 (client-side `JobEncoder` with error feedback, server-side `ShadowState`).
+
+`pool` is the multi-client serve core (`AscentPool`): N concurrent client
+connections admitted into a bounded work queue served by M ascent workers,
+one canonical generation-stamped `SharedShadow` per attach scope instead of
+per-connection shadow state, `global` ascent-sync groups handing all
+same-group clients a consistent LSAM-smoothed gradient per (generation,
+step), and BUSY/DETACH backpressure + shared-token auth for non-loopback
+fleets.
 """
 from repro.service.ascent_server import (  # noqa: F401
     AscentServer,
@@ -23,6 +31,11 @@ from repro.service.ascent_server import (  # noqa: F401
 )
 from repro.service.client import RemoteAscentClient  # noqa: F401
 from repro.service.delta import JobEncoder, ShadowState  # noqa: F401
+from repro.service.pool import (  # noqa: F401
+    AscentPool,
+    PoolConfig,
+    SharedShadow,
+)
 from repro.service.protocol import (  # noqa: F401
     FrameType,
     ProtocolError,

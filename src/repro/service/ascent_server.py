@@ -2,25 +2,33 @@
 
     python -m repro.service.ascent_server --loss benchmarks.common:mlp_loss
     python -m repro.service.ascent_server --loss arch:olmo-1b:reduced \
-        --bind 0.0.0.0:7431 --device cpu:0
+        --bind 0.0.0.0:7431 --device cpu:0 --pool-workers 4 \
+        --auth-token "$ASAM_TOKEN"
 
 The server holds the loss function (resolved from an import path or an
-architecture id), jits `core.make_ascent_fn`, and answers JOB frames
-(params snapshot + b'-sized batch + rng) with GRAD frames (compressed ascent
-gradient + norm + staleness metadata). The per-exchange math is exactly
+architecture id), jits `core.make_ascent_fn`, and answers JOB/JOB_DELTA
+frames with GRAD frames. The per-exchange math is exactly
 `runtime.async_executor.ascent_exchange` — the same function the in-process
 thread lane runs — so a loopback remote run reproduces the hetero lane's
 hand-off values bit for bit (compressor "none"/"topk"; one rounding ulp for
 "int8").
 
-Backpressure is structural: one connection is served at a time, one frame is
-in flight per connection (the client keeps a depth-1 job queue, mirroring the
-paper's depth-1 MPI exchange), so a slow server shows up as staleness (tau
-growth) on the client, never as unbounded buffering.
+Since the multi-client pool PR the serve core is `service.pool.AscentPool`:
+a threaded accept loop hands each connection to its own handler, jobs are
+admitted into a bounded queue served by `--pool-workers` ascent workers, and
+per-connection shadow state is replaced by one canonical generation-stamped
+shadow per attach scope (see pool.py). Backpressure stays structural: each
+client keeps a depth-1 job queue (the paper's depth-1 MPI exchange), and the
+pool's bounded admission answers BUSY instead of buffering, so a saturated
+helper shows up as staleness (tau growth) or ledger fallback on the clients,
+never as unbounded memory.
 
-On startup the server prints ``ascent-server listening on <addr>`` to stdout;
-`spawn_server` uses that sentinel to implement the loopback mode (server as a
-local subprocess) that `--serve-ascent` and the service tests drive.
+On startup the server prints ``ascent-server listening on <addr>`` to
+stdout; `spawn_server` uses that sentinel to implement the loopback mode
+(server as a local subprocess) that `--serve-ascent` and the service tests
+drive. On shutdown it prints one ``ascent-pool stats {...}`` JSON line — the
+subprocess tests read it from the handle's tail to assert pool behavior
+(canonical-shadow sharing, BUSY counts) without introspecting the process.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ import argparse
 import collections
 import dataclasses
 import importlib
+import json
 import os
 import signal
 import socket
@@ -38,16 +47,12 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
-from repro.core import make_ascent_fn
-from repro.runtime.async_executor import ascent_exchange
 from repro.service import protocol
-from repro.service.delta import ShadowState
-from repro.service.protocol import FrameType, ProtocolError
-from repro.utils import trees
+from repro.service.pool import AscentPool, PoolConfig
 
 _LISTEN_SENTINEL = "ascent-server listening on "
+_STATS_SENTINEL = "ascent-pool stats "
 
 
 def resolve_loss(spec: str) -> Callable:
@@ -74,34 +79,55 @@ def parse_device(spec: str) -> Optional[jax.Device]:
 
 
 class AscentServer:
-    """Serves ascent-gradient exchanges to one client at a time."""
+    """Accept loop + AscentPool: serves N clients with M ascent workers."""
 
     def __init__(self, loss_fn: Callable, *, bind: str = "127.0.0.1:0",
                  device: Optional[jax.Device] = None, delay_s: float = 0.0,
-                 legacy_hello: bool = False):
-        self._ascent = jax.jit(make_ascent_fn(loss_fn))
-        self._norm = jax.jit(trees.global_norm)
-        self._device = device
-        self._delay_s = delay_s
+                 legacy_hello: bool = False, pool_workers: int = 1,
+                 queue_depth: int = 4, auth_token: str = "",
+                 idle_timeout_s: float = 600.0, smooth_beta: float = 0.9,
+                 shadow_history: int = 4):
+        cfg = PoolConfig(workers=pool_workers, queue_depth=queue_depth,
+                         auth_token=auth_token, idle_timeout_s=idle_timeout_s,
+                         smooth_beta=smooth_beta,
+                         shadow_history=shadow_history, delay_s=delay_s,
+                         legacy_hello=legacy_hello)
+        self.pool = AscentPool(loss_fn, cfg, device=device)
         self._bind_spec = bind
-        # test hook: behave like a revision-1 server (no capability keys in
-        # the HELLO_ACK, JOB_DELTA frames rejected) so the client's degrade
-        # path is testable without an old binary
-        self._legacy_hello = legacy_hello
         self._listener: Optional[socket.socket] = None
         self.address: Optional[str] = None
         self._stop = threading.Event()
-        self._conn: Optional[socket.socket] = None
-        self.exchanges = 0
-        self.connections = 0
-        self.resyncs_sent = 0
-        self.shadow_installs = 0
-        self.deltas_applied = 0
+
+    # counter views (the pre-pool server kept these as plain attributes;
+    # tests and telemetry read them by name)
+    @property
+    def exchanges(self) -> int:
+        return self.pool.exchanges
+
+    @property
+    def connections(self) -> int:
+        return self.pool.connections
+
+    @property
+    def resyncs_sent(self) -> int:
+        return self.pool.resyncs_sent
+
+    @property
+    def shadow_installs(self) -> int:
+        return self.pool.stats()["shadow_installs"]
+
+    @property
+    def deltas_applied(self) -> int:
+        return self.pool.stats()["deltas_applied"]
+
+    def stats(self) -> dict:
+        return self.pool.stats()
 
     def start(self) -> str:
         """Bind + listen; returns the resolved address ("host:port"/"unix:...")."""
         if self._listener is None:
-            self._listener, self.address = protocol.bind_listener(self._bind_spec)
+            self._listener, self.address = protocol.bind_listener(
+                self._bind_spec, backlog=16)
         return self.address
 
     def serve_forever(self) -> None:
@@ -114,22 +140,7 @@ class AscentServer:
                 continue
             except OSError:
                 break
-            self._conn = conn
-            self.connections += 1
-            try:
-                self._handle(conn)
-            except (ConnectionError, ProtocolError, OSError, TimeoutError):
-                pass        # client went away / spoke garbage: next accept
-            except Exception as e:  # noqa: BLE001 — one bad connection must
-                # never take down a long-running helper; log and re-accept
-                print(f"ascent-server: connection failed: "
-                      f"{type(e).__name__}: {e}", flush=True)
-            finally:
-                try:
-                    conn.close()
-                except OSError:
-                    pass
-                self._conn = None
+            self.pool.attach(conn)
 
     def serve_in_thread(self) -> threading.Thread:
         """Test hook: accept loop on a daemon thread (same-process loopback)."""
@@ -138,93 +149,15 @@ class AscentServer:
         t.start()
         return t
 
-    def _handle(self, conn: socket.socket) -> None:
-        ftype, payload, _ = protocol.recv_frame(conn, stop=self._stop,
-                                                timeout=30.0)
-        if ftype != FrameType.HELLO:
-            raise ProtocolError(f"expected HELLO, got {ftype.name}")
-        compressor, _hello = protocol.decode_hello(payload)
-        protocol.send_frame(
-            conn, FrameType.HELLO_ACK,
-            protocol.encode_hello(
-                compressor, proto=None if self._legacy_hello else
-                protocol.PROTO_REVISION))
-        # error-feedback residual and the params shadow are per-connection:
-        # a reconnect starts the quantizer's memory fresh and requires a
-        # full-snapshot JOB before any delta (the old stream's state
-        # belonged to a connection that no longer exists)
-        comp_state = None
-        shadow = ShadowState()
-        while not self._stop.is_set():
-            try:
-                ftype, payload, _ = protocol.recv_frame(conn, stop=self._stop)
-            except ConnectionAbortedError:
-                break       # stop was set while waiting for the next job
-            if ftype == FrameType.JOB:
-                try:
-                    gen, step, params, batch, rng = \
-                        protocol.decode_job(payload)
-                except Exception as e:  # checksummed but malformed: this
-                    raise ProtocolError(  # client is skewed — drop it
-                        f"malformed JOB payload ({type(e).__name__}: {e})"
-                    ) from e
-            elif ftype == FrameType.JOB_DELTA and not self._legacy_hello:
-                # decode + (for deltas) shadow-apply happen BEFORE any
-                # compute; a corrupted frame raises here and drops the
-                # connection with the shadow untouched
-                try:
-                    (sync, seq, gen, step, kind, params, batch, rng,
-                     sections) = protocol.decode_job_v2(payload)
-                except ProtocolError:
-                    raise
-                except Exception as e:
-                    raise ProtocolError(
-                        f"malformed JOB_DELTA payload "
-                        f"({type(e).__name__}: {e})") from e
-                if kind == "snapshot":
-                    if sync:     # sync == 0: stateless, no delta stream
-                        shadow.install(params, sync)
-                        self.shadow_installs += 1
-                else:
-                    if not shadow.can_apply(sync, seq):
-                        self.resyncs_sent += 1
-                        protocol.send_frame(
-                            conn, FrameType.RESYNC,
-                            protocol.encode_resync(
-                                f"shadow at (sync={shadow.sync}, "
-                                f"seq={shadow.seq}) cannot take "
-                                f"(sync={sync}, seq={seq})", shadow.sync))
-                        continue
-                    shadow.apply(kind, sections, sync, seq)
-                    self.deltas_applied += 1
-                    params = shadow.params()
-            else:
-                raise ProtocolError(f"expected JOB, got {ftype.name}")
-            t0 = time.perf_counter()
-            try:
-                g, norm, _wire, comp_state = ascent_exchange(
-                    self._ascent, self._norm, compressor, comp_state,
-                    params, batch, np.asarray(rng),
-                    device=self._device, delay_s=self._delay_s)
-                grad_payload = protocol.encode_grad(
-                    gen, step, norm, time.perf_counter() - t0,
-                    jax.tree.leaves(g), compressor)
-            except Exception as e:  # noqa: BLE001 — surfaced to the client
-                protocol.send_frame(conn, FrameType.ERROR,
-                                    f"{type(e).__name__}: {e}".encode())
-                continue
-            protocol.send_frame(conn, FrameType.GRAD, grad_payload)
-            self.exchanges += 1
-
     def close(self) -> None:
         self._stop.set()
-        for sock in (self._conn, self._listener):
-            if sock is not None:
-                try:
-                    sock.close()
-                except OSError:
-                    pass
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
         self._listener = None
+        self.pool.close()
         if self.address and self.address.startswith("unix:"):
             try:
                 os.unlink(self.address[len("unix:"):])
@@ -256,16 +189,37 @@ class ServerHandle:
                 self.proc.kill()
                 self.proc.wait(timeout=timeout)
 
+    def stats(self, timeout: float = 10.0) -> Optional[dict]:
+        """The pool's exit stats line, parsed from the captured tail.
+
+        Only meaningful after `kill()` (the server prints it on shutdown);
+        waits up to `timeout` for the line to land in the tail."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            for line in list(self.tail):
+                if line.startswith(_STATS_SENTINEL):
+                    try:
+                        return json.loads(line[len(_STATS_SENTINEL):])
+                    except ValueError:
+                        return None
+            if not self.alive() and time.monotonic() + 0.5 > deadline:
+                break
+            time.sleep(0.1)
+        return None
+
 
 def spawn_server(loss_spec: str, *, bind: str = "127.0.0.1:0",
                  device: str = "", delay_s: float = 0.0,
-                 startup_timeout_s: float = 120.0) -> ServerHandle:
+                 startup_timeout_s: float = 120.0, pool_workers: int = 0,
+                 queue_depth: int = 0, auth_token: str = "",
+                 smooth_beta: Optional[float] = None) -> ServerHandle:
     """Start ``python -m repro.service.ascent_server`` and wait for its
     listening sentinel; returns a handle with the connectable address.
 
     A daemon thread keeps draining the child's stdout afterwards, so a chatty
     server can never block on a full pipe; the last lines are retained on the
-    handle for post-mortems.
+    handle for post-mortems (including the shutdown stats line). Pool knobs
+    at their zero/None defaults are left to the server's own defaults.
     """
     src_root = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
@@ -278,6 +232,14 @@ def spawn_server(loss_spec: str, *, bind: str = "127.0.0.1:0",
         cmd += ["--device", device]
     if delay_s:
         cmd += ["--delay-s", str(delay_s)]
+    if pool_workers:
+        cmd += ["--pool-workers", str(pool_workers)]
+    if queue_depth:
+        cmd += ["--queue-depth", str(queue_depth)]
+    if auth_token:
+        cmd += ["--auth-token", auth_token]
+    if smooth_beta is not None:
+        cmd += ["--smooth-beta", str(smooth_beta)]
     proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT, text=True)
     tail: collections.deque = collections.deque(maxlen=50)
@@ -325,6 +287,18 @@ def main(argv=None) -> None:
                     help="jax device for the ascent compute, e.g. 'cpu:0'")
     ap.add_argument("--delay-s", type=float, default=0.0,
                     help="injected per-exchange delay (straggler emulation)")
+    ap.add_argument("--pool-workers", type=int, default=1,
+                    help="concurrent ascent workers serving the job queue")
+    ap.add_argument("--queue-depth", type=int, default=4,
+                    help="admission bound before clients get BUSY")
+    ap.add_argument("--auth-token", default="",
+                    help="shared secret clients must present in HELLO "
+                         "(empty disables auth — loopback only)")
+    ap.add_argument("--idle-timeout-s", type=float, default=600.0,
+                    help="drop a client that sends no job for this long")
+    ap.add_argument("--smooth-beta", type=float, default=0.9,
+                    help="LSAM-style EMA coefficient for sync-group "
+                         "gradients (0 disables smoothing)")
     ap.add_argument("--legacy-hello", action="store_true",
                     help="test hook: behave like a protocol-revision-1 "
                          "server (no JOB_DELTA support announced or accepted)")
@@ -333,7 +307,12 @@ def main(argv=None) -> None:
     server = AscentServer(resolve_loss(args.loss), bind=args.bind,
                           device=parse_device(args.device),
                           delay_s=args.delay_s,
-                          legacy_hello=args.legacy_hello)
+                          legacy_hello=args.legacy_hello,
+                          pool_workers=args.pool_workers,
+                          queue_depth=args.queue_depth,
+                          auth_token=args.auth_token,
+                          idle_timeout_s=args.idle_timeout_s,
+                          smooth_beta=args.smooth_beta)
     addr = server.start()
     print(f"{_LISTEN_SENTINEL}{addr}", flush=True)
     signal.signal(signal.SIGTERM, lambda *_: server.close())
@@ -341,6 +320,8 @@ def main(argv=None) -> None:
         server.serve_forever()
     except KeyboardInterrupt:
         server.close()
+    finally:
+        print(f"{_STATS_SENTINEL}{json.dumps(server.stats())}", flush=True)
 
 
 if __name__ == "__main__":

@@ -25,10 +25,23 @@ back to a full-snapshot JOB. With `retry_inflight` (the lockstep test
 mode), a dropped exchange is resent as a snapshot of the encoder's shadow
 instead of being reported lost, so a mid-fit server kill stays bitwise
 transparent to the training schedule.
+
+Against a multi-client pool server (protocol revision 3) the client also
+declares its identity in HELLO — `client_id` (stable across reconnects),
+`sync_group` (same-group clients receive the pool's shared smoothed ascent
+gradient per generation/step), `auth_token` (non-loopback listeners) — and
+handles the pool's two new frames: BUSY (queue saturated; the exchange is
+reported lost and the executor's staleness ledger absorbs it) and DETACH
+(the canonical shadow's epoch moved past this stream; the encoder
+fast-forwards and re-installs with a snapshot). Reconnects use jittered
+exponential backoff so a restarted pool is not thundering-herded by its
+whole fleet.
 """
 from __future__ import annotations
 
+import os
 import queue
+import random
 import sys
 import threading
 import time
@@ -40,9 +53,37 @@ from repro.core.ascent import Compressor
 from repro.runtime.async_executor import drain_queue, poll_queue
 from repro.service import protocol
 from repro.service.delta import EncodedJob, JobEncoder
+from repro.service.pool import client_uid
 from repro.service.protocol import FrameType, ProtocolError
 
 Pytree = Any
+
+_client_seq = [0]
+_client_seq_lock = threading.Lock()
+
+
+def _default_client_id() -> str:
+    """Process-unique default identity (the pool keys private canonical
+    shadows and error-feedback streams by it, so same-client reconnects must
+    present the same id while two clients in one process must not)."""
+    with _client_seq_lock:
+        _client_seq[0] += 1
+        return f"client-{os.getpid()}-{_client_seq[0]}"
+
+
+def reconnect_delay(attempt: int, base_s: float, cap_s: float,
+                    rand=random.random) -> float:
+    """Jittered exponential reconnect backoff (attempt counts from 1).
+
+    The exponential span doubles per failed attempt up to `cap_s`; the delay
+    is drawn uniformly from [span/2, span] so N clients that lost the same
+    pool at the same instant spread their retries instead of thundering-herd
+    reconnecting in lockstep (the pre-pool client slept a FIXED
+    `reconnect_backoff_s`, synchronizing the whole fleet). `rand` is
+    injectable for deterministic tests.
+    """
+    span = min(float(cap_s), float(base_s) * (2.0 ** (max(1, attempt) - 1)))
+    return span * (0.5 + 0.5 * rand())
 
 
 class RemoteAscentClient:
@@ -55,20 +96,29 @@ class RemoteAscentClient:
     def __init__(self, addr: str, compressor: Optional[Compressor] = None, *,
                  connect_timeout_s: float = 60.0,
                  reconnect_backoff_s: float = 0.25,
+                 reconnect_backoff_max_s: float = 8.0,
                  job_encoding: str = "none", job_delta: bool = True,
                  job_topk_fraction: Optional[float] = None,
-                 retry_inflight: bool = False):
+                 retry_inflight: bool = False,
+                 client_id: str = "", sync_group: str = "",
+                 auth_token: str = ""):
         self._addr = addr
         self._addr_lock = threading.Lock()
         self._compressor = compressor or Compressor(kind="none")
         self.connect_timeout_s = connect_timeout_s
         self.reconnect_backoff_s = reconnect_backoff_s
+        self.reconnect_backoff_max_s = reconnect_backoff_max_s
         self.retry_inflight = retry_inflight
+        self.client_id = client_id or _default_client_id()
+        self.client_uid = client_uid(self.client_id)
+        self.sync_group = sync_group
+        self.auth_token = auth_token
         # negotiated server capabilities (set by the worker at HELLO time):
         # None = never connected, False = revision-1 server (legacy JOB
         # frames only), True = v2 jobs accepted
         self._v2_ok: Optional[bool] = None
         self._srv_encodings: set = set()
+        self._srv_pool = False   # proto>=3 ACK: GRADs carry the pool prelude
         self._encoder = JobEncoder(
             job_encoding,
             topk_fraction=(job_topk_fraction
@@ -87,7 +137,13 @@ class RemoteAscentClient:
         self.drops = 0               # exchanges lost to a dead connection
         self.retried_exchanges = 0   # exchanges resent after a drop (lockstep)
         self.server_errors = 0       # ERROR frames (connection stayed up)
+        self.busy_rejections = 0     # BUSY frames (pool queue saturated)
+        self.detaches = 0            # DETACH frames (shadow epoch moved on)
         self.last_error = ""         # last server/exchange failure, for ops
+        self.fatal_error = ""        # auth rejection: the worker gave up
+        self.last_pool_depth = 0
+        self.last_pool_wait_s = 0.0
+        self._connect_failures = 0   # consecutive, drives the backoff
         self.exchanges = 0
         self.wire_in_bytes = 0       # totals across the session
         self.wire_out_bytes = 0
@@ -114,6 +170,9 @@ class RemoteAscentClient:
 
     def submit(self, gen: int, params: Pytree, batch: Pytree, rng,
                step: int) -> bool:
+        if self.fatal_error:
+            raise RuntimeError(f"ascent service at {self.address} rejected "
+                               f"this client: {self.fatal_error}")
         if self._jobs.full():
             return False
         # encode advances the shadow, so it must not run for a job that
@@ -128,6 +187,11 @@ class RemoteAscentClient:
         return True
 
     def poll(self, block: bool = False, timeout: Optional[float] = None):
+        if self.fatal_error:
+            # fail fast instead of letting a blocking waiter sit out its
+            # whole timeout against a server that will never answer us
+            raise RuntimeError(f"ascent service at {self.address} rejected "
+                               f"this client: {self.fatal_error}")
         return poll_queue(self._results, block, timeout)
 
     def probe(self, params: Pytree, batch: Pytree, rng, probes: int) -> float:
@@ -213,9 +277,22 @@ class RemoteAscentClient:
             return None
         try:
             protocol.send_frame(sock, FrameType.HELLO,
-                                protocol.encode_hello(self._compressor))
+                                protocol.encode_hello(
+                                    self._compressor,
+                                    client_id=self.client_id,
+                                    group=self.sync_group,
+                                    token=self.auth_token))
             ftype, payload, _ = protocol.recv_frame(sock, stop=self._stop,
                                                     timeout=30.0)
+            if ftype == FrameType.ERROR:
+                msg = payload.decode(errors="replace")
+                if msg.startswith("auth-rejected"):
+                    # a retry loop cannot fix a bad shared token: surface a
+                    # fatal error (submit/poll raise) instead of silently
+                    # reconnect-spamming a server that will keep refusing
+                    self.fatal_error = msg
+                    self._note_error(msg)
+                raise ProtocolError(f"HELLO refused: {msg}")
             if ftype != FrameType.HELLO_ACK:
                 raise ProtocolError(f"expected HELLO_ACK, got {ftype.name}")
             _, ack = protocol.decode_hello(payload)
@@ -228,12 +305,15 @@ class RemoteAscentClient:
         # capability negotiation: a revision-1 server's ACK has no "proto"
         # key — degrade to full-snapshot legacy JOB frames instead of
         # failing mid-fit with an unknown-frame error
-        v2 = int(ack.get("proto") or 0) >= 2
+        proto = int(ack.get("proto") or 0)
+        v2 = proto >= 2
         self._srv_encodings = set(ack.get("job_encodings") or []) if v2 else set()
         self._v2_ok = v2
+        self._srv_pool = proto >= protocol.PROTO_REVISION
         if not v2:
             self._encoder.invalidate()
         self._sock = sock
+        self._connect_failures = 0
         if self._ever_connected:
             self.reconnects += 1
         self._ever_connected = True
@@ -265,9 +345,19 @@ class RemoteAscentClient:
             if sock is None:
                 sock = self._connect_once()
                 if sock is None:
+                    if self.fatal_error:
+                        # auth rejection: the server will keep refusing this
+                        # token — stop retrying, surface via submit()/poll()
+                        self._post_failure(0)
+                        return
                     # bounded attempts + stop polling: a client that never
-                    # connects still closes promptly (no hanging join)
-                    self._stop.wait(self.reconnect_backoff_s)
+                    # connects still closes promptly (no hanging join);
+                    # jittered exponential backoff so a restarted pool is
+                    # not thundering-herded by its whole fleet at once
+                    self._connect_failures += 1
+                    self._stop.wait(reconnect_delay(
+                        self._connect_failures, self.reconnect_backoff_s,
+                        self.reconnect_backoff_max_s))
                     continue
             if pending is None:
                 try:
@@ -296,6 +386,41 @@ class RemoteAscentClient:
                                      + payload.decode(errors="replace"))
                     self._post_failure(job.gen)
                     continue
+                if ftype == FrameType.BUSY:
+                    # pool queue saturated: the job was applied to the
+                    # shadow but NOT computed — the delta stream is intact,
+                    # only this exchange is lost (the executor's staleness
+                    # ledger absorbs it, eventually SGD fallback)
+                    pending = None
+                    self.busy_rejections += 1
+                    info = protocol.decode_busy(payload)
+                    self.last_pool_depth = int(info.get("depth") or 0)
+                    self._note_error(
+                        f"pool busy (queue depth {info.get('depth')}); "
+                        "exchange deferred to the staleness ledger")
+                    self._post_failure(job.gen)
+                    continue
+                if ftype == FrameType.DETACH:
+                    # the canonical shadow's epoch moved past our stream
+                    # (another client or a reconnect advanced it): fast-
+                    # forward the encoder's sync floor and re-install with a
+                    # snapshot of the shadow — bitwise the same params
+                    info = protocol.decode_resync(payload)
+                    self.detaches += 1
+                    self._encoder.fast_forward(int(info.get("sync") or 0))
+                    retry = self._encoder.resync_job(job)
+                    if retry is None:
+                        pending = None
+                        self._encoder.invalidate()
+                        self.drops += 1
+                        self._note_error("detached from canonical shadow "
+                                         f"({info.get('reason')}); "
+                                         "exchange dropped")
+                        self._post_failure(job.gen)
+                    else:
+                        pending = retry
+                        self.retried_exchanges += 1
+                    continue
                 if ftype == FrameType.RESYNC:
                     # the server's shadow cannot take this delta (fresh
                     # process, skewed sync/seq): resend as a full snapshot
@@ -317,8 +442,8 @@ class RemoteAscentClient:
                 if ftype != FrameType.GRAD:
                     raise ProtocolError(f"expected GRAD, got {ftype.name}")
                 rtt = time.perf_counter() - t0
-                rgen, _job_step, norm, compute_s, leaves = \
-                    protocol.decode_grad(payload)
+                rgen, _job_step, norm, compute_s, leaves, pool_meta = \
+                    protocol.decode_grad(payload, pool=self._srv_pool)
                 g = jax.tree.unflatten(job.treedef, leaves)
             except ConnectionAbortedError:
                 break        # close() interrupted the wait
@@ -372,7 +497,13 @@ class RemoteAscentClient:
                     "wire_in_bytes": in_bytes, "wire_out_bytes": out_bytes,
                     "job_bytes": float(out_bytes),
                     "grad_bytes": float(in_bytes),
-                    "server_compute_s": compute_s}
+                    "server_compute_s": compute_s,
+                    "client_id": float(self.client_uid)}
+            if pool_meta:
+                self.last_pool_depth = pool_meta["pool_depth"]
+                self.last_pool_wait_s = pool_meta["pool_wait_s"]
+                meta["pool_depth"] = float(pool_meta["pool_depth"])
+                meta["pool_wait_s"] = float(pool_meta["pool_wait_s"])
             try:
                 self._results.put((rgen, g, norm, meta), timeout=1.0)
             except queue.Full:

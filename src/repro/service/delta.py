@@ -112,6 +112,8 @@ class JobEncoder:
         self._leaf_dtypes: Optional[list] = None
         self._sync = 0          # monotonically increasing install id
         self._seq = 0           # delta counter within the current sync
+        self._sync_floor = 0    # DETACH fast-forward: next install id must
+        #                         exceed the pool's canonical shadow sync
         # telemetry
         self.snapshot_jobs = 0
         self.delta_jobs = 0
@@ -127,6 +129,17 @@ class JobEncoder:
         with self._lock:
             self._shadow = self._err = None
             self._layout = self._leaf_dtypes = None
+
+    def fast_forward(self, sync: int) -> None:
+        """Raise the floor for the next install id past the pool's canonical
+        shadow sync (a DETACH told us the shared shadow's epoch moved beyond
+        our stream). Does NOT touch `_sync`/`_seq`, so an in-flight job can
+        still be rebuilt by `resync_job` — only the snapshot that rebuild
+        (or the next fresh snapshot) emits is stamped above `sync`, which is
+        what lets it install over the canonical shadow instead of being
+        skipped as stale."""
+        with self._lock:
+            self._sync_floor = max(self._sync_floor, int(sync))
 
     def _wants_delta(self) -> bool:
         if not self.delta or self.encoding == "none":
@@ -176,7 +189,7 @@ class JobEncoder:
             self._layout = layout
             self._leaf_dtypes = [np.asarray(x).dtype
                                  for x in jax.tree.leaves(host)]
-            self._sync += 1
+            self._sync = max(self._sync, self._sync_floor) + 1
             self._seq = 0
             sync = self._sync
         self.snapshot_jobs += 1
@@ -250,7 +263,7 @@ class JobEncoder:
                     s_new = jnp.asarray(cast_bufs[gi].astype(np.float32))
                     self._err[gi] = self._err[gi] + (self._shadow[gi] - s_new)
                     self._shadow[gi] = s_new
-            self._sync += 1
+            self._sync = max(self._sync, self._sync_floor) + 1
             self._seq = 0
             self.resyncs += 1
             self.snapshot_jobs += 1

@@ -71,14 +71,21 @@ MAGIC = b"ASAM"
 PROTOCOL_VERSION = 1
 #: application-level protocol revision, negotiated in HELLO/HELLO_ACK (the
 #: frame-header version stays at PROTOCOL_VERSION so v1 peers still parse
-#: the handshake); revision 2 adds JOB_DELTA/RESYNC and the job encodings
-PROTO_REVISION = 2
-#: JOB-direction encodings a revision-2 server accepts
+#: the handshake); revision 2 adds JOB_DELTA/RESYNC and the job encodings,
+#: revision 3 adds the multi-client pool semantics: HELLO identity/auth
+#: fields (client_id/group/generation/token), BUSY/DETACH frames, and the
+#: pool-telemetry GRAD prelude extension (depth + queue-wait, emitted only
+#: when BOTH ends negotiated revision >= 3)
+PROTO_REVISION = 3
+#: JOB-direction encodings a revision-2+ server accepts
 JOB_ENCODINGS = ("none", "int8", "topk")
 FRAME_HEADER_BYTES = 16
 #: fixed GRAD-payload prelude: gen u32 + job_step u32 + norm f64 +
 #: compute_time f64 + kind u8 + n_leaves u32
 GRAD_FIXED_BYTES = 4 + 4 + 8 + 8 + 1 + 4
+#: revision-3 pool-telemetry GRAD prelude extension: queue depth u32 +
+#: queue-wait seconds f64 (present iff both peers negotiated proto >= 3)
+GRAD_POOL_BYTES = 4 + 8
 #: fixed JOB_DELTA-payload prelude: sync u32 + seq u32 + gen u32 + step u32 +
 #: kind u8 + n_buckets u32
 JOB_FIXED_BYTES = 4 + 4 + 4 + 4 + 1 + 4
@@ -100,6 +107,16 @@ class FrameType(IntEnum):
     ERROR = 5
     JOB_DELTA = 6
     RESYNC = 7
+    #: revision 3 — pool queue full: the job was NOT admitted; the client
+    #: should treat the exchange as failed (ledger fallback) and keep its
+    #: delta stream as-is (the server applied any shadow delta before
+    #: rejecting, so (sync, seq) stays aligned)
+    BUSY = 8
+    #: revision 3 — the canonical shadow's epoch moved past this client's
+    #: delta stream (another client or a reconnect advanced it); payload is
+    #: the resync codec carrying the canonical sync the client must
+    #: fast-forward beyond before its next snapshot
+    DETACH = 9
 
 
 class ProtocolError(RuntimeError):
@@ -163,6 +180,26 @@ def send_frame(sock: socket.socket, ftype: FrameType, payload: bytes) -> int:
     frame = encode_frame(ftype, payload)
     sock.settimeout(None)
     sock.sendall(frame)
+    return len(frame)
+
+
+def send_frame_deadline(sock: socket.socket, ftype: FrameType, payload: bytes,
+                        timeout: Optional[float]) -> int:
+    """`send_frame` with a whole-frame send budget (pool per-client deadline).
+
+    A pool worker sending to a wedged client must not stall its slot forever;
+    `timeout` bounds the sendall for the entire frame (None keeps the
+    unbounded `send_frame` behavior).
+    """
+    if timeout is None:
+        return send_frame(sock, ftype, payload)
+    frame = encode_frame(ftype, payload)
+    sock.settimeout(timeout)
+    try:
+        sock.sendall(frame)
+    except socket.timeout as exc:
+        raise TimeoutError(f"timed out sending {ftype.name} frame "
+                           f"({len(frame)} bytes)") from exc
     return len(frame)
 
 
@@ -390,18 +427,39 @@ def decode_trees(payload: bytes) -> tuple[dict, dict]:
 
 def encode_hello(compressor: Compressor, *,
                  proto: Optional[int] = PROTO_REVISION,
-                 job_encodings: Optional[tuple] = JOB_ENCODINGS) -> bytes:
+                 job_encodings: Optional[tuple] = JOB_ENCODINGS,
+                 client_id: str = "", group: str = "", generation: int = 0,
+                 token: str = "", extra: Optional[dict] = None) -> bytes:
     """HELLO / HELLO_ACK payload.
 
     `version` stays the v1 key a revision-1 peer validates; `proto` and
     `job_encodings` are capability keys it ignores. `proto=None` renders the
     exact revision-1 payload (the degrade test's "old server" mode).
+
+    Revision-3 identity/auth keys are added only when truthy, so a pool-aware
+    client talking to a v2 server sends byte-compatible payloads when it has
+    nothing to declare: `client_id` (stable identity across reconnects),
+    `group` (ascent-sync group — same-group clients receive the group's
+    shared smoothed gradient), `generation` (the model generation the client
+    attaches its canonical shadow to), `token` (shared-secret auth for
+    non-loopback listeners). `extra` merges server-side ACK info (pool
+    capability report) without widening this signature per key.
     """
     meta = {"version": PROTOCOL_VERSION, "kind": compressor.kind,
             "topk_fraction": compressor.topk_fraction}
     if proto is not None:
         meta["proto"] = int(proto)
         meta["job_encodings"] = list(job_encodings or ())
+    if client_id:
+        meta["client_id"] = str(client_id)
+    if group:
+        meta["group"] = str(group)
+    if generation:
+        meta["generation"] = int(generation)
+    if token:
+        meta["token"] = str(token)
+    if extra:
+        meta.update(extra)
     return json.dumps(meta).encode()
 
 
@@ -543,6 +601,21 @@ def decode_resync(payload: bytes) -> dict:
         return {"reason": payload.decode(errors="replace"), "sync": 0}
 
 
+def encode_busy(depth: int, gen: int = 0, step: int = 0) -> bytes:
+    """BUSY payload: the pool queue depth that rejected this exchange, plus
+    the (gen, step) of the rejected job so the client can fail the right
+    pending exchange."""
+    return json.dumps({"depth": int(depth), "gen": int(gen),
+                       "step": int(step)}).encode()
+
+
+def decode_busy(payload: bytes) -> dict:
+    try:
+        return json.loads(payload.decode())
+    except Exception:  # diagnostics only
+        return {"depth": 0, "gen": 0, "step": 0}
+
+
 # ---------------------------------------------------------------------------
 # GRAD payload: fixed binary layout, exact length model
 # ---------------------------------------------------------------------------
@@ -552,19 +625,28 @@ def _leaf_topk_k(n: int, fraction: float) -> int:
 
 
 def encode_grad(gen: int, job_step: int, norm: float, compute_time_s: float,
-                leaves: "list[np.ndarray]", compressor: Compressor) -> bytes:
+                leaves: "list[np.ndarray]", compressor: Compressor, *,
+                pool: Optional[tuple] = None) -> bytes:
     """Pack the ascent gradient leaves (flatten order) for the wire.
 
     `leaves` is the output of `jax.tree.leaves` on the (already
     error-feedback-compressed, reconstructed) gradient; the receiver
     re-assembles with its own treedef (both ends hold the same params
     structure).
+
+    `pool=(depth, wait_s)` appends the revision-3 pool-telemetry prelude
+    extension (GRAD_POOL_BYTES) — only emit it to a peer whose HELLO declared
+    proto >= 3, and decode with `decode_grad(..., pool=True)`; a v2 peer
+    parsing the extended payload would see trailing bytes.
     """
     kind = compressor.kind
     out = io.BytesIO()
     out.write(struct.pack(">IIddBI", int(gen), int(job_step), float(norm),
                           float(compute_time_s), _KIND_CODES[kind],
                           len(leaves)))
+    if pool is not None:
+        depth, wait_s = pool
+        out.write(struct.pack(">Id", int(depth), float(wait_s)))
     for leaf in leaves:
         arr = np.ascontiguousarray(np.asarray(leaf, dtype=np.float32))
         out.write(struct.pack(">B", arr.ndim))
@@ -590,15 +672,27 @@ def encode_grad(gen: int, job_step: int, norm: float, compute_time_s: float,
     return out.getvalue()
 
 
-def decode_grad(payload: bytes
-                ) -> tuple[int, int, float, float, "list[np.ndarray]"]:
-    """-> (gen, job_step, norm, compute_time_s, fp32 leaves in flatten order)."""
+def decode_grad(payload: bytes, *, pool: bool = False
+                ) -> tuple[int, int, float, float, "list[np.ndarray]", dict]:
+    """-> (gen, job_step, norm, compute_time_s, fp32 leaves, pool_meta).
+
+    `pool=True` parses the revision-3 pool-telemetry prelude extension into
+    `pool_meta` ({"pool_depth", "pool_wait_s"}); with `pool=False` (a v2
+    GRAD) `pool_meta` is empty. The flag is the HELLO/HELLO_ACK-negotiated
+    capability — payloads are not self-describing here so the exact byte
+    model stays exact.
+    """
     gen, job_step, norm, dt, kind_code, n_leaves = struct.unpack_from(
         ">IIddBI", payload, 0)
     kind = _KIND_NAMES.get(kind_code)
     if kind is None:
         raise ProtocolError(f"unknown grad kind code {kind_code}")
     off = GRAD_FIXED_BYTES
+    pool_meta: dict = {}
+    if pool:
+        depth, wait_s = struct.unpack_from(">Id", payload, off)
+        off += GRAD_POOL_BYTES
+        pool_meta = {"pool_depth": int(depth), "pool_wait_s": float(wait_s)}
     leaves = []
     for _ in range(n_leaves):
         (ndim,) = struct.unpack_from(">B", payload, off)
@@ -629,16 +723,19 @@ def decode_grad(payload: bytes
         leaves.append(np.ascontiguousarray(arr))
     if off != len(payload):
         raise ProtocolError(f"grad payload has {len(payload) - off} trailing bytes")
-    return int(gen), int(job_step), float(norm), float(dt), leaves
+    return int(gen), int(job_step), float(norm), float(dt), leaves, pool_meta
 
 
-def grad_frame_bytes(compressor: Compressor, grad: Pytree) -> int:
+def grad_frame_bytes(compressor: Compressor, grad: Pytree, *,
+                     pool: bool = False) -> int:
     """Exact length of the GRAD *frame* that would carry `grad`.
 
     `Compressor.wire_bytes` models the compressed payload only; this adds the
     framing the payload model deliberately excludes: the 16-byte frame header,
-    the fixed GRAD prelude, and the per-leaf shape/structure metadata. A test
-    asserts modeled == len(encode_frame(...)) for every compressor kind.
+    the fixed GRAD prelude (plus the revision-3 pool-telemetry extension when
+    `pool=True` — a proto>=3 pair always carries it), and the per-leaf
+    shape/structure metadata. A test asserts modeled ==
+    len(encode_frame(...)) for every compressor kind.
     """
     import jax
     leaves = [np.asarray(x) for x in jax.tree.leaves(grad)]
@@ -648,7 +745,8 @@ def grad_frame_bytes(compressor: Compressor, grad: Pytree) -> int:
     elif compressor.kind == "topk":
         structural += 4 * len(leaves)    # per-leaf k
     # int8's per-leaf 8-byte scale is already part of the payload model
-    return (FRAME_HEADER_BYTES + GRAD_FIXED_BYTES + structural
+    return (FRAME_HEADER_BYTES + GRAD_FIXED_BYTES
+            + (GRAD_POOL_BYTES if pool else 0) + structural
             + compressor.wire_bytes(grad))
 
 

@@ -1,0 +1,377 @@
+"""Multi-client ascent pool: scheduler, shared shadow, groups, hardening.
+
+What PR 6 adds on top of the single-connection service tests
+(`test_service.py`): N concurrent clients against one `AscentPool` —
+the canonical generation-stamped `SharedShadow` that lockstep DP replicas'
+delta streams land on exactly once (bitwise-pinned), `global` ascent-sync
+groups handing every member the same smoothed gradient per (generation,
+step), BUSY backpressure degrading to the staleness ledger, shared-token
+auth fast-failing bad clients, and per-client error isolation (one dead
+client never stalls its peers). The subprocess test at the bottom is the
+acceptance criterion: two concurrent `RemoteExecutor` fits, one spawned
+pool server, identical losses, one shadow install on the server's exit
+stats line.
+"""
+import json
+import threading
+import time
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import MethodConfig, slice_ascent_batch
+from repro.core.ascent import Compressor
+from repro.data.synthetic import ClassificationTask
+from repro.engine import Engine, RemoteExecutor, StalenessTelemetry
+from repro.runtime import ExecutorConfig
+from repro.service.ascent_server import AscentServer, spawn_server
+from repro.service.client import RemoteAscentClient, reconnect_delay
+from repro.service.pool import client_uid
+from repro.service.testing import MLP_LOSS_SPEC, mlp_init, mlp_loss
+
+TASK = ClassificationTask(n_classes=4, dim=8, seed=3)
+BATCH = 64
+WIDTHS = (8, 32, 4)
+
+
+def _params(seed=0):
+    return mlp_init(jax.random.PRNGKey(seed), WIDTHS)
+
+
+def _batches(n, frac=0.5):
+    return [{**b, "ascent": slice_ascent_batch(b, frac)}
+            for b in TASK.train_batches(BATCH, n)]
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# satellite: jittered exponential reconnect backoff (pure math)
+# ---------------------------------------------------------------------------
+
+def test_reconnect_delay_jittered_exponential():
+    hi = [reconnect_delay(a, 0.1, 8.0, rand=lambda: 1.0) for a in range(1, 12)]
+    lo = [reconnect_delay(a, 0.1, 8.0, rand=lambda: 0.0) for a in range(1, 12)]
+    # doubling span, capped
+    assert hi[:4] == pytest.approx([0.1, 0.2, 0.4, 0.8])
+    assert max(hi) == 8.0 and hi[-1] == 8.0
+    # jitter floor is half the span: two clients kicked off the same server
+    # never thunder back in phase, but neither waits pathologically long
+    for l, h in zip(lo, hi):
+        assert l == pytest.approx(h / 2)
+    mid = [reconnect_delay(a, 0.1, 8.0) for a in range(1, 12)]
+    for m, l, h in zip(mid, lo, hi):
+        assert l <= m <= h
+
+
+# ---------------------------------------------------------------------------
+# auth: wrong token draws a fast fatal rejection, right token trains
+# ---------------------------------------------------------------------------
+
+def test_auth_rejection_fast_failure_and_accepted_token():
+    server = AscentServer(mlp_loss, auth_token="sesame")
+    server.serve_in_thread()
+    params = jax.device_get(_params())
+    batch = jax.device_get(_batches(1)[0]["ascent"])
+    bad = RemoteAscentClient(server.address, Compressor("none"),
+                             auth_token="wrong", reconnect_backoff_s=0.05)
+    try:
+        deadline = time.monotonic() + 60
+        while not bad.fatal_error and time.monotonic() < deadline:
+            time.sleep(0.02)
+        # the rejection is terminal: no reconnect storm, submit raises
+        assert "auth-rejected" in bad.fatal_error
+        with pytest.raises(RuntimeError, match="rejected"):
+            bad.submit(0, params, batch, jax.random.PRNGKey(0), 0)
+        assert not bad._thread.is_alive()
+        assert bad.reconnects == 0
+    finally:
+        bad.close()
+    good = RemoteAscentClient(server.address, Compressor("none"),
+                              auth_token="sesame")
+    try:
+        assert good.submit(0, params, batch, jax.random.PRNGKey(0), 0)
+        got = good.poll(block=True, timeout=120.0)
+        assert got is not None and got[1] is not None
+        assert server.pool.auth_rejections == 1
+    finally:
+        good.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: one canonical shadow + one group gradient for lockstep replicas
+# ---------------------------------------------------------------------------
+
+def test_two_clients_share_canonical_shadow_and_group_gradient():
+    """Two delta-encoded replicas in one sync group: the canonical shadow
+    installs once and advances once per seq (the peer's duplicate delta is
+    served from the replay ring), both replicas receive the same smoothed
+    gradient bitwise, and the server's shadow buffers stay bit-identical to
+    the client encoder's."""
+    steps = 5
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    mk = lambda cid: RemoteAscentClient(  # noqa: E731
+        server.address, Compressor("none"), job_encoding="int8",
+        job_delta=True, client_id=cid, sync_group="dp")
+    c1, c2 = mk("replica-0"), mk("replica-1")
+    try:
+        params = jax.device_get(_params())
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        rs = np.random.RandomState(0)
+        for step in range(steps):
+            rng = jax.random.PRNGKey(step)
+            assert c1.submit(0, params, batch, rng, step)
+            assert c2.submit(0, params, batch, rng, step)
+            got1 = c1.poll(block=True, timeout=120.0)
+            got2 = c2.poll(block=True, timeout=120.0)
+            assert got1 is not None and got1[1] is not None
+            assert got2 is not None and got2[1] is not None
+            # the group contract: same (generation, step) -> same gradient,
+            # bit for bit, whichever replica's job computed it
+            assert _tree_equal(got1[1], got2[1])
+            assert got1[2] == got2[2]          # norm too
+            params = jax.tree.map(
+                lambda x: x + np.float32(0.01) * rs.randn(*x.shape)
+                .astype(np.float32), params)
+        stats = server.stats()
+        assert stats["shadow_installs"] == 1      # ONE canonical install
+        assert stats["shadow_skips"] == 1         # the peer's duplicate
+        assert stats["deltas_applied"] == steps - 1   # advanced once per seq
+        assert stats["delta_replays"] == steps - 1    # peer served from ring
+        assert stats["resyncs_sent"] == 0 and stats["detaches_sent"] == 0
+        assert stats["group_computes"] == steps
+        assert stats["group_hits"] == steps
+        assert c1.job_encoder.delta_jobs == steps - 1
+        assert c2.job_encoder.delta_jobs == steps - 1
+        # bitwise: server canonical shadow == client encoder shadow
+        shadow = server.pool._shadows[("dp", 0)]
+        srv_bufs = shadow.bufs_copy()
+        enc_bufs = [np.asarray(jax.device_get(s))
+                    for s in c1.job_encoder._shadow]
+        assert srv_bufs is not None and len(srv_bufs) == len(enc_bufs)
+        for a, b in zip(srv_bufs, enc_bufs):
+            assert np.array_equal(a, b)
+    finally:
+        c1.close()
+        c2.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# isolation: one client dying mid-fit never stalls the survivor
+# ---------------------------------------------------------------------------
+
+def test_client_death_leaves_peer_training():
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    c1 = RemoteAscentClient(server.address, Compressor("none"),
+                            client_id="doomed")
+    c2 = RemoteAscentClient(server.address, Compressor("none"),
+                            client_id="survivor")
+    try:
+        params = jax.device_get(_params())
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        for c in (c1, c2):
+            assert c.submit(0, params, batch, jax.random.PRNGKey(0), 0)
+            got = c.poll(block=True, timeout=120.0)
+            assert got is not None and got[1] is not None
+        c1.close()          # dies mid-session from the server's view
+        for step in range(1, 5):
+            assert c2.submit(0, params, batch, jax.random.PRNGKey(step), step)
+            got = c2.poll(block=True, timeout=120.0)
+            assert got is not None and got[1] is not None
+        assert c2.exchanges == 5 and c2.drops == 0
+        deadline = time.monotonic() + 30
+        while server.pool.dropped_clients < 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert server.pool.dropped_clients >= 1
+        assert server.connections == 2
+    finally:
+        c2.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# backpressure: saturated queue draws BUSY, the fit completes on the ledger
+# ---------------------------------------------------------------------------
+
+def test_busy_backpressure_fit_completes_on_ledger(tmp_path):
+    """One slow worker, queue depth 1, three depth-1 clients: admission must
+    reject with BUSY rather than buffer unboundedly, the rejected exchange
+    lands on the client as a failed exchange (staleness ledger), and a fit
+    running through the saturated pool still completes every step."""
+    steps = 10
+    server = AscentServer(mlp_loss, delay_s=0.25, pool_workers=1,
+                          queue_depth=1)
+    server.serve_in_thread()
+    params = jax.device_get(_params())
+    batch = jax.device_get(_batches(1)[0]["ascent"])
+    stop = threading.Event()
+
+    def _hammer(client, seed):
+        step = 0
+        while not stop.is_set():
+            if client.submit(0, params, batch, jax.random.PRNGKey(seed),
+                             step):
+                client.poll(block=True, timeout=10.0)
+                step += 1
+            else:
+                time.sleep(0.01)
+
+    noise = [RemoteAscentClient(server.address, Compressor("none"),
+                                client_id=f"noise-{i}") for i in range(2)]
+    hammers = [threading.Thread(target=_hammer, args=(c, i), daemon=True)
+               for i, c in enumerate(noise)]
+    for t in hammers:
+        t.start()
+    try:
+        mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+        telemetry = StalenessTelemetry(print_summary=False,
+                                       jsonl_path=tmp_path / "busy.jsonl")
+        with RemoteExecutor(mlp_loss, mcfg, optim.sgd(0.1, momentum=0.9),
+                            exec_cfg=ExecutorConfig(
+                                max_staleness=2,
+                                ascent_addr=server.address,
+                                client_id="fit-client")) as ex:
+            state = ex.init_state(_params(), jax.random.PRNGKey(1))
+            report = Engine(ex, _batches(steps), [telemetry]).fit(state,
+                                                                  steps)
+        assert report.steps_done == steps          # graceful degradation
+        losses = [h["loss"] for h in report.metrics_history]
+        assert all(np.isfinite(l) for l in losses)
+        # a saturated single-worker pool cannot perturb every step: the
+        # ledger's SGD fallback carried some of them
+        assert any(h["perturbed"] == 0.0 for h in report.metrics_history)
+        deadline = time.monotonic() + 60
+        while server.pool.busy_rejections < 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert server.pool.busy_rejections >= 1
+        clients_saw = sum(c.busy_rejections for c in noise) + \
+            ex.client.busy_rejections
+        assert clients_saw >= 1
+    finally:
+        stop.set()
+        for t in hammers:
+            t.join(timeout=10)
+        for c in noise:
+            c.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: pool telemetry flows through StalenessTelemetry jsonl
+# ---------------------------------------------------------------------------
+
+def test_pool_telemetry_reaches_jsonl(tmp_path):
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    try:
+        mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+        telemetry = StalenessTelemetry(print_summary=False,
+                                       jsonl_path=tmp_path / "pool.jsonl")
+        with RemoteExecutor(mlp_loss, mcfg, optim.sgd(0.1, momentum=0.9),
+                            exec_cfg=ExecutorConfig(
+                                lockstep=True,
+                                ascent_addr=server.address,
+                                client_id="tele-client")) as ex:
+            state = ex.init_state(_params(), jax.random.PRNGKey(1))
+            report = Engine(ex, _batches(6), [telemetry]).fit(state, 6)
+        assert report.steps_done == 6
+        records = [json.loads(l) for l in
+                   (tmp_path / "pool.jsonl").read_text().splitlines()]
+        tagged = [r for r in records if "client_id" in r]
+        assert tagged, records
+        uid = float(client_uid("tele-client"))
+        assert all(r["client_id"] == uid for r in tagged)
+        assert uid == float(zlib.crc32(b"tele-client"))
+        assert any("pool_depth" in r and "pool_wait_s" in r for r in tagged)
+        assert all(r["pool_wait_s"] >= 0.0 for r in tagged
+                   if "pool_wait_s" in r)
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: subprocess pool server, two concurrent RemoteExecutor fits
+# ---------------------------------------------------------------------------
+
+def test_pool_subprocess_two_concurrent_fits_share_one_shadow():
+    """The acceptance criterion end to end: one spawned pool server with two
+    ascent workers, two concurrent lockstep `RemoteExecutor` fits in the
+    same sync group feeding delta-encoded streams of the same params. Every
+    loss must match bitwise across the replicas (shared group gradient), and
+    the server's exit stats line must show exactly one canonical shadow
+    install with the peer's deltas served as replays."""
+    steps = 8
+    handle = spawn_server(MLP_LOSS_SPEC, pool_workers=2)
+    barrier = threading.Barrier(2)
+    results: dict = {}
+    errors: list = []
+
+    def _one(idx: int) -> None:
+        try:
+            mcfg = MethodConfig(name="async_sam", rho=0.05,
+                                ascent_fraction=0.5)
+            xcfg = ExecutorConfig(lockstep=True, ascent_addr=handle.addr,
+                                  job_compress="int8", job_delta=True,
+                                  client_id=f"replica-{idx}",
+                                  sync_group="dp")
+            losses = []
+            with RemoteExecutor(mlp_loss, mcfg,
+                                optim.sgd(0.1, momentum=0.9),
+                                exec_cfg=xcfg) as ex:
+                state = ex.init_state(_params(), jax.random.PRNGKey(1))
+                for b in _batches(steps):
+                    # per-step barrier: replicas stay within one step of
+                    # each other, as a DP launcher's collective would keep
+                    # them — the shadow replay ring covers the skew
+                    barrier.wait(timeout=180)
+                    state, m = ex.step(state, b)
+                    losses.append(float(m["loss"]))
+                results[idx] = {"losses": losses,
+                                "exchanges": ex.client.exchanges,
+                                "busy": ex.client.busy_rejections,
+                                "detaches": ex.client.detaches}
+        except BaseException as e:  # noqa: BLE001 — re-raised by the test
+            errors.append(e)
+            barrier.abort()
+
+    threads = [threading.Thread(target=_one, args=(i,), daemon=True)
+               for i in range(2)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+    finally:
+        handle.kill()
+    assert not errors, errors
+    assert set(results) == {0, 1}
+    # shared group gradient -> the two fits are the same fit, bit for bit
+    assert results[0]["losses"] == results[1]["losses"]
+    assert all(np.isfinite(l) for l in results[0]["losses"])
+    for r in results.values():
+        assert r["exchanges"] >= steps - 1
+        assert r["busy"] == 0 and r["detaches"] == 0
+    stats = handle.stats()
+    assert stats is not None, list(handle.tail)
+    assert stats["connections"] == 2
+    assert stats["shadow_installs"] == 1       # ONE canonical shadow
+    assert stats["shadow_skips"] >= 1
+    # each delta seq advanced the shadow once; the peer's copy replayed
+    # (the final step's frames may still be in flight at shutdown)
+    assert stats["deltas_applied"] >= steps - 2
+    assert stats["delta_replays"] >= steps - 3
+    assert stats["group_computes"] >= steps - 2
+    assert stats["group_hits"] >= steps - 3
+    assert stats["resyncs_sent"] == 0 and stats["auth_rejections"] == 0
+    assert stats["exchanges"] >= 2 * (steps - 1)

@@ -89,8 +89,9 @@ def test_grad_payload_roundtrip_per_kind():
     def roundtrip(tree, comp):
         payload = protocol.encode_grad(1, 2, 3.5, 0.01,
                                        jax.tree.leaves(tree), comp)
-        gen, jstep, norm, dt, leaves = protocol.decode_grad(payload)
+        gen, jstep, norm, dt, leaves, pool_meta = protocol.decode_grad(payload)
         assert (gen, jstep) == (1, 2) and norm == 3.5
+        assert pool_meta == {}           # no pool prelude unless negotiated
         return jax.tree.unflatten(treedef, leaves)
 
     # none: bit-exact
@@ -121,6 +122,14 @@ def test_grad_frame_bytes_model_matches_serialized_length(kind, frac):
     frame = protocol.encode_frame(FrameType.GRAD, payload)
     assert len(frame) == protocol.grad_frame_bytes(comp, g)
     assert len(payload) - protocol.GRAD_FIXED_BYTES >= comp.wire_bytes(g)
+    # the revision-3 pool-telemetry prelude is modeled exactly too
+    pooled = protocol.encode_grad(0, 0, 1.0, 0.0, jax.tree.leaves(g), comp,
+                                  pool=(3, 0.25))
+    pframe = protocol.encode_frame(FrameType.GRAD, pooled)
+    assert len(pframe) == protocol.grad_frame_bytes(comp, g, pool=True)
+    assert len(pframe) - len(frame) == protocol.GRAD_POOL_BYTES
+    *_rest, leaves, pool_meta = protocol.decode_grad(pooled, pool=True)
+    assert pool_meta == {"pool_depth": 3, "pool_wait_s": 0.25}
 
 
 def test_parse_addr():
@@ -429,9 +438,11 @@ def test_loopback_exchange_matches_local_ascent(kind):
         gen, g, norm, meta = got
         assert gen == 0
         assert meta["wire_bytes"] > 0 and meta["rtt_s"] > 0
-        # measured GRAD frame length == the protocol's exact model
+        # measured GRAD frame length == the protocol's exact model (a
+        # proto-3 pair always carries the pool-telemetry prelude)
         assert meta["wire_in_bytes"] == protocol.grad_frame_bytes(
-            client._compressor, g)
+            client._compressor, g, pool=True)
+        assert "pool_depth" in meta and "pool_wait_s" in meta
         g_ref, n_ref, _ = jax.jit(make_ascent_fn(mlp_loss))(params, batch, rng)
         if kind == "none":
             assert np.isclose(norm, float(n_ref), rtol=1e-5)
