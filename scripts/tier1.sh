@@ -25,6 +25,14 @@
 #                                            # acceptance) under the same hard
 #                                            # timeout + interpret kernels as
 #                                            # the --service lane
+#   ./scripts/tier1.sh --elastic             # elastic/chaos lane: mesh
+#                                            # shrink/grow trajectories,
+#                                            # restore-onto-survivors, the
+#                                            # remote resize-with-live-pool
+#                                            # acceptance test — multi-device
+#                                            # subprocesses + a spawned server,
+#                                            # so the same hard timeout +
+#                                            # interpret kernels as --service
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -47,5 +55,10 @@ if [[ "${1:-}" == "--pool" ]]; then
   shift
   exec timeout --signal=TERM --kill-after=30 900 \
     env REPRO_KERNELS=interpret python -m pytest -q tests/test_pool.py "$@"
+fi
+if [[ "${1:-}" == "--elastic" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_elastic.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -8,6 +8,9 @@ Executor matrix:
     RemoteExecutor  Form B  same two lanes, but the ascent lane lives in
                             another process/host behind repro.service
                             (TCP/Unix sockets; loopback mode for one host)
+    ElasticExecutor wrapper preemption-surviving mesh resizes around any of
+                            the above (shrink onto survivors / grow with
+                            capacity, driven by runtime.chaos MeshEvents)
 
 All satisfy the `StepExecutor` protocol and the `ENGINE_METRIC_KEYS`
 contract; `Engine.fit` drives any of them with the same callbacks.
@@ -29,6 +32,7 @@ from repro.engine.callbacks import (  # noqa: F401
     StalenessTelemetry,
     ThroughputMeter,
 )
+from repro.engine.elastic import ElasticExecutor  # noqa: F401
 from repro.engine.engine import Engine  # noqa: F401
 from repro.engine.fused import FusedExecutor  # noqa: F401
 from repro.engine.hetero import HeteroExecutor  # noqa: F401

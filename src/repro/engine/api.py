@@ -53,9 +53,16 @@ ENGINE_METRIC_KEYS = ("loss", "grad_norm", "tau", "perturbed")
 #:   pool_wait_s — seconds the job waited before a pool worker took it
 #:   client_id   — numeric client identity (crc32 of the declared id, so
 #:                 fleet jsonl traces from many clients can be joined)
+#: The elastic executor (preemption-surviving mesh resizes) adds:
+#:   mesh_devices  — current mesh capacity in devices (every step, so the
+#:                   jsonl shows the mesh's size over the whole run)
+#:   resize_events — cumulative resize count (only on the step right after
+#:                   a shrink/grow, marking exactly when the run resized)
+#:   resize_time_s — seconds that resize's re-place + re-lower cost
 ENGINE_OPTIONAL_METRIC_KEYS = ("wire_bytes", "job_bytes", "grad_bytes",
                                "rtt_s", "pool_depth", "pool_wait_s",
-                               "client_id")
+                               "client_id", "mesh_devices", "resize_events",
+                               "resize_time_s")
 
 
 @runtime_checkable

@@ -136,7 +136,11 @@ class StalenessTelemetry(Callback):
     backward compatibility. Against a multi-client ascent pool the records
     additionally carry `pool_depth`/`pool_wait_s` (scheduler pressure seen
     by this exchange) and `client_id` (numeric identity), so one merged
-    fleet trace can be split back per descent client.
+    fleet trace can be split back per descent client. Under an
+    `ElasticExecutor` every record carries `mesh_devices` (capacity over
+    time) and the step right after a shrink/grow adds
+    `resize_events`/`resize_time_s`, so benchmark artifacts show exactly
+    when a run resized and what it cost.
     """
 
     #: metric keys recorded per step when the executor emits them (remote lane)

@@ -63,12 +63,34 @@ class Engine:
 
     # --- the loop -------------------------------------------------------------
     def fit(self, state: TrainState, steps: int, *, warmup: int = 0,
-            failure_injector=None) -> FitReport:
+            failure_injector=None, events=None) -> FitReport:
         """Train until `state.step == steps`; returns a FitReport.
 
         warmup: steps executed before the clock starts and before
         `on_fit_start` fires (benchmarks exclude compile time this way).
+
+        events: a MeshEvent source (`runtime.chaos.ChaosSchedule` or a
+        production capacity watcher). With an `ElasticExecutor` it is
+        attached to the executor, which drains it before each step (graceful
+        resizes in-band; crash events through the restore path — those need
+        a `CheckpointCallback`). With any other executor a *callable* source
+        degrades to the failure-injector surface: its crash events raise,
+        its resizes are skipped — the generalization of `failure_injector`.
         """
+        if events is not None:
+            attach = getattr(self.executor, "attach_events", None)
+            if attach is not None:
+                attach(events)
+            elif callable(events):
+                if failure_injector is not None:
+                    raise ValueError("pass either events or failure_injector "
+                                     "to a non-elastic executor, not both")
+                failure_injector = events
+            else:
+                raise ValueError(
+                    f"{type(self.executor).__name__} cannot consume a "
+                    "MeshEvent source; wrap it in ElasticExecutor or pass a "
+                    "callable failure injector")
         hook = getattr(self.executor, "pre_fit", None)
         if hook is not None and getattr(self.executor, "wants_pre_fit", True):
             self.pre_fit_report = hook(state, self._probe_batch())

@@ -198,6 +198,59 @@ class FusedExecutor:
                            out_shardings=(state_sh, None),
                            donate_argnums=donate).lower(state_sds, batch_sds)
 
+    def resize(self, state: TrainState, new_mesh) -> TrainState:
+        """Elastic re-entry: re-place the live `state` onto `new_mesh` and
+        re-lower the jitted step against it.
+
+        Donation aliasing survives the resize: the fresh jit keeps the same
+        `donate_argnums`, and its out_shardings are recomputed for the new
+        mesh, so the first post-resize step already aliases input buffers to
+        output buffers. Bucket-resident state stays resident — the bucket
+        layout is mesh-independent (`buckets.rebucket` is an identity
+        re-group here) and the target must be unsharded, same constraint as
+        construction (per-shard bucketing is the ROADMAP follow-on); the
+        placement of the whole buffers is a single replicated device_put.
+        Non-resident state re-places leaf-by-sharding-rule exactly like
+        `init_state`, device-to-device (the survivors already hold their
+        shards — no host round-trip).
+        """
+        assert not self._closed, "executor is closed"
+        donate = (0,) if self.donate else ()
+        if self.resident:
+            if new_mesh is not None and new_mesh.size > 1:
+                raise ValueError(
+                    "bucket-resident step cannot resize onto a sharded mesh "
+                    f"(size {new_mesh.size}); per-shard bucketing is the "
+                    "ROADMAP follow-on — rebuild with resident=False to "
+                    "resize across sharded meshes")
+            # layout is mesh-independent: rebucket is the identity re-group,
+            # re-asserted here so a layout-changing source (per-shard
+            # buckets, someday) flows through the same edge
+            state = jax.tree.map(
+                lambda n: (buckets.rebucket(n, n.layout)
+                           if buckets.is_bucketed(n) else n),
+                state, is_leaf=buckets.is_bucketed)
+            self.mesh = None   # a 1-device mesh adds nothing over meshless
+            self._jitted = jax.jit(self._step_raw, donate_argnums=donate)
+            return state
+        if new_mesh is not None and self.model_cfg is None:
+            raise ValueError("resize onto a mesh needs the ModelConfig "
+                             "(construct the executor with model_cfg=...)")
+        self.mesh = new_mesh
+        with self._scope():
+            if new_mesh is None:
+                state = jax.device_put(state)
+                self._jitted = jax.jit(self._step_raw, donate_argnums=donate)
+                return state
+            from repro.launch.sharding import state_spec_tree, to_named
+            state_sh = to_named(state_spec_tree(jax.eval_shape(lambda: state),
+                                                self.model_cfg, new_mesh),
+                                new_mesh)
+            state = jax.device_put(state, state_sh)
+            self._jitted = jax.jit(self._step_raw, donate_argnums=donate,
+                                   out_shardings=(state_sh, None))
+            return state
+
     def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
         assert self._jitted is not None, "call init_state before step"
         assert not self._closed, "executor is closed"

@@ -32,6 +32,11 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
       --method async_sam --steps 20 --executor remote --serve-ascent \
       --job-compress int8
+  # elastic chaos run: shrink the mesh to 4 devices at step 40, grow back to
+  # 8 at step 80, hard-preempt down to 2 at step 120 (restores from --ckpt-dir)
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+      --method async_sam --steps 200 --elastic --chaos 40:4,80:8,120:2:crash \
+      --ckpt-dir /tmp/ckpt --telemetry-jsonl /tmp/elastic.jsonl
   # fleet mode: several descent hosts sharing one multi-client ascent pool,
   # perturbing coherently via a `global` sync group (run per descent host)
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
@@ -126,6 +131,30 @@ def main() -> None:
                          "persist as dtype buckets, the step runs buffer->"
                          "buffer (auto: follows the resolved fused path; "
                          "checkpoints stay pytree-shaped either way)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="wrap the executor in ElasticExecutor: survive "
+                         "mesh shrink/grow events mid-fit (graceful resizes "
+                         "reshard the live state; crash events restore the "
+                         "last checkpoint onto the survivors — those need "
+                         "--ckpt-dir)")
+    ap.add_argument("--chaos", default="",
+                    help="elastic only: scripted MeshEvent schedule "
+                         "'STEP:DEVICES[:crash],...' e.g. '40:4,80:8,"
+                         "120:2:crash' (deterministic chaos harness; in "
+                         "production a capacity watcher replaces this)")
+    ap.add_argument("--resize-budget", type=int, default=8,
+                    help="elastic only: resizes tolerated per window")
+    ap.add_argument("--resize-window-s", type=float, default=0.0,
+                    help="elastic only: rolling window for --resize-budget "
+                         "(0 = lifetime)")
+    ap.add_argument("--restart-window-s", type=float, default=0.0,
+                    help="rolling window for the checkpoint-restart budget: "
+                         "tolerate --max-restarts within this many seconds "
+                         "instead of over the whole run (0 = lifetime; a "
+                         "spot job wants e.g. 3600)")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="checkpoint-restart budget (per --restart-window-s "
+                         "window when set)")
     ap.add_argument("--telemetry-jsonl", default="",
                     help="write per-step tau/perturbed/step-time records here")
     ap.add_argument("--steps", type=int, default=100)
@@ -172,6 +201,14 @@ def main() -> None:
     if args.executor == "remote" and not (args.ascent_addr or args.serve_ascent):
         ap.error("--executor remote needs --ascent-addr (a running "
                  "ascent server) or --serve-ascent (loopback subprocess)")
+    if args.chaos and not args.elastic:
+        ap.error("--chaos needs --elastic (a non-elastic executor cannot "
+                 "act on mesh resize events)")
+    if args.elastic and args.chaos and not args.ckpt_dir:
+        from repro.runtime import parse_schedule as _parse
+        if any(e.kind == "crash" for e in _parse(args.chaos).pending):
+            ap.error("crash-kind chaos events recover via checkpoint-restart "
+                     "— add --ckpt-dir")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     bundle = build_model(cfg)
@@ -226,6 +263,17 @@ def main() -> None:
                                  fused_update=fused_update,
                                  resident=resident)
 
+    events = None
+    if args.elastic:
+        from repro.engine import ElasticExecutor
+        from repro.runtime import parse_schedule
+        executor = ElasticExecutor(
+            executor, model_cfg=cfg, model_axis=args.model_axis,
+            resize_budget=args.resize_budget,
+            resize_window_s=args.resize_window_s or None)
+        if args.chaos:
+            events = parse_schedule(args.chaos)
+
     # init_state shards/jits inside the executor's mesh scope (fused) so the
     # launcher never touches jit/sharding plumbing itself
     params = bundle.init(jax.random.PRNGKey(args.seed))
@@ -240,10 +288,12 @@ def main() -> None:
     if args.ckpt_dir:
         callbacks.append(CheckpointCallback(
             CheckpointManager(args.ckpt_dir, keep=3),
-            ResilienceConfig(save_every=args.save_every)))
+            ResilienceConfig(save_every=args.save_every,
+                             max_restarts=args.max_restarts,
+                             restart_window_s=args.restart_window_s or None)))
 
     with Engine(executor, pipe, callbacks) as eng:
-        report = eng.fit(state, args.steps)
+        report = eng.fit(state, args.steps, events=events)
 
     if report.pre_fit:
         pf = report.pre_fit

@@ -1,8 +1,19 @@
 from repro.runtime.async_executor import AsyncSamExecutor, ExecutorConfig  # noqa: F401
-from repro.runtime.elastic import reshard_state, state_shardings  # noqa: F401
+from repro.runtime.chaos import (  # noqa: F401
+    ChaosSchedule,
+    DeviceLoss,
+    MeshEvent,
+    parse_schedule,
+)
+from repro.runtime.elastic import (  # noqa: F401
+    make_sized_mesh,
+    reshard_state,
+    state_shardings,
+)
 from repro.runtime.fault_tolerance import (  # noqa: F401
     InjectedFailure,
     ResilienceConfig,
+    RestartBudget,
     RunReport,
     run_resilient,
 )

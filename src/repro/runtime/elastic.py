@@ -2,25 +2,59 @@
 
 A checkpoint written on one mesh restores onto another because the manager
 stores full (unsharded) host arrays; this module provides the in-memory
-equivalent — `reshard_state(state, cfg, new_mesh)` re-device_puts every leaf
-against the sharding rules evaluated on the new mesh. Combined with the
-fault-tolerant driver this implements shrink/grow recovery: lose a pod ->
-restore the last checkpoint onto the surviving 16x16 mesh and keep training
-(global batch is preserved; per-device batch grows).
+equivalent — `reshard_state(state, cfg, new_mesh)` re-places every leaf
+against the sharding rules evaluated on the new mesh, as ONE batched
+transfer: when every source device is addressable from this process (always
+true in-process, and in particular whenever source and target meshes share
+devices) the arrays move device-to-device with no host round-trip; only a
+state whose buffers live on unaddressable devices pays a single batched
+device_get. Combined with the fault-tolerant driver and the chaos harness
+(`runtime.chaos`) this implements shrink/grow recovery: lose a pod -> reshard
+(or restore) onto the surviving mesh and keep training; capacity arrives ->
+grow back. The global batch is preserved either way; only the per-device
+slice changes.
 
-tests/test_elastic.py round-trips 1-device -> 8-device(2x4) -> 4-device(2x2)
-and asserts loss-trajectory equality against an unresharded run.
+Bucket-resident state (`utils.buckets.BucketedState`) re-places onto an
+*unsharded* target directly (the buffers move wholesale; the layout is
+mesh-independent, so `buckets.rebucket` is an identity re-group); a sharded
+target raises — flattening a model-sharded leaf into a global bucket would
+silently all-gather, and per-shard bucketing is the ROADMAP follow-on.
+
+tests/test_elastic.py pins the chaos-driven shrink/grow trajectories;
+tests/test_runtime.py round-trips 8-device(4x2) -> 8-device(2x4) raw state.
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.sharding import state_spec_tree, to_named
 from repro.models.config import ModelConfig
+from repro.utils import buckets
 
 Pytree = Any
+
+
+def make_sized_mesh(devices: int, model_axis: int = 1):
+    """A (data, model) mesh over the first `devices` local devices.
+
+    Unlike `launch.mesh.make_host_mesh` this does NOT claim every visible
+    device — a shrink builds the survivor mesh over a prefix of the fleet,
+    a grow takes the prefix back up. Deterministic device order keeps
+    scripted chaos schedules reproducible.
+    """
+    devs = jax.devices()
+    if devices > len(devs):
+        raise ValueError(f"mesh of {devices} devices requested but only "
+                         f"{len(devs)} are attached")
+    if devices % model_axis:
+        raise ValueError(f"{devices} devices do not divide model_axis="
+                         f"{model_axis}")
+    grid = np.array(devs[:devices]).reshape(devices // model_axis, model_axis)
+    return Mesh(grid, ("data", "model"))
 
 
 def state_shardings(state_like: Pytree, cfg: ModelConfig, mesh) -> Pytree:
@@ -28,11 +62,36 @@ def state_shardings(state_like: Pytree, cfg: ModelConfig, mesh) -> Pytree:
     return to_named(state_spec_tree(state_like, cfg, mesh), mesh)
 
 
+def _source_devices(flat: list) -> set:
+    out: set = set()
+    for x in flat:
+        if isinstance(x, jax.Array):
+            out |= set(x.devices())
+    return out
+
+
 def reshard_state(state: Pytree, cfg: ModelConfig, new_mesh) -> Pytree:
     """Re-place every leaf of `state` onto `new_mesh` under the arch rules."""
+    if buckets.is_resident(state):
+        if new_mesh is not None and new_mesh.size > 1:
+            raise ValueError(
+                "cannot reshard bucket-resident state onto a sharded mesh "
+                f"(size {new_mesh.size}): flattened buckets would all-gather "
+                "model-sharded leaves. View it out with buckets.to_portable "
+                "first (and residentize after), or keep the target unsharded "
+                "— per-shard bucketing is the ROADMAP follow-on.")
+        if new_mesh is None:
+            return state
+        # unsharded target: buffers move wholesale (one transfer per bucket)
+        return jax.device_put(state, NamedSharding(new_mesh, P()))
     shardings = state_shardings(jax.eval_shape(lambda: state), cfg, new_mesh)
     flat_s, treedef = jax.tree.flatten(state)
     flat_sh = jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
-    out = [jax.device_put(jax.device_get(x), sh)
-           for x, sh in zip(flat_s, flat_sh)]
+    addressable = set(jax.devices())
+    if _source_devices(flat_s) <= addressable:
+        # shared/addressable devices: one batched device-to-device transfer
+        out = jax.device_put(flat_s, flat_sh)
+    else:
+        # cross-process source: one batched D2H, then one batched placement
+        out = jax.device_put(jax.device_get(flat_s), flat_sh)
     return jax.tree.unflatten(treedef, out)

@@ -35,8 +35,52 @@ class InjectedFailure(RuntimeError):
 @dataclasses.dataclass
 class ResilienceConfig:
     save_every: int = 50
+    #: restarts tolerated; counted over the whole run when
+    #: `restart_window_s` is None, else within that rolling window (a
+    #: week-long spot job survives any number of preemptions as long as
+    #: no `restart_window_s`-second span holds more than `max_restarts`)
     max_restarts: int = 5
     async_save: bool = True
+    restart_window_s: Optional[float] = None
+
+
+class RestartBudget:
+    """Bounded restart/resize accounting: lifetime or rolling-window.
+
+    `spend()` records one event and raises RuntimeError once more than
+    `limit` events land inside `window_s` seconds (every event ever, when
+    `window_s` is None — the legacy lifetime budget). Shared by
+    `run_resilient` (checkpoint-restart) and `engine.ElasticExecutor`
+    (mesh resizes). `clock` is injectable for deterministic tests.
+    """
+
+    def __init__(self, limit: int, window_s: Optional[float] = None, *,
+                 what: str = "restart", clock: Callable[[], float] = time.monotonic):
+        self.limit = limit
+        self.window_s = window_s
+        self.what = what
+        self.clock = clock
+        self.total = 0
+        self._times: list[float] = []
+
+    def in_window(self) -> int:
+        if self.window_s is not None:
+            now = self.clock()
+            self._times = [t for t in self._times
+                           if now - t <= self.window_s]
+        return len(self._times)
+
+    def spend(self, cause: Optional[BaseException] = None) -> int:
+        self.total += 1
+        self._times.append(self.clock())
+        used = self.in_window()
+        if used > self.limit:
+            scope = (f"within {self.window_s:g}s window"
+                     if self.window_s is not None else "lifetime")
+            raise RuntimeError(
+                f"exceeded {self.what} budget ({self.limit} {scope})"
+            ) from cause
+        return used
 
 
 @dataclasses.dataclass
@@ -63,7 +107,10 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
     `failure_injector(step)` may raise to simulate a node loss. The pipeline
     must expose state()/restore() (see repro.data.pipeline). `on_restore`
     is called with the restored state after every rollback so stateful
-    executors (the hetero lane's held ascent gradient) can reset.
+    executors (the hetero lane's held ascent gradient) can reset; when it
+    returns a state (not None) that state replaces the restored one — the
+    elastic executor uses this to re-place the rollback target onto a
+    resized mesh (restore-onto-survivors).
 
     Checkpoints stay PYTREE-shaped on disk regardless of the live state's
     representation: bucket-resident state (utils.buckets.BucketedState) is
@@ -74,7 +121,7 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
     """
     rcfg = rcfg or ResilienceConfig()
     t_start = time.time()
-    restarts = 0
+    budget = RestartBudget(rcfg.max_restarts, rcfg.restart_window_s)
     history: list = []
     resident = buckets.is_resident(state)
 
@@ -109,15 +156,13 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                                  blocking=not rcfg.async_save)
             manager.wait()
             return RunReport(final_state=state, steps_done=step,
-                             restarts=restarts, metrics_history=history,
+                             restarts=budget.total, metrics_history=history,
                              wall_time_s=time.time() - t_start)
         except Exception as e:  # noqa: BLE001 — the loop IS the failure domain
-            restarts += 1
-            log.warning("step failed (%s: %s); restart %d/%d",
-                        type(e).__name__, e, restarts, rcfg.max_restarts)
-            if restarts > rcfg.max_restarts:
-                raise RuntimeError(
-                    f"exceeded restart budget ({rcfg.max_restarts})") from e
+            used = budget.spend(cause=e)   # raises past the (windowed) budget
+            log.warning("step failed (%s: %s); restart %d/%d in window "
+                        "(%d total)", type(e).__name__, e, used,
+                        rcfg.max_restarts, budget.total)
             manager.wait()
             restored, extras = manager.restore(
                 jax.eval_shape(lambda: buckets.to_portable(state)),
@@ -126,7 +171,9 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                      if resident else restored)
             pipeline.restore(extras["pipeline"])
             if on_restore is not None:
-                on_restore(state)
+                adopted = on_restore(state)
+                if adopted is not None:
+                    state = adopted   # executor re-placed it (elastic resize)
         finally:
             if hasattr(it, "close"):
                 it.close()   # stop a prefetching pipeline's worker now

@@ -310,15 +310,72 @@ def host_buckets_to_tree(bufs: list, layout: BucketLayout,
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+def rebucket(state: "BucketedState", new_layout: BucketLayout
+             ) -> "BucketedState":
+    """Re-group a BucketedState's buffers directly into `new_layout`.
+
+    The `to_portable` -> `residentize` round-trip cuts one view per leaf and
+    re-concatenates N small arrays; this edge moves data at the *buffer*
+    level instead: leaves that stay adjacent in their source buffer travel as
+    one coalesced slice, an unchanged layout passes the buffers through
+    untouched (the common elastic-resize case — the layout depends only on
+    (treedef, shapes, dtypes), not the mesh), and a whole target group that
+    maps to one contiguous span of one source buffer is a zero-copy slice.
+    This is also the seam per-shard bucketing will re-group through when a
+    resize changes the shard-local layout (ROADMAP follow-on).
+
+    `new_layout` must describe the same flatten order (leaf i of the old
+    layout is leaf i of the new); spans are cast to the target group's dtype
+    when the regrouping changed a leaf's bucket dtype.
+    """
+    if not is_bucketed(state):
+        raise TypeError(f"rebucket expects a BucketedState, got {type(state)}; "
+                        "use BucketedState.from_tree for plain pytrees")
+    old = state.layout
+    if new_layout.n_leaves != old.n_leaves or new_layout.shapes != old.shapes:
+        raise ValueError(
+            "rebucket needs congruent layouts (same leaves/shapes): "
+            f"{old.n_leaves} leaves {old.shapes[:3]}... vs "
+            f"{new_layout.n_leaves} leaves {new_layout.shapes[:3]}...")
+    if new_layout.groups == old.groups:
+        return BucketedState(buffers=state.buffers, layout=new_layout)
+    # source location of each leaf: (source group index, offset, size)
+    src: list = [None] * old.n_leaves
+    for gi, grp in enumerate(old.groups):
+        for i, off, size in zip(grp.leaf_indices, grp.offsets, grp.sizes):
+            src[i] = (gi, off, size)
+    bufs = []
+    for grp in new_layout.groups:
+        spans: list[tuple[int, int, int]] = []
+        for i in grp.leaf_indices:
+            gi, off, size = src[i]
+            if spans and spans[-1][0] == gi \
+                    and spans[-1][1] + spans[-1][2] == off:
+                g0, o0, s0 = spans[-1]
+                spans[-1] = (g0, o0, s0 + size)   # coalesce adjacent run
+            else:
+                spans.append((gi, off, size))
+        dt = jnp.dtype(grp.dtype)
+        parts = [state.buffers[gi][o:o + s].astype(dt)
+                 for gi, o, s in spans]
+        bufs.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts))
+    return BucketedState(buffers=tuple(bufs), layout=new_layout)
+
+
 def residentize(tree: Pytree, like: Pytree) -> Pytree:
     """Match `like`'s residency: bucket each subtree of `tree` wherever `like`
     holds a BucketedState (same layout), pass everything else through.
 
     The inverse of `to_portable` against a live template — how a
-    pytree-shaped checkpoint re-enters a bucket-resident executor.
+    pytree-shaped checkpoint re-enters a bucket-resident executor. A node
+    that is *already* bucketed (state handed back from another resident run)
+    is re-grouped in place via `rebucket` instead of being viewed out and
+    re-gathered.
     """
     def f(n_like, n):
         if is_bucketed(n_like):
+            if is_bucketed(n):
+                return rebucket(n, n_like.layout)
             return BucketedState.from_tree(n, layout=n_like.layout)
         return n
     return jax.tree.map(f, like, tree, is_leaf=is_bucketed)
