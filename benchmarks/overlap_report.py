@@ -1,0 +1,158 @@
+"""Overlap report — the paper's Fig-1 claim as a measured artifact.
+
+AsyncSAM's core timing claim is that the ascent (perturbation) computation
+runs on a slow lane *while* the descent lane keeps stepping — at best the
+perturbation time is entirely hidden. This report makes that measurable:
+feed it a Chrome/Perfetto trace produced by `repro.obs.TraceEventSink`
+(e.g. `python -m repro.launch.train --trace trace.json ...`, or the built-in
+`--run` mode below) and it computes the **hidden-perturbation fraction**:
+the share of ascent-lane busy time (ascent_compute / ascent_rpc /
+pool_exchange spans) that overlaps descent-lane compute spans.
+
+    python benchmarks/overlap_report.py --run hetero          # trace + report
+    python benchmarks/overlap_report.py --run remote          # via the pool
+    python benchmarks/overlap_report.py --trace trace.json    # existing trace
+
+Writes `artifacts/perf/BENCH_overlap.json` (hidden fraction, step-time
+p50/p95, total wire bytes) so the bench trajectory tracks overlap across
+commits; the trace itself lands in `artifacts/traces/` (gitignored — load it
+at ui.perfetto.dev to *see* the overlap as stacked tracks).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+#: span names that are real perturbation work on a slow lane
+ASCENT_BUSY = ("ascent_compute", "ascent_rpc", "pool_exchange")
+#: descent-lane spans the perturbation can hide under
+DESCENT_BUSY = ("descent_compute",)
+
+
+def load_trace(path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def _merge(intervals: list) -> list:
+    """Sorted union of (t0, t1) intervals."""
+    out: list = []
+    for t0, t1 in sorted(intervals):
+        if out and t0 <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], t1))
+        else:
+            out.append((t0, t1))
+    return out
+
+
+def _overlap(t0: float, t1: float, merged: list) -> float:
+    return sum(max(0.0, min(t1, b) - max(t0, a)) for a, b in merged)
+
+
+def _percentile(sorted_vals: list, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[int(q * (len(sorted_vals) - 1))]
+
+
+def compute_overlap(trace: dict) -> dict:
+    """-> the overlap report for one trace (times in seconds)."""
+    spans = [e for e in trace.get("traceEvents", []) if e.get("ph") == "X"]
+    descent = _merge([(e["ts"], e["ts"] + e["dur"]) for e in spans
+                      if e["name"] in DESCENT_BUSY])
+    ascent = [(e["ts"], e["ts"] + e["dur"]) for e in spans
+              if e["name"] in ASCENT_BUSY]
+    busy_us = sum(t1 - t0 for t0, t1 in ascent)
+    hidden_us = sum(_overlap(t0, t1, descent) for t0, t1 in ascent)
+    steps = sorted(e["dur"] * 1e-6 for e in spans
+                   if e["name"] == "train_step")
+    wire = sum(e.get("args", {}).get("wire_bytes", 0) for e in spans
+               if e["name"] == "ascent_rpc")
+    return {
+        "hidden_fraction": (hidden_us / busy_us) if busy_us else 0.0,
+        "ascent_busy_s": busy_us * 1e-6,
+        "hidden_s": hidden_us * 1e-6,
+        "ascent_spans": len(ascent),
+        "steps": len(steps),
+        "step_time_p50_s": _percentile(steps, 0.50),
+        "step_time_p95_s": _percentile(steps, 0.95),
+        "wire_bytes_total": int(wire),
+    }
+
+
+def run_traced(executor: str, steps: int, trace_path: pathlib.Path) -> None:
+    """Small lockstep MLP fit with a TraceEventSink attached."""
+    import jax
+
+    from repro import optim
+    from repro.core import MethodConfig, slice_ascent_batch
+    from repro.data.synthetic import ClassificationTask
+    from repro.engine import Engine, HeteroExecutor, RemoteExecutor
+    from repro.obs import TraceEventSink, Tracker
+    from repro.runtime import ExecutorConfig
+    from repro.service.ascent_server import AscentServer
+    from repro.service.testing import mlp_init, mlp_loss
+
+    task = ClassificationTask(n_classes=4, dim=8, seed=3)
+    batches = [{**b, "ascent": slice_ascent_batch(b, 0.5)}
+               for b in task.train_batches(128, steps)]
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+    opt = optim.sgd(0.1, momentum=0.9)
+    # lockstep: every step harvests the previous step's exchange, so the
+    # overlap in the trace is the paper's steady-state tau=1 schedule
+    server = None
+    if executor == "remote":
+        server = AscentServer(mlp_loss)
+        server.serve_in_thread()
+        xcfg = ExecutorConfig(lockstep=True, ascent_addr=server.address)
+        ex = RemoteExecutor(mlp_loss, mcfg, opt, exec_cfg=xcfg)
+    else:
+        xcfg = ExecutorConfig(lockstep=True)
+        ex = HeteroExecutor(mlp_loss, mcfg, opt, exec_cfg=xcfg)
+    tracker = Tracker([TraceEventSink(trace_path)])
+    try:
+        with ex:
+            state = ex.init_state(mlp_init(jax.random.PRNGKey(0)),
+                                  jax.random.PRNGKey(1))
+            Engine(ex, batches).fit(state, steps, tracker=tracker)
+    finally:
+        tracker.close()
+        if server is not None:
+            server.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--trace", default="",
+                    help="existing trace-event JSON to analyze")
+    ap.add_argument("--run", choices=("hetero", "remote"), default="",
+                    help="produce the trace first: small lockstep MLP fit "
+                         "on this executor")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--out", default=str(ROOT / "artifacts" / "perf"
+                                         / "BENCH_overlap.json"))
+    args = ap.parse_args(argv)
+    if not args.trace and not args.run:
+        ap.error("pass --trace <file> or --run {hetero,remote}")
+    trace_path = pathlib.Path(
+        args.trace or ROOT / "artifacts" / "traces"
+        / f"overlap_{args.run}.json")
+    if args.run:
+        trace_path.parent.mkdir(parents=True, exist_ok=True)
+        run_traced(args.run, args.steps, trace_path)
+        print(f"trace written to {trace_path} (load at ui.perfetto.dev)")
+    report = compute_overlap(load_trace(trace_path))
+    report["executor"] = args.run or "trace"
+    print(json.dumps(report, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"report written to {out}")
+
+
+if __name__ == "__main__":
+    main()

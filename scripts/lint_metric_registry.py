@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Lint: every metric key written in src/repro must exist in the registry.
+
+The metric contract (engine/api.py) is derived from `repro.obs.registry`;
+a module inventing a key inline would ship an unregistered, undocumented
+metric that the strict in-memory tracker rejects and the README table
+misses. This script AST-scans `src/repro` for static metric writes —
+
+    metrics["key"] = ...            subscript assignment
+    metrics.setdefault("key", ...)  contract defaulting
+    metrics.update({"key": ...})    bulk merge
+    metrics = {"key": ...}          dict-literal rebind
+
+(on any name ending in "metrics") and fails if a constant-string key is
+absent from `repro.obs.registry.REGISTRY`. Dynamic keys (`metrics[k]`)
+are runtime-checked by the strict tracker instead.
+
+    python scripts/lint_metric_registry.py        # exit 0 = clean
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs.registry import REGISTRY  # noqa: E402
+
+
+def _is_metrics_name(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id.endswith("metrics")
+
+
+def _const_str(node: ast.AST):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def scan_file(path: pathlib.Path) -> list:
+    """-> [(lineno, key)] for every statically-written metric key."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    found = []
+
+    def add(lineno, key):
+        if key is not None:
+            found.append((lineno, key))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                # metrics["key"] = ...
+                if isinstance(tgt, ast.Subscript) \
+                        and _is_metrics_name(tgt.value):
+                    add(node.lineno, _const_str(tgt.slice))
+                # metrics = {"key": ...}
+                if _is_metrics_name(tgt) and isinstance(node.value, ast.Dict):
+                    for k in node.value.keys:
+                        add(node.lineno, _const_str(k))
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("setdefault", "update") \
+                and _is_metrics_name(node.func.value):
+            if node.func.attr == "setdefault" and node.args:
+                add(node.lineno, _const_str(node.args[0]))
+            elif node.func.attr == "update":
+                for arg in node.args:
+                    if isinstance(arg, ast.Dict):
+                        for k in arg.keys:
+                            add(node.lineno, _const_str(k))
+    return found
+
+
+def main() -> int:
+    bad = []
+    n_writes = 0
+    for path in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        for lineno, key in scan_file(path):
+            n_writes += 1
+            if key not in REGISTRY:
+                bad.append(f"{path.relative_to(ROOT)}:{lineno}: "
+                           f"unregistered metric key {key!r}")
+    if bad:
+        print("\n".join(bad))
+        print(f"\n{len(bad)} unregistered metric write(s); add the key to "
+              "src/repro/obs/registry.py or rename it.")
+        return 1
+    print(f"metric-registry lint: {n_writes} static metric writes, "
+          f"all registered ({len(REGISTRY)} keys).")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,12 @@
 #                                            # subprocesses + a spawned server,
 #                                            # so the same hard timeout +
 #                                            # interpret kernels as --service
+#   ./scripts/tier1.sh --obs                 # observability lane: metric
+#                                            # registry lint (no module logs a
+#                                            # key outside the registry), then
+#                                            # tracker/sink/trace + STATS-frame
+#                                            # tests under the same hard
+#                                            # timeout + interpret kernels
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -60,5 +66,11 @@ if [[ "${1:-}" == "--elastic" ]]; then
   shift
   exec timeout --signal=TERM --kill-after=30 900 \
     env REPRO_KERNELS=interpret python -m pytest -q tests/test_elastic.py "$@"
+fi
+if [[ "${1:-}" == "--obs" ]]; then
+  shift
+  python scripts/lint_metric_registry.py
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_obs.py "$@"
 fi
 exec python -m pytest -x -q "$@"

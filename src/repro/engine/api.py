@@ -27,42 +27,14 @@ from typing import Any, Optional, Protocol, runtime_checkable
 import jax
 
 from repro.core import TrainState
+# The metric contract tuples are derived from the typed registry in
+# repro.obs.registry (one MetricKey per scalar, with description/unit/source);
+# re-exported here so every historical `from repro.engine.api import
+# ENGINE_METRIC_KEYS` import keeps working.
+from repro.obs.registry import (ENGINE_METRIC_KEYS,  # noqa: F401
+                                ENGINE_OPTIONAL_METRIC_KEYS)
 
 Pytree = Any
-
-#: Keys every executor guarantees in its step metrics.
-#:   loss       — descent-lane loss at the (possibly perturbed) point
-#:   grad_norm  — global norm of the applied gradient
-#:   tau        — age (steps) of the ascent gradient used for the perturbation
-#:                (0 = none/synchronous, 1 = paper steady state, >1 = straggler)
-#:   perturbed  — 1.0 if the step used a SAM perturbation, 0.0 if it degraded
-#:                to (or is) plain SGD
-ENGINE_METRIC_KEYS = ("loss", "grad_norm", "tau", "perturbed")
-
-#: Optional keys an executor MAY emit, only on steps where they are real
-#: measurements (callbacks must tolerate their absence). Today these come
-#: from the remote ascent lane, on the step that harvested an exchange:
-#:   wire_bytes — measured bytes of that JOB+GRAD exchange (job + grad sum,
-#:                kept for backward compat with pre-split telemetry)
-#:   job_bytes  — the JOB frame (params direction out: full snapshot or
-#:                delta-encoded bucket sections)
-#:   grad_bytes — the GRAD frame (compressed ascent gradient back)
-#:   rtt_s      — round-trip seconds of that exchange
-#: The pool lane (multi-client ascent pool, protocol revision 3) adds:
-#:   pool_depth  — queue depth the exchange was admitted behind
-#:   pool_wait_s — seconds the job waited before a pool worker took it
-#:   client_id   — numeric client identity (crc32 of the declared id, so
-#:                 fleet jsonl traces from many clients can be joined)
-#: The elastic executor (preemption-surviving mesh resizes) adds:
-#:   mesh_devices  — current mesh capacity in devices (every step, so the
-#:                   jsonl shows the mesh's size over the whole run)
-#:   resize_events — cumulative resize count (only on the step right after
-#:                   a shrink/grow, marking exactly when the run resized)
-#:   resize_time_s — seconds that resize's re-place + re-lower cost
-ENGINE_OPTIONAL_METRIC_KEYS = ("wire_bytes", "job_bytes", "grad_bytes",
-                               "rtt_s", "pool_depth", "pool_wait_s",
-                               "client_id", "mesh_devices", "resize_events",
-                               "resize_time_s")
 
 
 @runtime_checkable

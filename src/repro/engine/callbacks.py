@@ -14,7 +14,6 @@ checkpoint-restart on failure) with its manager and resilience policy.
 from __future__ import annotations
 
 import dataclasses
-import json
 import pathlib
 import time
 from typing import Callable, Optional, Union
@@ -22,8 +21,8 @@ from typing import Callable, Optional, Union
 from repro.checkpoint import CheckpointManager
 from repro.core import TrainState
 from repro.engine.api import ENGINE_OPTIONAL_METRIC_KEYS
+from repro.obs import JsonlSink, scalar_metrics
 from repro.runtime import ResilienceConfig
-from repro.utils import scalar_metrics
 
 
 class Callback:
@@ -124,7 +123,8 @@ class StalenessTelemetry(Callback):
     the fused executor too, where it simply records the constant τ=1 regime.
 
     With `jsonl_path` set, every step additionally appends one JSON record
-    `{step, tau, perturbed, step_time_s, loss}` to that file (streamed, so a
+    `{step, tau, perturbed, step_time_s, loss}` to that file (streamed
+    through `repro.obs.JsonlSink`, which owns the record schema, so a
     crashed run keeps its trace) — the input `benchmarks/fig3_throughput.py`
     and `benchmarks/table_4_2_hetero.py` use to plot straggler-degradation
     curves. When the remote ascent lane is active (`RemoteExecutor`), the
@@ -165,17 +165,9 @@ class StalenessTelemetry(Callback):
             self.sgd_fallbacks += 1
         if self.jsonl_path is not None:
             if self._sink is None:
-                self.jsonl_path.parent.mkdir(parents=True, exist_ok=True)
-                self._sink = self.jsonl_path.open("w")
-            loss = metrics.get("loss")
-            rec = {"step": int(state.step), "tau": tau, "perturbed": perturbed,
-                   "step_time_s": step_time_s,
-                   "loss": float(loss) if loss is not None else None}
-            for key in self.OPTIONAL_KEYS:
-                if key in metrics:
-                    rec[key] = float(metrics[key])
-            self._sink.write(json.dumps(rec) + "\n")
-            self._sink.flush()
+                self._sink = JsonlSink(self.jsonl_path)
+            self._sink.log({**metrics, "step_time_s": step_time_s},
+                           step=int(state.step))
 
     def summary(self) -> dict:
         return {"tau_hist": dict(sorted(self.tau_hist.items())),

@@ -38,6 +38,7 @@ from typing import Any, Optional
 import jax
 
 from repro.core import TrainState
+from repro.obs import current_tracker, trace_now
 from repro.runtime.chaos import DeviceLoss, MeshEvent
 from repro.runtime.elastic import make_sized_mesh, reshard_state
 from repro.runtime.fault_tolerance import RestartBudget
@@ -134,6 +135,10 @@ class ElasticExecutor:
         self.devices = event.devices
         self.resize_events += 1
         self.last_resize_s = time.perf_counter() - t0
+        current_tracker().span_at(
+            "mesh_resize", lane="elastic", t0=trace_now() - self.last_resize_s,
+            t1=trace_now(), step=event.step, devices=event.devices,
+            kind=event.kind)
         self._announce_resize = True
         log.info("mesh %s at step %d -> %d device(s) in %.3fs (%s kind)",
                  "resized", event.step, event.devices, self.last_resize_s,
@@ -160,6 +165,8 @@ class ElasticExecutor:
                     # the step dies; run_resilient restores and our
                     # on_restore re-places onto the survivor mesh
                     self._pending = ev
+                    current_tracker().event("device_loss", lane="elastic",
+                                            step=ev.step, devices=ev.devices)
                     raise DeviceLoss(ev)
                 state = self._resize(state, ev)
         state, metrics = self.inner.step(state, batch)
@@ -180,6 +187,8 @@ class ElasticExecutor:
             hook(state)
         if self._pending is not None:
             ev, self._pending = self._pending, None
+            current_tracker().event("restore_onto_survivors", lane="elastic",
+                                    step=ev.step, devices=ev.devices)
             return self._resize(state, ev)
         return None
 

@@ -20,8 +20,8 @@ from typing import Any, Iterable, Optional, Sequence
 from repro.core import TrainState
 from repro.engine.api import FitReport, StepExecutor
 from repro.engine.callbacks import Callback, CheckpointCallback
+from repro.obs import Tracker, current_tracker, scalar_metrics, use_tracker
 from repro.runtime import run_resilient
-from repro.utils import scalar_metrics
 
 Pytree = Any
 
@@ -52,9 +52,15 @@ class Engine:
 
     def _wrapped_step(self):
         def step(state: TrainState, batch: dict):
+            trk = current_tracker()
             t0 = time.perf_counter()
-            state, metrics = self.executor.step(state, batch)
+            with trk.span("train_step", lane="descent",
+                          step=int(state.step)):
+                state, metrics = self.executor.step(state, batch)
             dt = time.perf_counter() - t0
+            trk.log({**scalar_metrics(metrics), "step_time_s": dt},
+                    step=int(state.step))
+            trk.histogram("step_time_s", dt)
             for cb in self.callbacks:
                 cb.on_step(self, state, metrics, dt)
             return state, metrics
@@ -63,7 +69,8 @@ class Engine:
 
     # --- the loop -------------------------------------------------------------
     def fit(self, state: TrainState, steps: int, *, warmup: int = 0,
-            failure_injector=None, events=None) -> FitReport:
+            failure_injector=None, events=None,
+            tracker: Optional[Tracker] = None) -> FitReport:
         """Train until `state.step == steps`; returns a FitReport.
 
         warmup: steps executed before the clock starts and before
@@ -76,7 +83,23 @@ class Engine:
         a `CheckpointCallback`). With any other executor a *callable* source
         degrades to the failure-injector surface: its crash events raise,
         its resizes are skipped — the generalization of `failure_injector`.
+
+        tracker: a `repro.obs.Tracker`; installed as the process-global
+        current tracker for the duration of the fit, so executor internals
+        (ascent lanes, pool workers, elastic resizes) report spans to it
+        from their own threads. Without one, whatever tracker is already
+        current (by default the no-op null tracker) stays in effect.
         """
+        if tracker is not None:
+            with use_tracker(tracker):
+                return self._fit(state, steps, warmup=warmup,
+                                 failure_injector=failure_injector,
+                                 events=events)
+        return self._fit(state, steps, warmup=warmup,
+                         failure_injector=failure_injector, events=events)
+
+    def _fit(self, state: TrainState, steps: int, *, warmup: int,
+             failure_injector, events) -> FitReport:
         if events is not None:
             attach = getattr(self.executor, "attach_events", None)
             if attach is not None:

@@ -157,6 +157,10 @@ def main() -> None:
                          "window when set)")
     ap.add_argument("--telemetry-jsonl", default="",
                     help="write per-step tau/perturbed/step-time records here")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace-event JSON here: "
+                         "descent, ascent lane, pool workers, and elastic "
+                         "resizes as named tracks (load at ui.perfetto.dev)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
@@ -292,8 +296,15 @@ def main() -> None:
                              max_restarts=args.max_restarts,
                              restart_window_s=args.restart_window_s or None)))
 
+    tracker = None
+    if args.trace:
+        from repro.obs import TraceEventSink, Tracker
+        tracker = Tracker([TraceEventSink(args.trace)])
     with Engine(executor, pipe, callbacks) as eng:
-        report = eng.fit(state, args.steps, events=events)
+        report = eng.fit(state, args.steps, events=events, tracker=tracker)
+    if tracker is not None:
+        tracker.close()
+        print(f"trace written to {args.trace} (load at ui.perfetto.dev)")
 
     if report.pre_fit:
         pf = report.pre_fit

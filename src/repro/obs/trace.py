@@ -1,0 +1,106 @@
+"""Chrome/Perfetto trace-event exporter — lanes as named tracks.
+
+`TraceEventSink` collects the tracker's spans, events, and counter-eligible
+scalars and writes Chrome trace-event JSON (the `{"traceEvents": [...]}`
+object form) loadable by ui.perfetto.dev or chrome://tracing. Each lane name
+("descent", "ascent-thread", "ascent-remote", "pool-worker-0", "elastic")
+becomes its own named track via "M" thread_name metadata, so the paper's
+Fig-1 claim — the ascent (perturbation) computation hiding under descent
+compute — renders as literal span overlap between the two tracks.
+
+Timestamps arrive in `trace_now()` seconds (time.perf_counter). The trace
+format wants microseconds from an arbitrary epoch; we rebase everything to
+the earliest timestamp seen at close() time so traces start at t=0.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import threading
+from typing import Union
+
+from repro.obs.registry import TRACE_COUNTER_KEYS
+from repro.obs.tracker import Event, Sink, Span
+
+#: The single synthetic process all tracks live under.
+TRACE_PID = 1
+
+
+class TraceEventSink(Sink):
+    """Buffers spans/events/counters; writes the trace JSON on close()."""
+
+    def __init__(self, path: Union[str, pathlib.Path]):
+        self.path = pathlib.Path(path)
+        self._lock = threading.Lock()
+        self._spans: list = []      # Span
+        self._events: list = []     # Event
+        self._counters: list = []   # (ts, key, value)
+        self._lanes: dict = {}      # lane name -> tid (stable discovery order)
+        self._closed = False
+
+    def _tid(self, lane: str) -> int:
+        if lane not in self._lanes:
+            self._lanes[lane] = len(self._lanes) + 1
+        return self._lanes[lane]
+
+    def log(self, metrics: dict, *, step: int) -> None:
+        # counters ride the step clock: sampled when the engine logs them
+        ts = None
+        with self._lock:
+            for key in TRACE_COUNTER_KEYS:
+                if key in metrics:
+                    if ts is None:
+                        from repro.obs.tracker import trace_now
+                        ts = trace_now()
+                    self._counters.append((ts, key, float(metrics[key])))
+
+    def span(self, span: Span) -> None:
+        with self._lock:
+            self._tid(span.lane)
+            self._spans.append(span)
+
+    def event(self, event: Event) -> None:
+        with self._lock:
+            self._tid(event.lane)
+            self._events.append(event)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self.path.write_text(json.dumps(self._render()))
+
+    def _render(self) -> dict:
+        stamps = ([s.t0 for s in self._spans]
+                  + [e.ts for e in self._events]
+                  + [ts for ts, _, _ in self._counters])
+        epoch = min(stamps) if stamps else 0.0
+
+        def us(t: float) -> float:
+            return round((t - epoch) * 1e6, 3)
+
+        out = [{"name": "process_name", "ph": "M", "pid": TRACE_PID,
+                "args": {"name": "repro-asyncsam"}}]
+        for lane, tid in self._lanes.items():
+            out.append({"name": "thread_name", "ph": "M", "pid": TRACE_PID,
+                        "tid": tid, "args": {"name": lane}})
+            # sort_index pins descent above ascent above pool/elastic so the
+            # overlap story reads top-down
+            out.append({"name": "thread_sort_index", "ph": "M",
+                        "pid": TRACE_PID, "tid": tid,
+                        "args": {"sort_index": tid}})
+        for s in self._spans:
+            out.append({"name": s.name, "ph": "X", "pid": TRACE_PID,
+                        "tid": self._tid(s.lane), "ts": us(s.t0),
+                        "dur": round(s.duration_s * 1e6, 3),
+                        "cat": s.lane, "args": s.args})
+        for e in self._events:
+            out.append({"name": e.name, "ph": "i", "s": "g",
+                        "pid": TRACE_PID, "tid": self._tid(e.lane),
+                        "ts": us(e.ts), "cat": e.lane, "args": e.args})
+        for ts, key, value in self._counters:
+            out.append({"name": key, "ph": "C", "pid": TRACE_PID,
+                        "ts": us(ts), "args": {key: value}})
+        return {"traceEvents": out, "displayTimeUnit": "ms"}

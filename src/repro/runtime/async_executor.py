@@ -43,6 +43,7 @@ from repro.core import (Compressor, MethodConfig, StalenessLedger, TrainState,
                         system_aware_ascent_fraction)
 from repro.core.ascent import CompressionState
 from repro.core.api import LossFn
+from repro.obs import current_tracker, trace_now
 from repro.optim import GradientTransform
 from repro.utils import buckets, trees
 
@@ -182,6 +183,9 @@ class AscentLane(Protocol):
 class ThreadAscentLane:
     """The PR-1 lane: dedicated worker thread + depth-1 job/result queues."""
 
+    #: trace track this lane's compute spans render on
+    lane_name = "ascent-thread"
+
     def __init__(self, ascent_fn: Callable, norm_fn: Callable,
                  compressor: Compressor, *, device=None, delay_s: float = 0.0):
         self._ascent_fn = ascent_fn
@@ -207,10 +211,13 @@ class ThreadAscentLane:
             if self._stop.is_set():   # shutting down: don't start new compute
                 break
             t0 = time.perf_counter()
-            g, norm, wire, self._comp_state = ascent_exchange(
-                self._ascent_fn, self._norm_fn, self._compressor,
-                self._comp_state, params, batch, rng,
-                device=self._device, delay_s=self._delay_s)
+            with current_tracker().span("ascent_compute",
+                                        lane=self.lane_name,
+                                        gen=gen, step=_step):
+                g, norm, wire, self._comp_state = ascent_exchange(
+                    self._ascent_fn, self._norm_fn, self._compressor,
+                    self._comp_state, params, batch, rng,
+                    device=self._device, delay_s=self._delay_s)
             self.wire_bytes_per_exchange = wire
             dt = time.perf_counter() - t0
             self.timings.append(dt)
@@ -306,6 +313,9 @@ class AsyncSamExecutor:
         # cached pytree-shaped zeros for steps with no held gradient
         self._zeros: Optional[Pytree] = None
         self._exchange_meta: dict = {}
+        # submit timestamps of in-flight jobs (FIFO — the lanes are ordered
+        # queues), so a harvest can emit its full submit→harvest trace span
+        self._submit_t: list[float] = []
         self.timings = {"ascent": getattr(self._lane, "timings", []),
                         "descent": []}
 
@@ -323,17 +333,28 @@ class AsyncSamExecutor:
 
         # harvest a finished ascent gradient (fresh => tau resets to 1);
         # results from a pre-reset() generation are discarded
+        trk = current_tracker()
         block = self.xcfg.lockstep and self._inflight > 0
         got = self._lane.poll(block=block, timeout=120.0 if block else None)
         self._exchange_meta = {}
         if got is not None:
             self._inflight = max(0, self._inflight - 1)
+            t_sub = self._submit_t.pop(0) if self._submit_t else None
             gen, g, norm, meta = got
             if g is not None and gen == self._gen:
                 self._held = (g, norm)
                 self._exchange_meta = dict(meta)
                 self.ledger.on_fresh()
                 have = True
+                if t_sub is not None:
+                    # the whole asynchronous window this exchange lived in:
+                    # submit on a past step -> harvested now
+                    trk.span_at("ascent_exchange",
+                                lane=getattr(self._lane, "lane_name",
+                                             "ascent-thread"),
+                                t0=t_sub, t1=trace_now(),
+                                tau=self.ledger.tau, gen=gen,
+                                step=int(state.step))
             else:
                 # g is None: the lane's lost-exchange sentinel (server error
                 # or dropped connection) — reuse/age like any missed refresh
@@ -343,6 +364,8 @@ class AsyncSamExecutor:
                 # the blocking wait timed out: that exchange is lost (dead
                 # lane/connection) — stop waiting for it on later steps
                 self._inflight = max(0, self._inflight - 1)
+                if self._submit_t:
+                    self._submit_t.pop(0)
             have = self._held is not None and self.ledger.on_reuse()
 
         # submit the next ascent job against the CURRENT params (it will be
@@ -364,6 +387,7 @@ class AsyncSamExecutor:
             if self._lane.submit(self._gen, lane_params,
                                  ascent_batch, rng, int(state.step)):
                 self._inflight += 1
+                self._submit_t.append(trace_now())
 
         t0 = time.perf_counter()
         if self._held is not None:
@@ -377,9 +401,11 @@ class AsyncSamExecutor:
                 self._zeros = jax.tree.map(
                     lambda s: jnp.zeros(s.shape, s.dtype), sds)
             g, norm = self._zeros, 0.0
-        new_state, metrics = self._descent(
-            state, descent_batch, g, np.float32(norm), np.bool_(have))
-        jax.block_until_ready(new_state.params)
+        with trk.span("descent_compute", lane="descent",
+                      step=int(state.step), perturbed=bool(have)):
+            new_state, metrics = self._descent(
+                state, descent_batch, g, np.float32(norm), np.bool_(have))
+            jax.block_until_ready(new_state.params)
         self.timings["descent"].append(time.perf_counter() - t0)
         metrics = dict(metrics)
         metrics["tau"] = self.ledger.tau
@@ -405,6 +431,7 @@ class AsyncSamExecutor:
         still computing from being consumed."""
         self._gen += 1
         self._inflight = 0
+        self._submit_t.clear()
         self._lane.reset()
         self._held = None
         self.ledger.tau = 0

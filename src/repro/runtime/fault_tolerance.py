@@ -21,7 +21,8 @@ import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import TrainState
-from repro.utils import buckets, scalar_metrics
+from repro.obs import scalar_metrics
+from repro.utils import buckets
 
 log = logging.getLogger("repro.fault_tolerance")
 

@@ -29,7 +29,10 @@ from repro.service.ascent_server import (  # noqa: F401
     resolve_loss,
     spawn_server,
 )
-from repro.service.client import RemoteAscentClient  # noqa: F401
+from repro.service.client import (  # noqa: F401
+    RemoteAscentClient,
+    fetch_pool_stats,
+)
 from repro.service.delta import JobEncoder, ShadowState  # noqa: F401
 from repro.service.pool import (  # noqa: F401
     AscentPool,
@@ -40,8 +43,11 @@ from repro.service.protocol import (  # noqa: F401
     FrameType,
     ProtocolError,
     decode_frame,
+    decode_stats,
     encode_frame,
+    encode_stats,
     grad_frame_bytes,
     job_frame_bytes,
     job_frame_breakdown,
+    stats_frame_bytes,
 )

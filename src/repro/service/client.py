@@ -50,6 +50,7 @@ from typing import Any, Optional
 import jax
 
 from repro.core.ascent import Compressor
+from repro.obs import current_tracker, trace_now
 from repro.runtime.async_executor import drain_queue, poll_queue
 from repro.service import protocol
 from repro.service.delta import EncodedJob, JobEncoder
@@ -92,6 +93,8 @@ class RemoteAscentClient:
     #: the executor hands this lane raw (device) params; the encoder owns
     #: the host hop (and shrinks it to the quantized delta when enabled)
     encodes_jobs = True
+    #: trace track this lane's rpc spans render on
+    lane_name = "ascent-remote"
 
     def __init__(self, addr: str, compressor: Optional[Compressor] = None, *,
                  connect_timeout_s: float = 60.0,
@@ -309,7 +312,10 @@ class RemoteAscentClient:
         v2 = proto >= 2
         self._srv_encodings = set(ack.get("job_encodings") or []) if v2 else set()
         self._v2_ok = v2
-        self._srv_pool = proto >= protocol.PROTO_REVISION
+        # gate on the revision that INTRODUCED the pool GRAD prelude, not
+        # the moving PROTO_REVISION: a rev-3 server emits the prelude for
+        # any client declaring proto>=3, and this client must decode it
+        self._srv_pool = proto >= protocol.POOL_REVISION
         if not v2:
             self._encoder.invalidate()
         self._sock = sock
@@ -484,6 +490,13 @@ class RemoteAscentClient:
                 continue
             pending = None
             self.exchanges += 1
+            # the on-wire window of this exchange (send JOB -> GRAD decoded),
+            # on the remote lane's own trace track
+            current_tracker().span_at(
+                "ascent_rpc", lane=self.lane_name, t0=t0, t1=trace_now(),
+                gen=rgen, step=job.step, kind=job.kind,
+                wire_bytes=in_bytes + out_bytes,
+                server_compute_s=round(compute_s, 6))
             self.timings.append(rtt)
             self.last_rtt_s = rtt
             self.last_wire_in_bytes = in_bytes
@@ -515,4 +528,44 @@ class RemoteAscentClient:
         try:
             self._results.put_nowait((gen, None, 0.0, {}))
         except queue.Full:
+            pass
+
+
+def fetch_pool_stats(addr: str, *, auth_token: str = "",
+                     timeout: float = 30.0) -> dict:
+    """Scrape one STATS snapshot from a pool server (revision 4).
+
+    Connects as an *observer* (HELLO with `observe`, so the server creates no
+    canonical shadow and the scrape never shows up as a training client),
+    sends an empty STATS request, and returns the decoded snapshot dict —
+    scheduler counters, queue capacity/depth, and the per-client/per-shadow
+    detail sections. Raises ProtocolError against a pre-revision-4 server
+    (whose ACK declares an older proto) and ConnectionError/OSError on an
+    unreachable address; the caller decides whether a failed scrape matters.
+    """
+    sock = protocol.connect(addr, timeout=timeout)
+    try:
+        protocol.send_frame(sock, FrameType.HELLO, protocol.encode_hello(
+            Compressor(kind="none"), client_id="stats-observer",
+            token=auth_token, extra={"observe": True}))
+        ftype, payload, _ = protocol.recv_frame(sock, timeout=timeout)
+        if ftype == FrameType.ERROR:
+            raise ProtocolError(
+                f"HELLO refused: {payload.decode(errors='replace')}")
+        if ftype != FrameType.HELLO_ACK:
+            raise ProtocolError(f"expected HELLO_ACK, got {ftype.name}")
+        _, ack = protocol.decode_hello(payload)
+        if int(ack.get("proto") or 0) < protocol.STATS_REVISION:
+            raise ProtocolError(
+                f"server proto {ack.get('proto')} predates the STATS frame "
+                f"(revision {protocol.STATS_REVISION})")
+        protocol.send_frame(sock, FrameType.STATS, b"")
+        ftype, payload, _ = protocol.recv_frame(sock, timeout=timeout)
+        if ftype != FrameType.STATS:
+            raise ProtocolError(f"expected STATS, got {ftype.name}")
+        return protocol.decode_stats(payload)
+    finally:
+        try:
+            sock.close()
+        except OSError:
             pass

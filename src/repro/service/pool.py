@@ -64,6 +64,7 @@ import jax
 import numpy as np
 
 from repro.core import make_ascent_fn
+from repro.obs import current_tracker
 from repro.runtime.async_executor import ascent_exchange
 from repro.service import protocol
 from repro.service.delta import ShadowState
@@ -248,11 +249,16 @@ class _ClientConn:
         self.group = str(meta.get("group") or "")
         self.generation = int(meta.get("generation") or 0)
         self.proto = int(meta.get("proto") or 0)
+        #: a stats observer connects only to scrape (no shadow, no jobs)
+        self.observer = bool(meta.get("observe"))
+        # per-client scheduler telemetry, served in the STATS snapshot
+        self.exchanges = 0
+        self.last_wait_s = 0.0
 
     @property
     def pool_grad(self) -> bool:
         """Whether GRAD frames to this client carry the pool prelude."""
-        return self.proto >= 3
+        return self.proto >= protocol.POOL_REVISION
 
     @property
     def scope(self) -> str:
@@ -371,6 +377,31 @@ class AscentPool:
                 "orphaned_jobs": self.orphaned_jobs,
             }
 
+    def stats_snapshot(self) -> dict:
+        """The full STATS-frame snapshot: `stats()` counters plus scheduler
+        capacity and the per-client / per-shadow detail sections a fleet
+        observer joins against its own jsonl traces (client uids match the
+        `client_id` metric). Observer connections are excluded from the
+        detail — a scraper must not see itself as a training client."""
+        snap = self.stats()
+        snap["workers"] = len(self._workers)
+        snap["queue_capacity"] = self._queue.maxsize
+        snap["queue_depth"] = self._queue.qsize()
+        with self._lock:
+            snap["clients_detail"] = [
+                {"uid": client_uid(c.client_id),
+                 "group_uid": client_uid(c.group) if c.group else 0,
+                 "exchanges": c.exchanges,
+                 "last_wait_s": c.last_wait_s}
+                for c in sorted(self._clients, key=lambda c: c.client_id)
+                if not c.observer]
+            snap["shadows_detail"] = [
+                {"scope_uid": client_uid(scope), "gen": gen,
+                 "sync": shadow.sync, "seq": shadow.seq,
+                 "replays": shadow.replays}
+                for (scope, gen), shadow in sorted(self._shadows.items())]
+        return snap
+
     # --- accept-side -------------------------------------------------------
 
     def attach(self, conn) -> threading.Thread:
@@ -411,6 +442,15 @@ class AscentPool:
                 self._clients.add(client)
             if self.cfg.legacy_hello:
                 ack = protocol.encode_hello(compressor, proto=None)
+            elif client.observer:
+                # stats scrapers get no canonical shadow: they never send
+                # jobs, and creating one would pin an empty (scope, gen)
+                # entry in the registry the STATS reply then reports
+                ack = protocol.encode_hello(
+                    compressor, proto=protocol.PROTO_REVISION,
+                    extra={"pool_workers": len(self._workers),
+                           "queue_depth": self._queue.maxsize,
+                           "shadow_sync": 0})
             else:
                 shadow = self._shadow_for(client.scope, client.generation)
                 ack = protocol.encode_hello(
@@ -489,6 +529,13 @@ class AscentPool:
                                     self.cfg.send_timeout_s)
                         continue
                     params = verdict[1]       # "apply" or "replay"
+            elif ftype == FrameType.STATS and not self.cfg.legacy_hello:
+                # revision-4 scrape: reply with the fixed-layout snapshot
+                # and wait for the next request on the same socket
+                client.send(FrameType.STATS,
+                            protocol.encode_stats(self.stats_snapshot()),
+                            self.cfg.send_timeout_s)
+                continue
             else:
                 raise ProtocolError(f"expected JOB, got {ftype.name}")
             # admission AFTER the shadow work: a BUSY rejection loses the
@@ -572,7 +619,13 @@ class AscentPool:
             wait_s = time.monotonic() - work.enq_t
             pool = (work.depth, wait_s) if client.pool_grad else None
             try:
-                leaves, norm, dt = self._compute(client, work)
+                with current_tracker().span(
+                        "pool_exchange",
+                        lane=threading.current_thread().name,
+                        client_id=client.client_id, group=client.group,
+                        gen=work.gen, step=work.step,
+                        wait_s=round(wait_s, 6)):
+                    leaves, norm, dt = self._compute(client, work)
                 payload = protocol.encode_grad(
                     work.gen, work.step, norm, dt, leaves,
                     client.compressor, pool=pool)
@@ -592,6 +645,8 @@ class AscentPool:
                             self.cfg.send_timeout_s)
                 with self._lock:
                     self.exchanges += 1
+                    client.exchanges += 1
+                    client.last_wait_s = wait_s
             except (OSError, TimeoutError):
                 client.close()   # the handler thread's recv will notice
 

@@ -75,8 +75,16 @@ PROTOCOL_VERSION = 1
 #: revision 3 adds the multi-client pool semantics: HELLO identity/auth
 #: fields (client_id/group/generation/token), BUSY/DETACH frames, and the
 #: pool-telemetry GRAD prelude extension (depth + queue-wait, emitted only
-#: when BOTH ends negotiated revision >= 3)
-PROTO_REVISION = 3
+#: when BOTH ends negotiated revision >= 3); revision 4 adds the STATS
+#: request/reply frame — a fleet observer scrapes the pool's scheduler
+#: counters, per-client wait, and shadow generations over the same socket,
+#: no stdout parsing
+PROTO_REVISION = 4
+#: the protocol revision that introduced the pool semantics above — feature
+#: gates must compare against the feature's revision, never PROTO_REVISION
+#: (which keeps moving), or a newer client mis-decodes against older servers
+POOL_REVISION = 3
+STATS_REVISION = 4
 #: JOB-direction encodings a revision-2+ server accepts
 JOB_ENCODINGS = ("none", "int8", "topk")
 FRAME_HEADER_BYTES = 16
@@ -117,6 +125,11 @@ class FrameType(IntEnum):
     #: the resync codec carrying the canonical sync the client must
     #: fast-forward beyond before its next snapshot
     DETACH = 9
+    #: revision 4 — pool statistics scrape. Request: empty payload
+    #: (client -> server, in place of a JOB). Reply: the fixed-layout
+    #: binary snapshot `encode_stats` renders (server -> client), exactly
+    #: modeled by `stats_frame_bytes` like the JOB/GRAD frames.
+    STATS = 10
 
 
 class ProtocolError(RuntimeError):
@@ -805,3 +818,119 @@ def job_frame_bytes(encoding: str, params: Pytree, batch: Pytree, rng, *,
     """
     return job_frame_breakdown(encoding, params, batch, rng, delta=delta,
                                topk_fraction=topk_fraction)["frame"]
+
+
+# ---------------------------------------------------------------------------
+# STATS payload (revision 4): fixed binary layout, exact length model
+#
+#   ver u8 | workers u16 | queue_cap u16 | queue_depth u32
+#   17 x u64 scheduler counters (STATS_COUNTER_KEYS order)
+#   n_clients u32 | per client:  uid u32 | group_uid u32 | exchanges u32 |
+#                                last_wait_s f64                   (20 bytes)
+#   n_shadows u32 | per shadow:  scope_uid u32 | gen u32 | sync u32 |
+#                                seq u32 | replays u32              (20 bytes)
+#
+# Everything run-varying is fixed-width binary, so `stats_frame_bytes` is
+# exact the same way grad/job_frame_bytes are; the payload version byte lets
+# the layout grow without another protocol revision.
+# ---------------------------------------------------------------------------
+
+#: the pool's scheduler counters, in `AscentPool.stats()` order — the wire
+#: layout freezes this order, so it is append-only
+STATS_COUNTER_KEYS = (
+    "connections", "clients", "exchanges", "busy_rejections",
+    "auth_rejections", "resyncs_sent", "detaches_sent", "shadow_installs",
+    "shadow_skips", "deltas_applied", "delta_replays", "shadows",
+    "group_hits", "group_computes", "server_errors", "dropped_clients",
+    "orphaned_jobs",
+)
+STATS_PAYLOAD_VERSION = 1
+#: ver + workers + queue_cap + queue_depth + counters + the two list lengths
+STATS_FIXED_BYTES = (1 + 2 + 2 + 4) + 8 * len(STATS_COUNTER_KEYS) + 4 + 4
+STATS_CLIENT_BYTES = 4 + 4 + 4 + 8
+STATS_SHADOW_BYTES = 4 + 4 + 4 + 4 + 4
+
+
+def encode_stats(snap: dict) -> bytes:
+    """Pack a `AscentPool.stats_snapshot()` dict for the wire."""
+    out = io.BytesIO()
+    out.write(struct.pack(">BHHI", STATS_PAYLOAD_VERSION,
+                          int(snap.get("workers", 0)),
+                          int(snap.get("queue_capacity", 0)),
+                          int(snap.get("queue_depth", 0))))
+    for key in STATS_COUNTER_KEYS:
+        out.write(struct.pack(">Q", int(snap.get(key, 0))))
+    clients = snap.get("clients_detail", [])
+    out.write(struct.pack(">I", len(clients)))
+    for c in clients:
+        out.write(struct.pack(">IIId", int(c["uid"]), int(c["group_uid"]),
+                              int(c["exchanges"]), float(c["last_wait_s"])))
+    shadows = snap.get("shadows_detail", [])
+    out.write(struct.pack(">I", len(shadows)))
+    for s in shadows:
+        out.write(struct.pack(">IIIII", int(s["scope_uid"]), int(s["gen"]),
+                              int(s["sync"]), int(s["seq"]),
+                              int(s["replays"])))
+    return out.getvalue()
+
+
+def decode_stats(payload: bytes) -> dict:
+    """Inverse of encode_stats -> the snapshot dict shape."""
+    if len(payload) < STATS_FIXED_BYTES:
+        raise ProtocolError("STATS payload shorter than its fixed layout")
+    ver, workers, queue_cap, queue_depth = struct.unpack_from(">BHHI",
+                                                              payload, 0)
+    if ver != STATS_PAYLOAD_VERSION:
+        raise ProtocolError(f"STATS payload version {ver} "
+                            f"!= {STATS_PAYLOAD_VERSION}")
+    off = 9
+    snap: dict = {"workers": int(workers), "queue_capacity": int(queue_cap),
+                  "queue_depth": int(queue_depth)}
+    for key in STATS_COUNTER_KEYS:
+        (snap[key],) = struct.unpack_from(">Q", payload, off)
+        snap[key] = int(snap[key])
+        off += 8
+    (n_clients,) = struct.unpack_from(">I", payload, off)
+    off += 4
+    clients = []
+    for _ in range(n_clients):
+        if off + STATS_CLIENT_BYTES > len(payload):
+            raise ProtocolError("STATS client entry overruns payload")
+        uid, group_uid, exchanges, last_wait = struct.unpack_from(
+            ">IIId", payload, off)
+        off += STATS_CLIENT_BYTES
+        clients.append({"uid": int(uid), "group_uid": int(group_uid),
+                        "exchanges": int(exchanges),
+                        "last_wait_s": float(last_wait)})
+    snap["clients_detail"] = clients
+    if off + 4 > len(payload):
+        raise ProtocolError("STATS shadow count overruns payload")
+    (n_shadows,) = struct.unpack_from(">I", payload, off)
+    off += 4
+    shadows = []
+    for _ in range(n_shadows):
+        if off + STATS_SHADOW_BYTES > len(payload):
+            raise ProtocolError("STATS shadow entry overruns payload")
+        scope_uid, gen, sync, seq, replays = struct.unpack_from(
+            ">IIIII", payload, off)
+        off += STATS_SHADOW_BYTES
+        shadows.append({"scope_uid": int(scope_uid), "gen": int(gen),
+                        "sync": int(sync), "seq": int(seq),
+                        "replays": int(replays)})
+    snap["shadows_detail"] = shadows
+    if off != len(payload):
+        raise ProtocolError(
+            f"STATS payload has {len(payload) - off} trailing bytes")
+    return snap
+
+
+def stats_frame_bytes(n_clients: int, n_shadows: int) -> int:
+    """Exact length of the STATS reply frame for a snapshot of this size.
+
+    Layered like `grad_frame_bytes`/`job_frame_bytes`: frame header + fixed
+    payload layout + fixed-width per-entry sections, so a test asserts
+    modeled == len(encode_frame(...)) against a live scrape.
+    """
+    return (FRAME_HEADER_BYTES + STATS_FIXED_BYTES
+            + STATS_CLIENT_BYTES * n_clients
+            + STATS_SHADOW_BYTES * n_shadows)
