@@ -39,6 +39,19 @@
 #                                            # tracker/sink/trace + STATS-frame
 #                                            # tests under the same hard
 #                                            # timeout + interpret kernels
+#   ./scripts/tier1.sh --netchaos            # wire-chaos lane: chaos-proxy
+#                                            # soak (every fault kind through
+#                                            # the frame-aware proxy), the
+#                                            # health/ladder/watchdog units,
+#                                            # lockstep bitwise-transparency
+#                                            # under transient faults, and the
+#                                            # checkpoint-integrity tests —
+#                                            # same hard timeout + interpret
+#                                            # kernels as --service
+#   ./scripts/tier1.sh --all                 # every lane above plus the base
+#                                            # suite, sequentially; exits
+#                                            # non-zero on the first failing
+#                                            # lane (CI meta-entry point)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -72,5 +85,25 @@ if [[ "${1:-}" == "--obs" ]]; then
   python scripts/lint_metric_registry.py
   exec timeout --signal=TERM --kill-after=30 900 \
     env REPRO_KERNELS=interpret python -m pytest -q tests/test_obs.py "$@"
+fi
+if [[ "${1:-}" == "--netchaos" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_netchaos.py "$@"
+fi
+if [[ "${1:-}" == "--all" ]]; then
+  shift
+  # each lane re-enters this script so it keeps its own hard timeout; no
+  # exec — the loop must survive to run the next lane
+  for lane in "" --kernels-interpret --resident --service --pool \
+              --elastic --obs --netchaos; do
+    echo "== tier1 lane: ${lane:-base} =="
+    if [[ -z "$lane" ]]; then
+      "$0" "$@"
+    else
+      "$0" "$lane" "$@"
+    fi
+  done
+  exit 0
 fi
 exec python -m pytest -x -q "$@"

@@ -1,17 +1,29 @@
-"""Checkpointing: atomic, async, keep-k, elastic-reshard on restore.
+"""Checkpointing: atomic, async, keep-k, verified, elastic-reshard on restore.
 
 Layout (one directory per step):
 
     <root>/step_000400.tmp/...      while writing
     <root>/step_000400/
-        manifest.json               treedef paths, shapes, dtypes, extras
+        manifest.json               treedef paths, shapes, dtypes, crc32s, extras
+        manifest.crc32              crc32 of the manifest bytes (text)
         arrays/<leaf-path>.npy      one file per leaf (addressable data)
 
 Writes go to a .tmp directory first and are renamed into place (atomic on
 POSIX), so a crash mid-save can never corrupt the latest checkpoint; restore
 always picks the newest complete directory. `save(..., blocking=False)` hands
 the host transfer + IO to a worker thread so the training loop only pays for
-device->host of the step it snapshots.
+device->host of the step it snapshots. A failure on that worker (disk full,
+permissions) is captured and re-raised from `wait()` or the next `save()` —
+never silently swallowed: `run_resilient` sees it as a failed step and spends
+a restart on it.
+
+Integrity: every leaf record carries the crc32 of its array bytes and the
+manifest itself is checksummed into a sibling file. `restore` verifies leaf
+crcs while loading and falls back to the newest *verified* older step when a
+checkpoint is corrupted or truncated instead of crashing or loading garbage;
+`all_steps` skips directories that fail the (cheap, manifest-level)
+verification. Pre-integrity-era checkpoints — no crc fields, no sibling
+file — still restore unchanged: absent checksums verify vacuously.
 
 Elastic restore: arrays are read on host and `jax.device_put` against the
 *current* mesh/sharding — a checkpoint written on a 16x16 mesh restores onto
@@ -21,10 +33,12 @@ save->reshard->restore equality.
 from __future__ import annotations
 
 import json
+import logging
 import pathlib
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -32,8 +46,18 @@ import numpy as np
 
 from repro.utils import trees
 
+log = logging.getLogger("repro.checkpoint")
+
 Pytree = Any
 _STEP_RE = re.compile(r"step_(\d+)$")
+
+
+class CheckpointIntegrityError(RuntimeError):
+    """A checkpoint directory failed crc32/structure verification."""
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 class CheckpointManager:
@@ -42,11 +66,16 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._worker: Optional[threading.Thread] = None
+        self._async_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Pytree, extras: Optional[dict] = None,
              blocking: bool = True) -> pathlib.Path:
-        """Snapshot `state` (any pytree of arrays) at `step`."""
+        """Snapshot `state` (any pytree of arrays) at `step`.
+
+        Re-raises a failure from a previous non-blocking save first — the
+        caller must not keep training believing checkpoints exist.
+        """
         self.wait()
         # snapshot on host NOW so the caller may mutate/donate state after
         leaves, treedef = jax.tree.flatten(state)
@@ -65,8 +94,15 @@ class CheckpointManager:
                 np.save(tmp / "arrays" / fname, arr)
                 manifest["leaves"].append(
                     {"path": path, "file": fname,
-                     "shape": list(arr.shape), "dtype": str(arr.dtype)})
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
+                     "shape": list(arr.shape), "dtype": str(arr.dtype),
+                     "crc32": _leaf_crc(arr)})
+            manifest_bytes = json.dumps(manifest).encode()
+            (tmp / "manifest.json").write_bytes(manifest_bytes)
+            # the manifest's own checksum lives in a sibling file (it cannot
+            # checksum itself); a torn/corrupted manifest then fails cheap
+            # verification instead of parsing into garbage leaf records
+            (tmp / "manifest.crc32").write_text(
+                str(zlib.crc32(manifest_bytes)))
             if final.exists():
                 shutil.rmtree(final)
             tmp.rename(final)
@@ -75,27 +111,74 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._worker = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # noqa: BLE001 — captured, not
+                    self._async_error = e   # swallowed: wait()/save() re-raise
+            self._worker = threading.Thread(target=guarded, daemon=True)
             self._worker.start()
         return final
 
     def wait(self) -> None:
-        """Join any in-flight async save."""
+        """Join any in-flight async save; re-raise its failure (once)."""
         if self._worker is not None:
             self._worker.join()
             self._worker = None
+        if self._async_error is not None:
+            err, self._async_error = self._async_error, None
+            raise RuntimeError(
+                f"async checkpoint save failed: {type(err).__name__}: {err}"
+            ) from err
 
     def _gc(self) -> None:
         steps = sorted(self.all_steps())
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
 
+    # ---------------------------------------------------------- verification
+    def _verify_manifest(self, d: pathlib.Path) -> Optional[dict]:
+        """Cheap structural check: manifest parses, matches its sibling
+        checksum, and every leaf file exists. Returns the manifest, or None.
+        Legacy directories (no crc sibling) verify on structure alone."""
+        try:
+            manifest_bytes = (d / "manifest.json").read_bytes()
+            crc_file = d / "manifest.crc32"
+            if crc_file.exists() and \
+                    int(crc_file.read_text()) != zlib.crc32(manifest_bytes):
+                return None
+            manifest = json.loads(manifest_bytes)
+            for rec in manifest["leaves"]:
+                if not (d / "arrays" / rec["file"]).is_file():
+                    return None
+            return manifest
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+    def verify_step(self, step: int, deep: bool = True) -> bool:
+        """Full verification of one step: manifest + (deep) per-leaf crc32."""
+        d = self.root / f"step_{step:08d}"
+        manifest = self._verify_manifest(d)
+        if manifest is None:
+            return False
+        if not deep:
+            return True
+        for rec in manifest["leaves"]:
+            try:
+                arr = np.load(d / "arrays" / rec["file"])
+            except (OSError, ValueError):
+                return False
+            if "crc32" in rec and _leaf_crc(arr) != rec["crc32"]:
+                return False
+        return True
+
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
+        """Steps with a structurally verified checkpoint directory."""
         out = []
         for p in self.root.iterdir():
             m = _STEP_RE.search(p.name)
-            if m and p.is_dir() and (p / "manifest.json").exists():
+            if m and p.is_dir() and self._verify_manifest(p) is not None:
                 out.append(int(m.group(1)))
         return sorted(out)
 
@@ -103,14 +186,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Pytree, step: Optional[int] = None,
-                shardings: Optional[Pytree] = None) -> tuple[Pytree, dict]:
-        """Restore into the structure of `like`; device_put against
-        `shardings` (elastic re-shard) when given. Returns (state, extras)."""
-        step = step if step is not None else self.latest_step()
-        assert step is not None, f"no checkpoints under {self.root}"
+    def _load_step(self, step: int, like: Pytree,
+                   shardings: Optional[Pytree]) -> tuple[Pytree, dict]:
+        """Load one verified step, crc-checking every leaf as it is read.
+
+        Raises CheckpointIntegrityError on any mismatch/corruption so
+        `restore` can fall back to an older step.
+        """
         d = self.root / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        manifest = self._verify_manifest(d)
+        if manifest is None:
+            raise CheckpointIntegrityError(f"{d}: manifest failed "
+                                           "verification")
         by_path = {rec["path"]: rec for rec in manifest["leaves"]}
 
         leaves, treedef = jax.tree.flatten(like)
@@ -122,10 +209,44 @@ class CheckpointManager:
         for path, leaf, sh in zip(paths, leaves, shard_leaves):
             rec = by_path.get(path)
             assert rec is not None, f"checkpoint missing leaf {path}"
-            arr = np.load(d / "arrays" / rec["file"])
+            try:
+                arr = np.load(d / "arrays" / rec["file"])
+            except (OSError, ValueError) as e:
+                raise CheckpointIntegrityError(
+                    f"{d}: leaf {path} unreadable ({e})") from e
+            if "crc32" in rec and _leaf_crc(arr) != rec["crc32"]:
+                raise CheckpointIntegrityError(
+                    f"{d}: leaf {path} crc32 mismatch (corrupted data)")
             assert tuple(arr.shape) == tuple(leaf.shape), \
                 f"{path}: ckpt {arr.shape} vs model {leaf.shape}"
             arr = arr.astype(leaf.dtype)
             out.append(jax.device_put(arr, sh) if sh is not None
                        else jax.device_put(arr))
         return jax.tree.unflatten(treedef, out), manifest["extras"]
+
+    def restore(self, like: Pytree, step: Optional[int] = None,
+                shardings: Optional[Pytree] = None) -> tuple[Pytree, dict]:
+        """Restore into the structure of `like`; device_put against
+        `shardings` (elastic re-shard) when given. Returns (state, extras).
+
+        A corrupted/truncated checkpoint falls back to the newest verified
+        older step (a stale-but-true rollback target beats a fresh lie);
+        only when every candidate fails does this raise.
+        """
+        steps = self.all_steps()
+        assert steps, f"no checkpoints under {self.root}"
+        if step is not None:
+            candidates = [s for s in steps if s <= step]
+            assert candidates, f"no checkpoint at or before step {step}"
+        else:
+            candidates = steps
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._load_step(s, like, shardings)
+            except CheckpointIntegrityError as e:
+                log.warning("checkpoint step %d failed verification (%s); "
+                            "falling back to an older step", s, e)
+                last_err = e
+        raise CheckpointIntegrityError(
+            f"no verifiable checkpoint under {self.root}") from last_err

@@ -30,6 +30,7 @@ pinned lockstep remote==hetero parity.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 from repro.core import MethodConfig, TrainState
@@ -38,6 +39,8 @@ from repro.core.ascent import Compressor
 from repro.engine.hetero import HeteroExecutor
 from repro.optim import GradientTransform
 from repro.runtime.async_executor import ExecutorConfig
+from repro.runtime.fault_tolerance import RestartBudget
+from repro.runtime.health import ServerWatchdog
 from repro.service.ascent_server import ServerHandle, spawn_server
 from repro.service.client import RemoteAscentClient
 
@@ -104,6 +107,22 @@ class RemoteExecutor(HeteroExecutor):
                 self.server.kill()
             raise
         self.xcfg = xcfg
+        # --- server watchdog (runtime.health): STATS-scraping classifier
+        # that tells a WEDGED loopback server (alive to TCP, counters
+        # frozen with work queued) from a dead one; both are restarted
+        # under a bounded budget, sharing the step-loop respawn lock
+        self._server_lock = threading.Lock()
+        self.watchdog: Optional[ServerWatchdog] = None
+        if xcfg.watchdog and self.server is not None:
+            self.watchdog = ServerWatchdog(
+                addr_fn=lambda: self.client.address,
+                restart_fn=self._watchdog_restart,
+                budget=RestartBudget(xcfg.watchdog_max_restarts,
+                                     what="server restart"),
+                interval_s=xcfg.watchdog_interval_s,
+                wedge_scrapes=xcfg.watchdog_wedge_scrapes,
+                auth_token=xcfg.auth_token)
+            self.watchdog.start()
 
     # --- loopback resilience ----------------------------------------------------
     def _maybe_respawn_server(self) -> None:
@@ -116,26 +135,50 @@ class RemoteExecutor(HeteroExecutor):
         ledger instead of crashing Engine.fit. The successful-spawn wait is
         synchronous with the step (bounded by spawn_server's startup
         timeout) — acceptable for the loopback/smoke path this serves."""
-        if self.server is None or self.server.alive():
-            return
-        if self.server_respawns >= self.xcfg.max_server_respawns:
-            return
-        self.server_respawns += 1
-        try:
-            self.server = spawn_server(self._loss_spec, bind="127.0.0.1:0",
-                                       delay_s=self.xcfg.ascent_delay_s,
-                                       pool_workers=self.xcfg.pool_workers,
-                                       auth_token=self.xcfg.auth_token)
-        except RuntimeError as e:
-            self.client._note_error(f"server respawn failed: {e}")
-            return
-        self.client.set_address(self.server.addr)
+        with self._server_lock:
+            if self.server is None or self.server.alive():
+                return
+            if self.server_respawns >= self.xcfg.max_server_respawns:
+                return
+            self.server_respawns += 1
+            try:
+                self.server = spawn_server(
+                    self._loss_spec, bind="127.0.0.1:0",
+                    delay_s=self.xcfg.ascent_delay_s,
+                    pool_workers=self.xcfg.pool_workers,
+                    auth_token=self.xcfg.auth_token)
+            except RuntimeError as e:
+                self.client._note_error(f"server respawn failed: {e}")
+                return
+            self.client.set_address(self.server.addr)
+
+    def _watchdog_restart(self, verdict: str) -> None:
+        """Watchdog verdict (dead/wedged): replace the loopback server. A
+        wedged server is still alive to the OS, so it is killed first; the
+        client is pointed at the replacement and reconnects."""
+        with self._server_lock:
+            if self.server is None:
+                return
+            self.client._note_error(f"watchdog: server {verdict}; restarting")
+            self.server.kill()
+            try:
+                self.server = spawn_server(
+                    self._loss_spec, bind="127.0.0.1:0",
+                    delay_s=self.xcfg.ascent_delay_s,
+                    pool_workers=self.xcfg.pool_workers,
+                    auth_token=self.xcfg.auth_token)
+            except RuntimeError as e:
+                self.client._note_error(f"watchdog respawn failed: {e}")
+                return
+            self.client.set_address(self.server.addr)
 
     def step(self, state: TrainState, batch: dict) -> tuple[TrainState, dict]:
         self._maybe_respawn_server()
         return super().step(state, batch)
 
     def close(self) -> None:
+        if self.watchdog is not None:
+            self.watchdog.close()    # stop scraping before the server dies
         super().close()              # inner executor -> client (lane) close
         if self.server is not None:
             self.server.kill()

@@ -115,6 +115,28 @@ def main() -> None:
                     help="remote only: shared secret presented in HELLO "
                          "(must match the pool server's --auth-token; "
                          "required for non-loopback deployments)")
+    ap.add_argument("--netchaos", default="",
+                    help="remote only: interpose service.netchaos.ChaosProxy "
+                         "between the client and the ascent server and drive "
+                         "it with this fault schedule — comma-separated "
+                         "'action[:FRAME][:key=val...]', e.g. "
+                         "'corrupt:GRAD:every=5,drop:JOB_DELTA:nth=7,"
+                         "blackhole:GRAD:nth=9:duration_s=0.5' (actions: "
+                         "corrupt, truncate, drop, delay, stall, blackhole, "
+                         "duplicate). Local soak harness for the wire "
+                         "hardening + the --lane-ladder response")
+    ap.add_argument("--lane-ladder", action="store_true",
+                    help="hetero/remote: health-driven degradation ladder — "
+                         "an unhealthy/stalled ascent lane fails over one "
+                         "rung (remote -> in-process thread -> ledger-only) "
+                         "and recovers back up after a probationary cooldown; "
+                         "transitions land in lane_state/lane_failovers/"
+                         "lane_recoveries telemetry")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="remote + --serve-ascent only: STATS-scraping "
+                         "server watchdog — restarts the loopback server "
+                         "when it is dead or wedged (counters frozen with "
+                         "work queued), under a bounded restart budget")
     ap.add_argument("--ascent-device", default="",
                     help="hetero only: device for the slow ascent lane, e.g. "
                          "'cpu:0' (paper's CPU helper on a CPU+accelerator host)")
@@ -205,6 +227,20 @@ def main() -> None:
     if args.executor == "remote" and not (args.ascent_addr or args.serve_ascent):
         ap.error("--executor remote needs --ascent-addr (a running "
                  "ascent server) or --serve-ascent (loopback subprocess)")
+    if args.netchaos and args.executor != "remote":
+        ap.error("--netchaos applies to --executor remote only (it attacks "
+                 "the ascent wire)")
+    if args.lane_ladder and args.executor not in ("hetero", "remote"):
+        ap.error("--lane-ladder applies to --executor hetero or remote "
+                 "(the fused executor has no ascent lane to degrade)")
+    if args.watchdog and not args.serve_ascent:
+        ap.error("--watchdog restarts the spawned loopback server; it needs "
+                 "--serve-ascent (an external server is restarted by its "
+                 "own supervisor)")
+    if args.watchdog and args.netchaos:
+        ap.error("--watchdog and --netchaos are mutually exclusive: under "
+                 "--netchaos the launcher owns the server (behind the "
+                 "proxy), so the executor's watchdog could not restart it")
     if args.chaos and not args.elastic:
         ap.error("--chaos needs --elastic (a non-elastic executor cannot "
                  "act on mesh resize events)")
@@ -230,6 +266,7 @@ def main() -> None:
 
     fused_update = {"auto": None, "on": True, "off": False}[args.fused_update]
     resident = {"auto": None, "on": True, "off": False}[args.resident]
+    netchaos_proxy = netchaos_server = None
     if args.executor == "hetero":
         # two host lanes; hand-offs are host arrays, no mesh required.
         # --ascent-device/--descent-device place the lanes on real devices
@@ -237,7 +274,8 @@ def main() -> None:
         exec_cfg = ExecutorConfig(
             ascent_device=_parse_device(args.ascent_device),
             descent_device=_parse_device(args.descent_device),
-            fused_update=fused_update, resident=resident)
+            fused_update=fused_update, resident=resident,
+            lane_ladder=args.lane_ladder)
         executor = HeteroExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
@@ -247,8 +285,26 @@ def main() -> None:
         # holding the same arch/config (the wire carries params + b' batches
         # out and compressed ascent gradients back)
         loss_spec = f"arch:{args.arch}" + (":reduced" if args.reduced else "")
-        exec_cfg = ExecutorConfig(ascent_addr=args.ascent_addr,
-                                  serve_ascent=args.serve_ascent,
+        upstream, serve = args.ascent_addr, args.serve_ascent
+        if args.netchaos:
+            # chaos soak: the client talks to the proxy, the proxy to the
+            # real server — spawned here (not by RemoteExecutor) so the
+            # proxy can interpose on the loopback path too
+            from repro.service.ascent_server import spawn_server
+            from repro.service.netchaos import ChaosProxy, parse_faults
+            if serve:
+                netchaos_server = spawn_server(
+                    loss_spec, pool_workers=args.pool_workers,
+                    auth_token=args.auth_token)
+                upstream, serve = netchaos_server.addr, False
+            netchaos_proxy = ChaosProxy(upstream,
+                                        parse_faults(args.netchaos))
+            upstream = netchaos_proxy.addr
+            print(f"netchaos: proxy {netchaos_proxy.addr} -> "
+                  f"{netchaos_proxy.upstream} "
+                  f"({len(netchaos_proxy.schedule.rules)} fault rules)")
+        exec_cfg = ExecutorConfig(ascent_addr=upstream,
+                                  serve_ascent=serve,
                                   loss_spec=loss_spec,
                                   fused_update=fused_update,
                                   resident=resident,
@@ -256,7 +312,9 @@ def main() -> None:
                                   job_delta=(args.job_delta == "on"),
                                   pool_workers=args.pool_workers,
                                   sync_group=args.sync_group,
-                                  auth_token=args.auth_token)
+                                  auth_token=args.auth_token,
+                                  lane_ladder=args.lane_ladder,
+                                  watchdog=args.watchdog)
         executor = RemoteExecutor(bundle.loss_fn, mcfg, optimizer,
                                   exec_cfg=exec_cfg,
                                   calibrate=args.calibrate)
@@ -300,8 +358,21 @@ def main() -> None:
     if args.trace:
         from repro.obs import TraceEventSink, Tracker
         tracker = Tracker([TraceEventSink(args.trace)])
-    with Engine(executor, pipe, callbacks) as eng:
-        report = eng.fit(state, args.steps, events=events, tracker=tracker)
+    try:
+        with Engine(executor, pipe, callbacks) as eng:
+            report = eng.fit(state, args.steps, events=events,
+                             tracker=tracker)
+    finally:
+        # launcher-owned netchaos plumbing (the executor tears down only
+        # what it spawned itself)
+        if netchaos_proxy is not None:
+            netchaos_proxy.close()
+        if netchaos_server is not None:
+            netchaos_server.kill()
+    if netchaos_proxy is not None:
+        print(f"netchaos: {netchaos_proxy.connections} connections, "
+              f"{netchaos_proxy.fault_count()} faults fired "
+              f"{netchaos_proxy.schedule.fired_actions()}")
     if tracker is not None:
         tracker.close()
         print(f"trace written to {args.trace} (load at ui.perfetto.dev)")

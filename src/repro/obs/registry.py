@@ -83,6 +83,16 @@ METRIC_KEYS: tuple = (
               source="elastic"),
     MetricKey("resize_time_s", "seconds the resize's re-place + re-lower "
               "cost", unit="s", optional=True, source="elastic"),
+    MetricKey("lane_state", "ascent-lane degradation-ladder rung (0 = "
+              "primary/remote, 1 = in-process thread lane, 2 = ledger-only "
+              "descent); present when the ladder is enabled",
+              optional=True, source="lane", trace_counter=True),
+    MetricKey("lane_failovers", "cumulative ladder demotions, emitted on "
+              "the step right after a failover", unit="count", optional=True,
+              source="lane"),
+    MetricKey("lane_recoveries", "cumulative ladder promotions, emitted on "
+              "the step right after a recovery", unit="count", optional=True,
+              source="lane"),
     # --- method-level scalars (inside the jitted step) ----------------------
     MetricKey("loss_at_w", "loss at the unperturbed point w (SAM two-point "
               "methods)", source="core"),

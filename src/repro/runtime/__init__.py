@@ -17,3 +17,9 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     RunReport,
     run_resilient,
 )
+from repro.runtime.health import (  # noqa: F401
+    LADDER_LEVELS,
+    LaneHealth,
+    LaneLadder,
+    ServerWatchdog,
+)

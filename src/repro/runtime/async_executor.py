@@ -91,6 +91,21 @@ class ExecutorConfig:
     #                                ascent gradient per (generation, step)
     auth_token: str = ""           # shared secret for non-loopback pools
     pool_workers: int = 0          # loopback spawn only: 0 = server default
+    # --- health-driven degradation ladder (runtime.health) ------------------
+    # off by default: the ladder swaps lanes at runtime, which is
+    # intentionally invisible to the lockstep parity/bitwise tests
+    lane_ladder: bool = False
+    health_window: int = 16        # rolling exchange-outcome window
+    health_error_threshold: float = 0.5
+    health_min_samples: int = 4
+    health_stall_timeout_s: float = 30.0   # silence-with-outstanding = stall
+    ladder_probation_steps: int = 8
+    ladder_cooldown_steps: int = 16
+    # --- server watchdog (engine.RemoteExecutor loopback) -------------------
+    watchdog: bool = False         # scrape STATS; restart dead/wedged server
+    watchdog_interval_s: float = 5.0
+    watchdog_wedge_scrapes: int = 3
+    watchdog_max_restarts: int = 2
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +287,34 @@ class ThreadAscentLane:
             self._thread.join(timeout=30.0)
 
 
+class LedgerOnlyLane:
+    """The ladder's bottom rung: no ascent source at all.
+
+    `full()` is always True so the executor never submits (and never pays
+    the params materialization); `poll()` never delivers. The held gradient
+    keeps aging on the staleness ledger and, past max_staleness, every step
+    is plain SGD — descent-only training, the AsyncSAM guarantee that a dead
+    helper can slow convergence but never stall the run.
+    """
+
+    lane_name = "ascent-none"
+
+    def full(self) -> bool:
+        return True
+
+    def submit(self, gen, params, batch, rng, step) -> bool:
+        return False
+
+    def poll(self, block: bool = False, timeout=None):
+        return None
+
+    def reset(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
 class AsyncSamExecutor:
     def __init__(self, loss_fn: LossFn, method_cfg: MethodConfig,
                  optimizer: GradientTransform,
@@ -305,6 +348,27 @@ class AsyncSamExecutor:
             ThreadAscentLane(self._ascent_raw, self._norm, self._compressor,
                              device=self.xcfg.ascent_device,
                              delay_s=self.xcfg.ascent_delay_s)
+        # --- degradation ladder (runtime.health): remote -> local -> ledger.
+        # Level 0 is whatever lane was configured above; the local thread
+        # lane is built lazily on first failover (it holds a whole extra
+        # worker thread), and the demoted primary stays OPEN while degraded —
+        # a remote client keeps reconnecting in the background, which is
+        # exactly the readiness signal promotion gates on.
+        self._ladder = self._health = None
+        self._local_lane: Optional[ThreadAscentLane] = None
+        self._ledger_lane = LedgerOnlyLane()
+        self._announce_ladder = False
+        if self.xcfg.lane_ladder:
+            from repro.runtime.health import LaneHealth, LaneLadder
+            self._ladder = LaneLadder(
+                probation_steps=self.xcfg.ladder_probation_steps,
+                cooldown_steps=self.xcfg.ladder_cooldown_steps)
+            self._health = LaneHealth(
+                window=self.xcfg.health_window,
+                error_threshold=self.xcfg.health_error_threshold,
+                min_samples=self.xcfg.health_min_samples,
+                stall_timeout_s=self.xcfg.health_stall_timeout_s)
+        self._primary_lane = self._lane
         self._gen = 0            # bumped by reset(): fences off in-flight work
         self._inflight = 0       # results the lane still owes (lockstep gate)
         self._closed = False
@@ -341,6 +405,11 @@ class AsyncSamExecutor:
             self._inflight = max(0, self._inflight - 1)
             t_sub = self._submit_t.pop(0) if self._submit_t else None
             gen, g, norm, meta = got
+            if self._health is not None and gen == self._gen:
+                # one exchange concluded on the ACTIVE lane: feed the
+                # rolling health window (g=None is the lost-exchange
+                # sentinel; pre-swap generations don't count against it)
+                self._health.record(g is not None, meta.get("rtt_s"))
             if g is not None and gen == self._gen:
                 self._held = (g, norm)
                 self._exchange_meta = dict(meta)
@@ -366,7 +435,13 @@ class AsyncSamExecutor:
                 self._inflight = max(0, self._inflight - 1)
                 if self._submit_t:
                     self._submit_t.pop(0)
+                if self._health is not None:
+                    self._health.record(False)
             have = self._held is not None and self.ledger.on_reuse()
+
+        # degradation ladder: verdicts from the window just updated, BEFORE
+        # the submit below, so a post-swap lane receives this step's job
+        self._evaluate_ladder()
 
         # submit the next ascent job against the CURRENT params (it will be
         # one step old when used — Algorithm 1 line 3); the full-check comes
@@ -388,6 +463,8 @@ class AsyncSamExecutor:
                                  ascent_batch, rng, int(state.step)):
                 self._inflight += 1
                 self._submit_t.append(trace_now())
+                if self._health is not None:
+                    self._health.note_submit()
 
         t0 = time.perf_counter()
         if self._held is not None:
@@ -421,7 +498,80 @@ class AsyncSamExecutor:
                     "pool_depth", "pool_wait_s", "client_id"):
             if key in self._exchange_meta:
                 metrics[key] = float(self._exchange_meta[key])
+        # ladder telemetry: the current rung every step (ladder runs only),
+        # cumulative transition counters only on the step right after a
+        # transition — the `resize_events` emission pattern, so summing a
+        # jsonl column never double-counts
+        if self._ladder is not None:
+            metrics["lane_state"] = float(self._ladder.level)
+            if self._announce_ladder:
+                self._announce_ladder = False
+                metrics["lane_failovers"] = float(self._ladder.failovers)
+                metrics["lane_recoveries"] = float(self._ladder.recoveries)
         return new_state, metrics
+
+    # --- degradation ladder (runtime.health) -----------------------------------
+    def _evaluate_ladder(self) -> None:
+        """One per-step ladder decision: demote on an unhealthy or stalled
+        window, promote one rung after cooldown when the upper lane is
+        ready. Transitions fence the generation (a result the old lane still
+        owes must not be consumed) but KEEP the held gradient — it is still
+        a valid perturbation direction that ages on the staleness ledger."""
+        ladder, health = self._ladder, self._health
+        if ladder is None:
+            return
+        ladder.tick()
+        if health.unhealthy() or health.stalled():
+            if ladder.demote():
+                self._swap_lane("lane_failover")
+            else:
+                health.reset()   # already at the bottom: clear the verdict
+        elif ladder.can_promote() and self._upper_ready(ladder.level - 1):
+            ladder.promote()
+            self._swap_lane("lane_recovery")
+
+    def _upper_ready(self, level: int) -> bool:
+        """May the ladder promote INTO `level`? The primary rung requires a
+        live connection and no fatal (auth) rejection — a remote client
+        keeps reconnecting in the background while demoted, so its
+        `connected` event is exactly the recovery signal; lanes without one
+        (the in-process thread lane) are always ready."""
+        if level == 0:
+            lane = self._primary_lane
+            if getattr(lane, "fatal_error", ""):
+                return False
+            conn = getattr(lane, "connected", None)
+            return conn.is_set() if conn is not None else True
+        return True
+
+    def _lane_for_level(self, level: int):
+        if level == 0:
+            return self._primary_lane
+        if level == 1:
+            if self._local_lane is None:
+                self._local_lane = ThreadAscentLane(
+                    self._ascent_raw, self._norm, self._compressor,
+                    device=self.xcfg.ascent_device,
+                    delay_s=self.xcfg.ascent_delay_s)
+            return self._local_lane
+        return self._ledger_lane
+
+    def _swap_lane(self, event: str) -> None:
+        from repro.runtime.health import LADDER_LEVELS
+        old = self._lane
+        self._gen += 1               # fence off the old lane's in-flight work
+        self._inflight = 0
+        self._submit_t.clear()
+        old.reset()
+        self._lane = self._lane_for_level(self._ladder.level)
+        self._lane.reset()
+        self._health.reset()
+        self._announce_ladder = True
+        current_tracker().event(event, lane="health",
+                                level=self._ladder.level,
+                                rung=LADDER_LEVELS[self._ladder.level],
+                                failovers=self._ladder.failovers,
+                                recoveries=self._ladder.recoveries)
 
     def reset(self) -> None:
         """Drop held and in-flight ascent state (e.g. after a checkpoint
@@ -435,6 +585,8 @@ class AsyncSamExecutor:
         self._lane.reset()
         self._held = None
         self.ledger.tau = 0
+        if self._health is not None:
+            self._health.reset()   # fenced-off exchanges are not evidence
 
     # --- system-aware b' (paper §3.3) -------------------------------------------
     def calibrate(self, state: TrainState, batch: dict, probes: int = 3) -> float:
@@ -472,7 +624,15 @@ class AsyncSamExecutor:
         if self._closed:
             return
         self._closed = True
-        self._lane.close()
+        # the ladder may have built extra lanes; close every distinct one
+        lanes = [self._lane, self._primary_lane]
+        if self._local_lane is not None:
+            lanes.append(self._local_lane)
+        seen: list = []
+        for lane in lanes:
+            if not any(lane is s for s in seen):
+                seen.append(lane)
+                lane.close()
 
     def __enter__(self):
         return self

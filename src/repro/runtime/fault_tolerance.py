@@ -105,7 +105,12 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
                   ) -> RunReport:
     """Run `n_steps` of `step_fn`, surviving crashes via checkpoint-restart.
 
-    `failure_injector(step)` may raise to simulate a node loss. The pipeline
+    `failure_injector(step)` may raise to simulate a node loss. A failed
+    ASYNC checkpoint save surfaces the same way: the manager re-raises the
+    captured worker exception from the next `save()`/`wait()`, which lands
+    in this loop's failure domain — one spent restart and a rollback to the
+    last checkpoint that actually made it to disk, never a silent gap in
+    the checkpoint history. The pipeline
     must expose state()/restore() (see repro.data.pipeline). `on_restore`
     is called with the restored state after every rollback so stateful
     executors (the hetero lane's held ascent gradient) can reset; when it

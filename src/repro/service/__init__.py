@@ -34,6 +34,12 @@ from repro.service.client import (  # noqa: F401
     fetch_pool_stats,
 )
 from repro.service.delta import JobEncoder, ShadowState  # noqa: F401
+from repro.service.netchaos import (  # noqa: F401
+    ChaosProxy,
+    FaultRule,
+    FaultSchedule,
+    parse_faults,
+)
 from repro.service.pool import (  # noqa: F401
     AscentPool,
     PoolConfig,

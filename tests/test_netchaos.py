@@ -1,0 +1,700 @@
+"""Wire-level chaos harness + the health-driven degradation ladder.
+
+`service.netchaos.ChaosProxy` sits between `RemoteAscentClient` and a real
+ascent server and attacks the connection frame by frame (corrupt, truncate,
+drop, delay, stall, blackhole, duplicate) under a deterministic
+`FaultSchedule`; `runtime.health` turns the resulting exchange outcomes
+into an explicit failover ladder (remote -> in-process thread -> ledger) and
+a STATS-scraping server watchdog. This file pins:
+
+* the schedule/proxy mechanics themselves (deterministic firing, grammar),
+* LaneHealth / LaneLadder / ServerWatchdog in isolation (fake clocks/scrapes),
+* the acceptance soak: a remote fit through a hostile schedule covering
+  every fault kind completes with finite losses and >=1 ladder downgrade
+  plus >=1 recovery in the obs registry keys,
+* transient-only faults under lockstep being bitwise invisible
+  (the `retry_inflight` path),
+* reconnect-storm bounds (jittered backoff, fatal auth errors don't retry),
+* checkpoint integrity: corrupt-checkpoint fallback to a verified older
+  step, and async-save errors surfacing instead of vanishing.
+
+Every blocking wait has an explicit deadline; `scripts/tier1.sh --netchaos`
+adds a process-level timeout on top.
+"""
+import socket
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import CheckpointIntegrityError
+from repro.core import MethodConfig, slice_ascent_batch
+from repro.core.ascent import Compressor
+from repro.data.synthetic import ClassificationTask
+from repro.engine import Engine, RemoteExecutor
+from repro.runtime import (ExecutorConfig, LaneHealth, LaneLadder,
+                           ResilienceConfig, RestartBudget, ServerWatchdog,
+                           run_resilient)
+from repro.service import protocol
+from repro.service.ascent_server import AscentServer
+from repro.service.client import RemoteAscentClient
+from repro.service.netchaos import (ChaosProxy, FaultRule, FaultSchedule,
+                                    parse_faults)
+from repro.service.protocol import FrameType
+from repro.service.testing import mlp_init, mlp_loss
+
+TASK = ClassificationTask(n_classes=4, dim=8, seed=3)
+BATCH = 64
+WIDTHS = (8, 32, 4)
+
+
+def _params(seed=0):
+    return mlp_init(jax.random.PRNGKey(seed), WIDTHS)
+
+
+def _batches(n, frac=0.5):
+    return [{**b, "ascent": slice_ascent_batch(b, frac)}
+            for b in TASK.train_batches(BATCH, n)]
+
+
+def _mcfg():
+    return MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule / spec grammar
+# ---------------------------------------------------------------------------
+
+def test_fault_rules_fire_deterministically():
+    sched = FaultSchedule([FaultRule("corrupt", frame="GRAD", nth=2),
+                           FaultRule("drop", frame="GRAD", every=3, count=1),
+                           FaultRule("delay", frame="JOB_DELTA")])
+    fired = [sched.fire("s2c", "GRAD") for _ in range(7)]
+    # first firing rule wins AND consumes the frame: nth=2 takes frame 2,
+    # so the every=3 rule only counts frames 1,3,4,... and fires on frame 4;
+    # count=1 then caps it (frame 7 would otherwise be its 6th match)
+    assert [f.action if f else None for f in fired] == \
+        [None, "corrupt", None, "drop", None, None, None]
+    # unrestricted rule fires on every matching frame, wrong frames never
+    assert sched.fire("c2s", "JOB_DELTA").action == "delay"
+    assert sched.fire("c2s", "HELLO") is None
+
+
+def test_fault_schedule_prob_is_seeded_deterministic():
+    def run(seed):
+        sched = FaultSchedule([FaultRule("delay", prob=0.5)], seed=seed)
+        return [sched.fire("s2c", "GRAD") is not None for _ in range(32)]
+    assert run(7) == run(7)
+    assert run(7) != run(8)
+
+
+def test_parse_faults_grammar():
+    sched = parse_faults(
+        "corrupt:GRAD:nth=2,delay:*:prob=0.25:delay_s=0.1,"
+        "blackhole:GRAD:nth=4:duration_s=0.5,drop:HELLO:direction=c2s")
+    actions = [(r.action, r.frame) for r in sched.rules]
+    assert actions == [("corrupt", "GRAD"), ("delay", "*"),
+                       ("blackhole", "GRAD"), ("drop", "HELLO")]
+    assert sched.rules[0].nth == 2
+    assert sched.rules[1].prob == 0.25 and sched.rules[1].delay_s == 0.1
+    assert sched.rules[2].duration_s == 0.5
+    assert sched.rules[3].direction == "c2s"
+    with pytest.raises(ValueError, match="unknown fault action"):
+        parse_faults("explode:GRAD")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        parse_faults("drop:GRAD:when=later")
+
+
+# ---------------------------------------------------------------------------
+# LaneHealth / LaneLadder (pure logic, fake clocks)
+# ---------------------------------------------------------------------------
+
+def test_lane_health_error_rate_window_and_reset():
+    h = LaneHealth(window=4, error_threshold=0.5, min_samples=3)
+    h.record(False)
+    h.record(False)
+    assert not h.unhealthy()            # below min_samples
+    h.record(False)
+    assert h.unhealthy()
+    # the window forgets: three successes push the failures out
+    for _ in range(4):
+        h.record(True, rtt_s=0.01)
+    assert not h.unhealthy() and h.error_rate() == 0.0
+    assert h.mean_rtt_s() == pytest.approx(0.01)
+    h.record(False)
+    h.reset()
+    assert h.error_rate() == 0.0 and not h.stalled()
+
+
+def test_lane_health_stall_detection():
+    now = [0.0]
+    h = LaneHealth(stall_timeout_s=5.0, clock=lambda: now[0])
+    assert not h.stalled()              # nothing outstanding
+    h.note_submit()
+    now[0] = 4.0
+    assert not h.stalled()
+    now[0] = 5.5
+    assert h.stalled()                  # silence past the timeout
+    h.record(True)                      # the answer arrived after all
+    assert not h.stalled()
+
+
+def test_ladder_demotes_promotes_with_cooldown():
+    lad = LaneLadder(probation_steps=2, cooldown_steps=3)
+    assert lad.level == 0 and not lad.can_promote()
+    assert lad.demote()
+    assert (lad.level, lad.failovers) == (1, 1)
+    for _ in range(2):
+        lad.tick()
+        assert not lad.can_promote()    # cooldown still running
+    lad.tick()
+    assert lad.can_promote()
+    assert lad.promote()
+    assert (lad.level, lad.recoveries) == (0, 1)
+    assert not lad.promote()            # already at the top
+
+
+def test_ladder_probation_doubles_cooldown_no_flapping():
+    lad = LaneLadder(probation_steps=4, cooldown_steps=2)
+    lad.demote()
+    for _ in range(2):
+        lad.tick()
+    lad.promote()
+    assert lad.in_probation
+    lad.demote()                        # failed during probation
+    # hysteresis: the next cooldown is doubled (2 -> 4)
+    for _ in range(3):
+        lad.tick()
+        assert not lad.can_promote()
+    lad.tick()
+    assert lad.can_promote()
+    # surviving a full probation restores the base cooldown
+    lad.promote()
+    for _ in range(4):
+        lad.tick()
+    assert not lad.in_probation
+    lad.demote()
+    lad.tick()
+    lad.tick()
+    assert lad.can_promote()
+
+
+def test_ladder_bottoms_out_at_last_level():
+    lad = LaneLadder(n_levels=3, cooldown_steps=1)
+    assert lad.demote() and lad.demote()
+    assert lad.level == 2
+    assert not lad.demote()             # nowhere further down
+    assert lad.failovers == 2
+
+
+# ---------------------------------------------------------------------------
+# ServerWatchdog (fake scrapes; `check()` driven directly)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_dead_server_restarts_under_budget():
+    verdicts = []
+    wd = ServerWatchdog(lambda: "nowhere:1", verdicts.append,
+                        RestartBudget(2, what="server restart"),
+                        stats_fn=lambda addr: (_ for _ in ()).throw(
+                            ConnectionError("refused")))
+    assert wd.check() == "dead"
+    assert verdicts == ["dead"] and wd.restarts == 1
+
+
+def test_watchdog_tells_wedged_from_merely_busy():
+    feed = iter([
+        {"exchanges": 5, "queue_depth": 2},   # baseline
+        {"exchanges": 9, "queue_depth": 3},   # advancing: busy, healthy
+        {"exchanges": 9, "queue_depth": 3},   # frozen 1
+        {"exchanges": 9, "queue_depth": 3},   # frozen 2
+        {"exchanges": 9, "queue_depth": 3},   # frozen 3 -> wedged
+    ])
+    verdicts = []
+    wd = ServerWatchdog(lambda: "x", verdicts.append,
+                        RestartBudget(4, what="server restart"),
+                        wedge_scrapes=3, stats_fn=lambda addr: next(feed))
+    assert [wd.check() for _ in range(4)] == ["ok", "ok", "ok", "ok"]
+    assert wd.check() == "wedged"
+    assert verdicts == ["wedged"] and wd.restarts == 1
+
+
+def test_watchdog_idle_server_is_not_wedged():
+    # frozen counters with an EMPTY queue = idle, never a wedge verdict
+    wd = ServerWatchdog(lambda: "x", lambda v: None,
+                        RestartBudget(4, what="server restart"),
+                        wedge_scrapes=2,
+                        stats_fn=lambda addr: {"exchanges": 7,
+                                               "queue_depth": 0})
+    assert [wd.check() for _ in range(6)] == ["ok"] * 6
+
+
+def test_watchdog_budget_bounds_restarts():
+    restarts = []
+    wd = ServerWatchdog(lambda: "x", restarts.append,
+                        RestartBudget(1, what="server restart"),
+                        stats_fn=lambda addr: (_ for _ in ()).throw(
+                            OSError("unreachable")))
+    for _ in range(4):
+        assert wd.check() == "dead"
+    assert len(restarts) == 1           # past the budget: classified only
+
+
+def test_watchdog_live_scrape_against_real_server():
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    try:
+        wd = ServerWatchdog(lambda: server.address, lambda v: None,
+                            RestartBudget(1, what="server restart"))
+        assert wd.check() == "ok"
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# ChaosProxy mechanics
+# ---------------------------------------------------------------------------
+
+def test_proxy_passthrough_preserves_the_exchange():
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    proxy = ChaosProxy(server.address, FaultSchedule([]))
+    client = RemoteAscentClient(proxy.addr, Compressor("none"))
+    try:
+        params = jax.device_get(_params())
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        assert client.submit(0, params, batch, jax.random.PRNGKey(5), 0)
+        got = client.poll(block=True, timeout=120.0)
+        assert got is not None and got[1] is not None
+        assert proxy.connections == 1
+        # both directions were pumped frame-aware (HELLO out, GRAD back)
+        assert proxy.frames.get(("c2s", "HELLO")) == 1
+        assert proxy.frames.get(("s2c", "GRAD")) == 1
+    finally:
+        client.close()
+        proxy.close()
+        server.close()
+
+
+def test_proxy_corrupt_frame_is_lost_exchange_not_poison():
+    """A corrupted GRAD fails the client's crc check: that one exchange is
+    reported lost (grad=None sentinel), the client reconnects, and the next
+    exchange succeeds."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    sched = FaultSchedule([FaultRule("corrupt", frame="GRAD", nth=1)])
+    proxy = ChaosProxy(server.address, sched)
+    client = RemoteAscentClient(proxy.addr, Compressor("none"),
+                                reconnect_backoff_s=0.05)
+    try:
+        params = jax.device_get(_params())
+        batch = jax.device_get(_batches(1)[0]["ascent"])
+        assert client.submit(0, params, batch, jax.random.PRNGKey(5), 0)
+        got = client.poll(block=True, timeout=120.0)
+        assert got is not None and got[1] is None       # lost, not hung
+        deadline = time.monotonic() + 60.0
+        while not client.submit(0, params, batch, jax.random.PRNGKey(6), 1):
+            assert time.monotonic() < deadline
+            time.sleep(0.02)
+        got = client.poll(block=True, timeout=120.0)
+        assert got is not None and got[1] is not None   # recovered
+        assert client.drops >= 1
+        assert ("s2c", "GRAD", "corrupt") in proxy.faults
+    finally:
+        client.close()
+        proxy.close()
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# reconnect-storm bounds + fatal auth (satellite)
+# ---------------------------------------------------------------------------
+
+def test_reconnect_storm_is_bounded_by_jittered_backoff():
+    """Every connection is dropped at HELLO: the client must retry on the
+    jittered exponential backoff schedule, not busy-loop. The proxy's accept
+    counter IS the attempt rate."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    sched = FaultSchedule([FaultRule("drop", frame="HELLO")])
+    proxy = ChaosProxy(server.address, sched)
+    client = RemoteAscentClient(proxy.addr, Compressor("none"),
+                                reconnect_backoff_s=0.05,
+                                reconnect_backoff_max_s=0.2)
+    try:
+        time.sleep(1.2)
+        attempts = proxy.connections
+    finally:
+        client.close()
+        proxy.close()
+        server.close()
+    # minimum jittered delays sum to ~1.1s over ~13 attempts at (0.05, 0.2);
+    # a busy-loop would land hundreds of connections in the same window
+    assert 2 <= attempts <= 20, attempts
+    assert not client.connected.is_set()
+
+
+def _auth_rejecting_server():
+    """Minimal protocol speaker that refuses every HELLO as auth-rejected."""
+    listener, addr = protocol.bind_listener("127.0.0.1:0", backlog=4)
+    accepts = [0]
+    stop = threading.Event()
+
+    def loop():
+        listener.settimeout(0.2)
+        while not stop.is_set():
+            try:
+                sock, _ = listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            accepts[0] += 1
+            try:
+                protocol.recv_frame(sock, timeout=10.0)
+                protocol.send_frame(sock, FrameType.ERROR,
+                                    b"auth-rejected: bad token")
+            except Exception:  # noqa: BLE001 — test double
+                pass
+            finally:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+    thread = threading.Thread(target=loop, daemon=True)
+    thread.start()
+
+    def close():
+        stop.set()
+        listener.close()
+        thread.join(timeout=10.0)
+
+    return addr, accepts, close
+
+
+def test_fatal_auth_rejection_never_reenters_backoff_loop():
+    addr, accepts, close_server = _auth_rejecting_server()
+    client = RemoteAscentClient(addr, Compressor("none"),
+                                reconnect_backoff_s=0.02,
+                                reconnect_backoff_max_s=0.05,
+                                auth_token="wrong")
+    try:
+        deadline = time.monotonic() + 30.0
+        while not client.fatal_error:
+            assert time.monotonic() < deadline, "auth rejection not surfaced"
+            time.sleep(0.01)
+        # give a buggy retry loop many backoff periods to re-connect
+        time.sleep(0.5)
+        assert accepts[0] == 1, "fatal error re-entered the reconnect loop"
+        client._thread.join(timeout=10.0)
+        assert not client._thread.is_alive()
+        with pytest.raises(RuntimeError, match="rejected"):
+            client.submit(0, {}, {}, None, 0)
+        with pytest.raises(RuntimeError, match="rejected"):
+            client.poll()
+    finally:
+        client.close()
+        close_server()
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder through the executor
+# ---------------------------------------------------------------------------
+
+def test_ladder_fails_over_to_local_lane_when_remote_is_dead():
+    """A remote lane that never answers (dead address) trips the stall
+    detector; the executor fails over to the in-process thread lane and
+    perturbed steps resume — no recovery, since the remote never comes up."""
+    # a port that refuses connections: bind, then close
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    dead_addr = "127.0.0.1:%d" % probe.getsockname()[1]
+    probe.close()
+    # stall timeout must exceed the local lane's first-exchange jit compile,
+    # or the ladder (correctly) demotes straight through to the ledger
+    xcfg = ExecutorConfig(
+        ascent_addr=dead_addr, connect_timeout_s=1.0,
+        reconnect_backoff_s=0.1, max_staleness=3,
+        lane_ladder=True, health_window=4, health_min_samples=2,
+        health_stall_timeout_s=3.0, ladder_cooldown_steps=10_000)
+    hist = []
+    with RemoteExecutor(mlp_loss, _mcfg(), optim.sgd(0.1, momentum=0.9),
+                        exec_cfg=xcfg) as ex:
+        state = ex.init_state(_params(), jax.random.PRNGKey(1))
+        # run until the ladder has demoted AND the local lane delivered a
+        # perturbed step (first local exchange pays a jit compile, so a
+        # fixed step count is a flake under load) — deadline-bounded
+        deadline = time.monotonic() + 120.0
+        for b in _batches(2000):
+            state, m = ex.step(state, b)
+            hist.append(m)
+            if m["lane_state"] == 1.0 and m["perturbed"] == 1.0:
+                break
+            assert time.monotonic() < deadline, \
+                "no failover + local perturbed step within deadline"
+            time.sleep(0.02)
+    assert ex._inner._ladder.failovers >= 1
+    assert hist[0]["lane_state"] == 0.0
+    assert hist[-1]["lane_state"] == 1.0 and hist[-1]["perturbed"] == 1.0
+    assert any(m.get("lane_failovers", 0) >= 1 for m in hist)
+    assert all(np.isfinite(float(m["loss"])) for m in hist)
+
+
+def _paced(batches, pace_s):
+    for b in batches:
+        time.sleep(pace_s)
+        yield b
+
+
+def test_soak_hostile_schedule_completes_with_failover_and_recovery():
+    """Acceptance soak: a remote fit through a schedule covering every fault
+    kind completes with finite losses, >=1 ladder downgrade and >=1 recovery
+    recorded in the registry keys, and shuts down cleanly."""
+    server = AscentServer(mlp_loss)
+    server.serve_in_thread()
+    # hostile opening (first four GRADs all die), then sporadic transient
+    # faults the recovered lane rides out
+    sched = parse_faults(
+        "corrupt:GRAD:nth=1,corrupt:GRAD:nth=2,truncate:GRAD:nth=3,"
+        "blackhole:GRAD:nth=4:duration_s=0.2,duplicate:GRAD:nth=6,"
+        "delay:GRAD:nth=7:delay_s=0.03,drop:JOB_DELTA:nth=9,"
+        "stall:JOB_DELTA:nth=11:delay_s=0.03", seed=5)
+    proxy = ChaosProxy(server.address, sched)
+    xcfg = ExecutorConfig(
+        ascent_addr=proxy.addr, reconnect_backoff_s=0.05,
+        max_staleness=3, lane_ladder=True,
+        health_window=4, health_error_threshold=0.5, health_min_samples=2,
+        health_stall_timeout_s=5.0,
+        ladder_cooldown_steps=5, ladder_probation_steps=3)
+    try:
+        with RemoteExecutor(mlp_loss, _mcfg(), optim.sgd(0.1, momentum=0.9),
+                            exec_cfg=xcfg) as ex:
+            state = ex.init_state(_params(), jax.random.PRNGKey(1))
+            report = Engine(ex, _paced(_batches(90), 0.015)).fit(state, 90)
+            ladder = ex._inner._ladder
+        hist = report.metrics_history
+        assert len(hist) == 90
+        assert all(np.isfinite(m["loss"]) for m in hist)
+        # the ladder went down AND came back up, and said so in the
+        # registry keys (cumulative counters on the transition steps)
+        assert ladder.failovers >= 1 and ladder.recoveries >= 1, \
+            (ladder.failovers, ladder.recoveries, sched.fired_actions())
+        assert max(m.get("lane_failovers", 0) for m in hist) >= 1
+        assert max(m.get("lane_recoveries", 0) for m in hist) >= 1
+        assert any(m["lane_state"] > 0 for m in hist)
+        assert hist[-1]["lane_state"] == 0.0     # finished back on remote
+        # the schedule actually attacked the wire, more ways than one
+        assert proxy.fault_count() >= 4
+        assert len(set(a for _, _, a in proxy.faults)) >= 3
+    finally:
+        proxy.close()
+        server.close()
+    # clean thread shutdown: nothing left alive from the executor
+    leftovers = [t.name for t in threading.enumerate()
+                 if not t.daemon and t is not threading.main_thread()]
+    assert leftovers == [], leftovers
+
+
+def test_transient_faults_are_bitwise_invisible_under_lockstep():
+    """delay / stall / dropped-connection / corrupt faults are all transient
+    when `retry_inflight` is on (lockstep): the interrupted exchange is
+    resent as a snapshot of the encoder's shadow and recomputed on identical
+    params, so the fit matches the undisturbed run bit for bit."""
+    def run(spec):
+        server = AscentServer(mlp_loss)
+        server.serve_in_thread()
+        proxy = ChaosProxy(server.address, parse_faults(spec))
+        xcfg = ExecutorConfig(lockstep=True, ascent_addr=proxy.addr,
+                              reconnect_backoff_s=0.05)
+        losses = []
+        try:
+            with RemoteExecutor(mlp_loss, _mcfg(),
+                                optim.sgd(0.1, momentum=0.9),
+                                exec_cfg=xcfg) as ex:
+                state = ex.init_state(_params(), jax.random.PRNGKey(1))
+                for b in _batches(12):
+                    state, m = ex.step(state, b)
+                    losses.append(float(m["loss"]))
+                retried = ex.client.retried_exchanges
+            faults = proxy.fault_count()
+        finally:
+            proxy.close()
+            server.close()
+        return losses, retried, faults
+
+    base, base_retried, base_faults = run("")
+    spec = ("delay:GRAD:nth=2:delay_s=0.05,stall:GRAD:nth=4:delay_s=0.05,"
+            "drop:GRAD:nth=6,corrupt:GRAD:nth=7,"
+            "stall:JOB_DELTA:nth=3:delay_s=0.05,drop:JOB_DELTA:nth=9")
+    hit, hit_retried, hit_faults = run(spec)
+    assert base_faults == 0 and hit_faults >= 4
+    assert base_retried == 0
+    assert hit_retried >= 2        # the destructive faults went through retry
+    assert np.array_equal(np.asarray(base), np.asarray(hit)), (base, hit)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity + async-save error surfacing (satellites)
+# ---------------------------------------------------------------------------
+
+def _ck_state(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(key, (8, 4)),
+                       "b": jnp.full((4,), float(seed))},
+            "step": jnp.asarray(seed)}
+
+
+def test_corrupt_checkpoint_restore_falls_back_to_verified_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _ck_state(s))
+    # flip bytes inside the newest step's array data: same size, wrong bits
+    victim = next((tmp_path / "step_00000003" / "arrays").glob("*w.npy"))
+    raw = bytearray(victim.read_bytes())
+    raw[-4] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    assert not mgr.verify_step(3)
+    assert mgr.verify_step(2)
+    restored, _ = mgr.restore(jax.eval_shape(_ck_state))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, _ck_state(2), restored))
+
+
+def test_truncated_checkpoint_is_skipped_and_uncounted(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2):
+        mgr.save(s, _ck_state(s))
+    assert mgr.all_steps() == [1, 2]
+    # truncate a leaf file (partial write / torn disk)
+    victim = next((tmp_path / "step_00000002" / "arrays").glob("*.npy"))
+    victim.write_bytes(victim.read_bytes()[:10])
+    restored, _ = mgr.restore(jax.eval_shape(_ck_state))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, _ck_state(1), restored))
+    # a deleted leaf fails even the cheap manifest-level verification
+    victim.unlink()
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+
+
+def test_tampered_manifest_fails_verification(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _ck_state(1))
+    mgr.save(2, _ck_state(2))
+    mani = tmp_path / "step_00000002" / "manifest.json"
+    mani.write_text(mani.read_text().replace('"step": 2', '"step": 20'))
+    assert mgr.all_steps() == [1]       # checksum sibling catches the edit
+    restored, _ = mgr.restore(jax.eval_shape(_ck_state))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, _ck_state(1), restored))
+
+
+def test_all_checkpoints_corrupt_raises_integrity_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _ck_state(1))
+    for f in (tmp_path / "step_00000001" / "arrays").glob("*.npy"):
+        raw = bytearray(f.read_bytes())
+        raw[-1] ^= 0xFF
+        f.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointIntegrityError):
+        mgr.restore(jax.eval_shape(_ck_state))
+
+
+def test_legacy_checkpoint_without_checksums_still_restores(tmp_path):
+    """Pre-integrity-era checkpoints (no crc fields, no manifest sibling)
+    must keep restoring: absent checksums verify vacuously."""
+    import json
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _ck_state(1))
+    d = tmp_path / "step_00000001"
+    manifest = json.loads((d / "manifest.json").read_text())
+    for rec in manifest["leaves"]:
+        rec.pop("crc32", None)
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    (d / "manifest.crc32").unlink()
+    assert mgr.all_steps() == [1]
+    restored, _ = mgr.restore(jax.eval_shape(_ck_state))
+    assert jax.tree.all(jax.tree.map(jnp.array_equal, _ck_state(1), restored))
+
+
+def test_async_save_error_surfaces_from_wait_and_next_save(tmp_path,
+                                                           monkeypatch):
+    import repro.checkpoint.manager as manager_mod
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, _ck_state(1))
+
+    real_save = manager_mod.np.save
+    mode = ["boom"]
+
+    def maybe_boom(path, arr):
+        if mode[0] == "boom":
+            raise OSError("disk full")
+        return real_save(path, arr)
+
+    monkeypatch.setattr(manager_mod.np, "save", maybe_boom)
+    mgr.save(2, _ck_state(2), blocking=False)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    mgr.wait()                          # raised once, then cleared
+    # the re-raise also fires from the NEXT save (the loop's common path)
+    mgr.save(3, _ck_state(3), blocking=False)
+    mgr._worker.join()                  # failure captured before the heal
+    mode[0] = "ok"
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.save(4, _ck_state(4), blocking=False)
+    # the failed steps never became visible checkpoints
+    assert mgr.all_steps() == [1]
+
+
+class _ListPipeline:
+    def __init__(self, batches):
+        self._batches = batches
+
+    def __iter__(self):
+        return iter(self._batches)
+
+    def state(self):
+        return {"cursor": 0}
+
+    def restore(self, cursor):
+        pass
+
+
+def test_run_resilient_spends_a_restart_on_async_save_error(tmp_path,
+                                                            monkeypatch):
+    """An async checkpoint-save failure is a real failure: one spent restart
+    and a rollback, never a silent gap in the checkpoint history."""
+    from repro.core import TrainState
+    import repro.checkpoint.manager as manager_mod
+    real_save = manager_mod.np.save
+    fails = [0]
+    armed = [True]
+
+    def flaky_save(path, arr):
+        if fails[0]:
+            fails[0] -= 1
+            raise OSError("disk full")
+        return real_save(path, arr)
+
+    monkeypatch.setattr(manager_mod.np, "save", flaky_save)
+
+    def step_fn(state, batch):
+        if int(state.step) == 4 and armed[0]:
+            armed[0] = False
+            fails[0] = 1        # poison the NEXT async save (at step 5)
+        state = state._replace(step=state.step + 1)
+        return state, {"loss": jnp.asarray(0.5)}
+
+    state = TrainState(step=jnp.asarray(0, jnp.int32),
+                       rng=jax.random.PRNGKey(0),
+                       params={"w": jnp.zeros(3)},
+                       opt_state={"m": jnp.zeros(3)},
+                       method_state={"a": jnp.zeros(3)})
+    report = run_resilient(
+        step_fn, state, _ListPipeline([{}] * 40),
+        CheckpointManager(tmp_path, keep=5), n_steps=12,
+        rcfg=ResilienceConfig(save_every=5, max_restarts=3, async_save=True))
+    assert report.steps_done == 12
+    assert report.restarts == 1, report.restarts
