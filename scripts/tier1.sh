@@ -48,6 +48,17 @@
 #                                            # checkpoint-integrity tests —
 #                                            # same hard timeout + interpret
 #                                            # kernels as --service
+#   ./scripts/tier1.sh --guard               # numerics-guard lane: in-step
+#                                            # non-finite skip, spike/stale
+#                                            # detection, the rho
+#                                            # de-escalation ladder,
+#                                            # NumericChaos soak + poison-
+#                                            # rollback livelock pins, and the
+#                                            # guard x lane-ladder interplay
+#                                            # test (spawns an ascent server +
+#                                            # chaos proxy) — same hard
+#                                            # timeout + interpret kernels as
+#                                            # --service
 #   ./scripts/tier1.sh --all                 # every lane above plus the base
 #                                            # suite, sequentially; exits
 #                                            # non-zero on the first failing
@@ -91,12 +102,17 @@ if [[ "${1:-}" == "--netchaos" ]]; then
   exec timeout --signal=TERM --kill-after=30 900 \
     env REPRO_KERNELS=interpret python -m pytest -q tests/test_netchaos.py "$@"
 fi
+if [[ "${1:-}" == "--guard" ]]; then
+  shift
+  exec timeout --signal=TERM --kill-after=30 900 \
+    env REPRO_KERNELS=interpret python -m pytest -q tests/test_guard.py "$@"
+fi
 if [[ "${1:-}" == "--all" ]]; then
   shift
   # each lane re-enters this script so it keeps its own hard timeout; no
   # exec — the loop must survive to run the next lane
   for lane in "" --kernels-interpret --resident --service --pool \
-              --elastic --obs --netchaos; do
+              --elastic --obs --netchaos --guard; do
     echo "== tier1 lane: ${lane:-base} =="
     if [[ -z "$lane" ]]; then
       "$0" "$@"

@@ -60,6 +60,16 @@ def _leaf_crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
+def _tree_finite(state: Pytree) -> bool:
+    """True iff every float leaf is fully finite (host-side; restore-path
+    only, so the device round-trip cost is paid once per rollback)."""
+    for leaf in jax.tree.leaves(state):
+        arr = np.asarray(jax.device_get(leaf))
+        if np.issubdtype(arr.dtype, np.floating) and not np.isfinite(arr).all():
+            return False
+    return True
+
+
 class CheckpointManager:
     def __init__(self, root: str | pathlib.Path, keep: int = 3):
         self.root = pathlib.Path(root)
@@ -225,13 +235,18 @@ class CheckpointManager:
         return jax.tree.unflatten(treedef, out), manifest["extras"]
 
     def restore(self, like: Pytree, step: Optional[int] = None,
-                shardings: Optional[Pytree] = None) -> tuple[Pytree, dict]:
+                shardings: Optional[Pytree] = None, *,
+                require_finite: bool = False) -> tuple[Pytree, dict]:
         """Restore into the structure of `like`; device_put against
         `shardings` (elastic re-shard) when given. Returns (state, extras).
 
         A corrupted/truncated checkpoint falls back to the newest verified
         older step (a stale-but-true rollback target beats a fresh lie);
-        only when every candidate fails does this raise.
+        only when every candidate fails does this raise. `require_finite`
+        extends the same fallback to NUMERIC corruption: a checkpoint whose
+        float leaves contain NaN/Inf (saved by an unguarded run after the
+        dynamics already diverged) is skipped for the newest finite older
+        step — the diverge-proof half of the numerics-guard rollback.
         """
         steps = self.all_steps()
         assert steps, f"no checkpoints under {self.root}"
@@ -243,10 +258,18 @@ class CheckpointManager:
         last_err: Optional[Exception] = None
         for s in reversed(candidates):
             try:
-                return self._load_step(s, like, shardings)
+                state, extras = self._load_step(s, like, shardings)
             except CheckpointIntegrityError as e:
                 log.warning("checkpoint step %d failed verification (%s); "
                             "falling back to an older step", s, e)
                 last_err = e
+                continue
+            if require_finite and not _tree_finite(state):
+                log.warning("checkpoint step %d holds non-finite values; "
+                            "falling back to an older step", s)
+                last_err = CheckpointIntegrityError(
+                    f"step {s}: non-finite leaf values")
+                continue
+            return state, extras
         raise CheckpointIntegrityError(
             f"no verifiable checkpoint under {self.root}") from last_err

@@ -76,6 +76,13 @@ class MethodConfig:
     topk_fraction: float = 0.01
     n_microbatches: int = 1   # gradient accumulation (activation-memory lever)
     ascent_interval: int = 1  # refresh a_t every k steps (beyond-paper; tau<=k)
+    # In-step numerics guard (runtime.guard): a non-finite loss or gradient
+    # discards the whole update by tree-select inside the jitted step
+    # (params/opt_state/method_state carried unchanged, step/rng advance so
+    # the batch is consumed), and the step emits update_skipped /
+    # nonfinite_count. Honored by sgd, sam, gsam and async_sam — the methods
+    # the guard ladder drives; the long-tail variants ignore it.
+    guard_update: bool = False
     # Flat-buffer fused weight-space path (perturb axpy, ascent-refresh
     # dot/norms). None defers to the platform default: on for TPU, off
     # elsewhere (utils.buckets.fused_path_enabled). Executors resolve and pin
@@ -110,12 +117,22 @@ def init_train_state(params: Pytree, optimizer: GradientTransform,
 
 
 def _finish(state: TrainState, optimizer: GradientTransform, grads: Pytree,
-            method_state: Pytree, metrics: dict) -> tuple[TrainState, dict]:
+            method_state: Pytree, metrics: dict, *,
+            guard: bool = False) -> tuple[TrainState, dict]:
     """Shared tail: inner-optimizer update + state threading.
 
     Canonical sgd/adamw chains take the fused flat-buffer path when enabled
     (optim.fused): one single-pass kernel per dtype bucket instead of the
     per-leaf update + apply_updates passes, with identical opt_state layout.
+
+    guard=True (MethodConfig.guard_update) adds the in-step numerics check:
+    a non-finite loss or global gradient norm discards the update — params /
+    opt_state / method_state are tree-selected back to their previous values
+    INSIDE the jit (a post-hoc host-side skip is impossible: executors donate
+    the input state buffers), while step and rng still advance so the
+    anomalous batch is consumed, not replayed. The step then carries
+    `update_skipped` (1.0 on a skip) and `nonfinite_count` (non-finite
+    gradient elements) for the host-side guard ladder (runtime.guard).
     """
     metrics = dict(metrics)
     fused = fused_apply(optimizer, grads, state.opt_state, state.params)
@@ -127,6 +144,20 @@ def _finish(state: TrainState, optimizer: GradientTransform, grads: Pytree,
                                               state.params)
         params = apply_updates(state.params, updates)
         metrics.setdefault("grad_norm", trees.global_norm(grads))
+    if guard:
+        # a single non-finite element makes the global norm non-finite, so
+        # the ok verdict needs no extra pass; the element count is one more
+        # reduction over grads, paid only when the guard is on
+        ok = (jnp.isfinite(metrics["grad_norm"])
+              & jnp.isfinite(metrics.get("loss", jnp.float32(0.0))))
+        keep = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+        params = jax.tree.map(keep, params, state.params)
+        opt_state = jax.tree.map(keep, opt_state, state.opt_state)
+        method_state = jax.tree.map(keep, method_state, state.method_state)
+        nonfinite = sum(jnp.sum(~jnp.isfinite(g)).astype(jnp.int32)
+                        for g in jax.tree.leaves(grads))
+        metrics["update_skipped"] = (~ok).astype(jnp.float32)
+        metrics["nonfinite_count"] = jnp.asarray(nonfinite, jnp.float32)
     rng, _ = jax.random.split(state.rng)
     new_state = TrainState(step=state.step + 1, rng=rng, params=params,
                            opt_state=opt_state, method_state=method_state)

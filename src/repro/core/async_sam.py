@@ -92,18 +92,23 @@ def make_async_sam(cfg: MethodConfig) -> Method:
             if cfg.ascent_interval <= 1:
                 (loss_asc, _), a_new = vg(state.params, ascent_batch, rng_a)
                 staleness = jnp.ones((), jnp.int32)
+                reused = jnp.zeros((), jnp.float32)
             else:
                 def fresh(_):
                     (la, _), a = vg(state.params, ascent_batch, rng_a)
                     return trees.tree_cast(a, jnp.float32), la, jnp.int32(1)
 
                 def reuse(_):
+                    # ascent_loss is a NaN SENTINEL here (no ascent pass ran,
+                    # there is no loss to report); the explicit ascent_reused
+                    # flag below is what disambiguates it from a genuine NaN
                     return (ms.ascent_grad, jnp.float32(jnp.nan),
                             ms.staleness + 1)
 
                 refresh = (state.step % cfg.ascent_interval) == 0
                 a_new, loss_asc, staleness = jax.lax.cond(refresh, fresh,
                                                           reuse, None)
+                reused = (~refresh).astype(jnp.float32)
 
             # --- ascent-state refresh. On the fused path the cosine metric
             # and the carried norm come from ONE pass over (a_t, a_{t-1})
@@ -139,12 +144,22 @@ def make_async_sam(cfg: MethodConfig) -> Method:
                     staleness=staleness,
                     compression=comp_state,
                 )
+            if cfg.guard_update:
+                # keep a non-finite ascent refresh out of the CARRIED state:
+                # a NaN a_t held across steps poisons every later perturbation
+                # (0 * NaN is still NaN), so the refresh is guarded by its own
+                # finiteness, independent of the descent verdict in _finish
+                ok_a = jnp.isfinite(new_ms.ascent_norm)
+                new_ms = jax.tree.map(lambda n, o: jnp.where(ok_a, n, o),
+                                      new_ms, ms)
             metrics = {"loss": loss, "ascent_loss": loss_asc,
                        "ascent_norm": new_ms.ascent_norm,
                        "ascent_cosine": cos,
+                       "ascent_reused": reused,
                        "perturbed": ms.have_ascent.astype(jnp.float32),
                        **_m(aux)}
-            return _finish(state, optimizer, grads, new_ms, metrics)
+            return _finish(state, optimizer, grads, new_ms, metrics,
+                           guard=cfg.guard_update)
 
         return step
 
@@ -190,6 +205,6 @@ def make_descent_fn(cfg: MethodConfig, loss_fn: LossFn,
                          fused=cfg.fused_update)
         (loss, aux), grads = vg(w_hat, batch, step_rng(state))
         return _finish(state, optimizer, grads, state.method_state,
-                       {"loss": loss, **_m(aux)})
+                       {"loss": loss, **_m(aux)}, guard=cfg.guard_update)
 
     return descent

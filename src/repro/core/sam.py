@@ -29,7 +29,8 @@ def make_sgd(cfg: MethodConfig) -> Method:
             batch, _ = split_batch(batch)
             rng = step_rng(state)
             (loss, aux), grads = vg(state.params, batch, rng)
-            return _finish(state, optimizer, grads, (), {"loss": loss, **_m(aux)})
+            return _finish(state, optimizer, grads, (), {"loss": loss, **_m(aux)},
+                           guard=cfg.guard_update)
 
         return step
 
@@ -58,7 +59,8 @@ def make_sam(cfg: MethodConfig) -> Method:
             (loss, aux), grads = vg(w_hat, batch, rng)
             metrics = {"loss": loss, "loss_at_w": loss_w,
                        "ascent_norm": trees.global_norm(g_ascent), **_m(aux)}
-            return _finish(state, optimizer, grads, (), metrics)
+            return _finish(state, optimizer, grads, (), metrics,
+                           guard=cfg.guard_update)
 
         return step
 
@@ -84,7 +86,8 @@ def make_gsam(cfg: MethodConfig) -> Method:
             (loss, aux), g_hat = vg(w_hat, batch, rng)
             grads = gradient_norm_penalty_direction(g_w, g_hat, cfg.alpha)
             metrics = {"loss": loss, "loss_at_w": loss_w, **_m(aux)}
-            return _finish(state, optimizer, grads, (), metrics)
+            return _finish(state, optimizer, grads, (), metrics,
+                           guard=cfg.guard_update)
 
         return step
 

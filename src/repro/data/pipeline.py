@@ -58,10 +58,20 @@ class TokenPipeline:
 
     # --- checkpointable cursor ------------------------------------------------
     def state(self) -> dict:
-        return {"step": self._step, "seed": self.pcfg.seed}
+        # rank/world are identity, not cursor: restoring rank 0's checkpoint
+        # into rank 1's pipeline would silently resume on the WRONG disjoint
+        # stream shard — restore() refuses instead
+        return {"step": self._step, "seed": self.pcfg.seed,
+                "rank": self.pcfg.rank, "world": self.pcfg.world}
 
     def restore(self, state: dict) -> None:
         assert state["seed"] == self.pcfg.seed, "pipeline seed changed across restart"
+        if "rank" in state:   # pre-identity-era states restore unchanged
+            assert (state["rank"], state["world"]) == \
+                (self.pcfg.rank, self.pcfg.world), \
+                (f"pipeline identity changed across restart: checkpoint is "
+                 f"rank {state['rank']}/{state['world']}, this pipeline is "
+                 f"rank {self.pcfg.rank}/{self.pcfg.world}")
         self._step = int(state["step"])
 
     def peek(self) -> dict:

@@ -11,6 +11,9 @@ Executor matrix:
     ElasticExecutor wrapper preemption-surviving mesh resizes around any of
                             the above (shrink onto survivors / grow with
                             capacity, driven by runtime.chaos MeshEvents)
+    GuardedExecutor wrapper numerics guard around any of the above (outermost):
+                            in-step skip, rho de-escalation ladder, PoisonBatch
+                            rollback (runtime.guard; --guard in the launcher)
 
 All satisfy the `StepExecutor` protocol and the `ENGINE_METRIC_KEYS`
 contract; `Engine.fit` drives any of them with the same callbacks.
@@ -37,3 +40,4 @@ from repro.engine.engine import Engine  # noqa: F401
 from repro.engine.fused import FusedExecutor  # noqa: F401
 from repro.engine.hetero import HeteroExecutor  # noqa: F401
 from repro.engine.remote import RemoteExecutor  # noqa: F401
+from repro.runtime.guard import GuardConfig, GuardedExecutor  # noqa: F401

@@ -65,6 +65,7 @@ class FitReport:
     metrics_history: list
     wall_time_s: float
     pre_fit: Optional[dict] = None   # executor pre-fit telemetry (calibration)
+    poison_rollbacks: int = 0        # PoisonBatch restarts (numerics guard)
 
 
 def ensure_metric_contract(metrics: dict, *, tau, perturbed) -> dict:

@@ -156,7 +156,8 @@ class Engine:
                                restarts=rep.restarts,
                                metrics_history=rep.metrics_history,
                                wall_time_s=rep.wall_time_s,
-                               pre_fit=self.pre_fit_report)
+                               pre_fit=self.pre_fit_report,
+                               poison_rollbacks=rep.poison_rollbacks)
         else:
             t0 = time.time()
             history: list = []

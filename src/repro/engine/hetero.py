@@ -116,6 +116,14 @@ class HeteroExecutor:
         were computed against params from the discarded timeline."""
         self._inner.reset()
 
+    # numerics-guard lane hooks: the guard ladder (runtime.guard) drives the
+    # inner executor's rho scaling / stale-ascent drop through the wrapper
+    def set_rho_scale(self, scale: float) -> None:
+        self._inner.set_rho_scale(scale)
+
+    def drop_ascent(self) -> None:
+        self._inner.drop_ascent()
+
     def resize(self, state: TrainState, new_mesh) -> TrainState:
         """Descent-mesh resize: the descent lane is meshless (per-host), so
         the state stays put — but the ascent lane must not keep serving

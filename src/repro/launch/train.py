@@ -132,6 +132,24 @@ def main() -> None:
                          "and recovers back up after a probationary cooldown; "
                          "transitions land in lane_state/lane_failovers/"
                          "lane_recoveries telemetry")
+    ap.add_argument("--guard", action="store_true",
+                    help="numerics guard (runtime.guard): in-step skip of "
+                         "non-finite updates, loss-spike + stale-ascent "
+                         "detection, a rho de-escalation ladder (halve rho "
+                         "rung by rung down to plain descent, recover after "
+                         "a probationary cooldown), and — with --ckpt-dir — "
+                         "diverge-proof PoisonBatch rollback that restores "
+                         "the model but advances the data cursor past the "
+                         "poison window; telemetry lands in guard_state/"
+                         "rho_scale/steps_skipped/poison_rollbacks")
+    ap.add_argument("--numchaos", default="",
+                    help="deterministic numerics-chaos injector over the "
+                         "data stream: comma-separated 'kind[:key=val...]' "
+                         "rules keyed on the batch cursor, e.g. "
+                         "'nan_grad:nth=40:span=8,spike:prob=0.01:scale=1e4' "
+                         "(kinds: nan_grad, inf_grad, spike). Poisons FLOAT "
+                         "batch leaves only — token-only batches pass "
+                         "through untouched. Soak harness for --guard")
     ap.add_argument("--watchdog", action="store_true",
                     help="remote + --serve-ascent only: STATS-scraping "
                          "server watchdog — restarts the loopback server "
@@ -254,7 +272,8 @@ def main() -> None:
     bundle = build_model(cfg)
     mcfg = MethodConfig(name=args.method, rho=args.rho,
                         ascent_fraction=args.ascent_fraction,
-                        n_microbatches=args.n_micro)
+                        n_microbatches=args.n_micro,
+                        guard_update=args.guard)
     optimizer = make_optimizer(args.optimizer,
                                cosine_schedule(args.lr, args.steps,
                                                warmup_steps=args.steps // 20))
@@ -263,6 +282,12 @@ def main() -> None:
         global_batch=args.batch, seq_len=args.seq, seed=args.seed,
         ascent_fraction=(args.ascent_fraction
                          if args.method in ("async_sam",) else 0.0)))
+    numchaos = None
+    if args.numchaos:
+        from repro.runtime import NumericChaosPipeline, parse_numchaos
+        numchaos = parse_numchaos(args.numchaos, seed=args.seed)
+        pipe = NumericChaosPipeline(pipe, numchaos)
+        print(f"numchaos: {len(numchaos.rules)} rules over the batch stream")
 
     fused_update = {"auto": None, "on": True, "off": False}[args.fused_update]
     resident = {"auto": None, "on": True, "off": False}[args.resident]
@@ -336,6 +361,16 @@ def main() -> None:
         if args.chaos:
             events = parse_schedule(args.chaos)
 
+    guard = None
+    if args.guard:
+        # outermost wrapper: the guard's verdict must cover everything below
+        # (elastic resizes included); PoisonBatch rollback needs the
+        # checkpoint-restart loop, so it arms only with --ckpt-dir
+        from repro.engine import GuardConfig, GuardedExecutor
+        guard = GuardedExecutor(executor,
+                                GuardConfig(rollback=bool(args.ckpt_dir)))
+        executor = guard
+
     # init_state shards/jits inside the executor's mesh scope (fused) so the
     # launcher never touches jit/sharding plumbing itself
     params = bundle.init(jax.random.PRNGKey(args.seed))
@@ -352,7 +387,8 @@ def main() -> None:
             CheckpointManager(args.ckpt_dir, keep=3),
             ResilienceConfig(save_every=args.save_every,
                              max_restarts=args.max_restarts,
-                             restart_window_s=args.restart_window_s or None)))
+                             restart_window_s=args.restart_window_s or None,
+                             require_finite_restore=args.guard)))
 
     tracker = None
     if args.trace:
@@ -385,6 +421,15 @@ def main() -> None:
     if args.ckpt_dir:
         print(f"done: {report.steps_done} steps, {report.restarts} restarts, "
               f"{report.wall_time_s:.1f}s")
+    if numchaos is not None:
+        print(f"numchaos: fired {dict(numchaos.fired)}"
+              + (f", {numchaos.skipped_no_float} no-float-leaf skips"
+                 if numchaos.skipped_no_float else ""))
+    if guard is not None:
+        print(f"guard: rung {guard.ladder.level} "
+              f"(rho_scale {guard.cfg.rho_scales[guard.ladder.level]}), "
+              f"{guard.steps_skipped} updates skipped, "
+              f"{guard.poison_rollbacks} poison rollbacks")
     summary = meter.summary()
     if summary:
         print(json.dumps({"arch": cfg.name, "method": args.method,

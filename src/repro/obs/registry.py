@@ -18,6 +18,7 @@ Key groups (the `source` field):
     remote   the remote ascent lane's wire accounting, per harvested exchange
     pool     multi-client ascent-pool scheduler pressure
     elastic  mesh capacity + resize costs
+    guard    the numerics guard's ladder/rollback telemetry (runtime.guard)
 
 Ordering is load-bearing: the `required` keys render in the historical
 `ENGINE_METRIC_KEYS` order and the `optional` keys in the historical
@@ -93,13 +94,35 @@ METRIC_KEYS: tuple = (
     MetricKey("lane_recoveries", "cumulative ladder promotions, emitted on "
               "the step right after a recovery", unit="count", optional=True,
               source="lane"),
+    MetricKey("guard_state", "numerics-guard de-escalation rung (0 = full "
+              "rho ... last = plain descent); present when --guard is on",
+              optional=True, source="guard", trace_counter=True),
+    MetricKey("rho_scale", "effective-rho multiplier the guard rung applies "
+              "(1.0 = undegraded, 0.0 = plain descent)", optional=True,
+              source="guard"),
+    MetricKey("steps_skipped", "cumulative updates the in-step guard "
+              "discarded (non-finite loss/grad), emitted on skip steps",
+              unit="count", optional=True, source="guard"),
+    MetricKey("nonfinite_count", "non-finite elements in this step's "
+              "gradient (0 on clean steps); emitted when guard_update is on",
+              unit="count", optional=True, source="core"),
+    MetricKey("poison_rollbacks", "cumulative PoisonBatch rollbacks (model "
+              "restored, data cursor advanced), emitted on the step right "
+              "after one", unit="count", optional=True, source="guard"),
     # --- method-level scalars (inside the jitted step) ----------------------
     MetricKey("loss_at_w", "loss at the unperturbed point w (SAM two-point "
               "methods)", source="core"),
-    MetricKey("ascent_loss", "loss the ascent pass observed (NaN on reuse "
-              "steps of the fused async form)", source="core"),
+    MetricKey("ascent_loss", "loss the ascent pass observed; a NaN SENTINEL "
+              "on fused-form reuse steps — real iff ascent_reused is 0",
+              source="core"),
+    MetricKey("ascent_reused", "1.0 when the fused async form reused the "
+              "held ascent gradient instead of refreshing (AsyncSAM-k) — "
+              "the flag that disambiguates the ascent_loss NaN sentinel",
+              source="core"),
     MetricKey("ascent_norm", "global norm of the held ascent gradient",
               source="core"),
+    MetricKey("update_skipped", "1.0 when the in-step numerics guard "
+              "discarded this update (params/opt state kept)", source="core"),
     MetricKey("ascent_cosine", "cosine(a_t, a_{t-1}) of consecutive ascent "
               "gradients — the paper's Fig-2 staleness argument",
               source="core"),

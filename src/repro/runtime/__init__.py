@@ -12,10 +12,20 @@ from repro.runtime.elastic import (  # noqa: F401
 )
 from repro.runtime.fault_tolerance import (  # noqa: F401
     InjectedFailure,
+    PoisonBatch,
     ResilienceConfig,
     RestartBudget,
     RunReport,
     run_resilient,
+)
+from repro.runtime.guard import (  # noqa: F401
+    GuardConfig,
+    GuardedExecutor,
+    NumericChaos,
+    NumericChaosPipeline,
+    NumericRule,
+    SpikeDetector,
+    parse_numchaos,
 )
 from repro.runtime.health import (  # noqa: F401
     LADDER_LEVELS,

@@ -70,6 +70,10 @@ class ExecutorConfig:
     # unperturbed, tau=1 thereafter) — the hook parity tests use to compare
     # the in-process and remote lanes step for step
     lockstep: bool = False
+    # numerics guard (runtime.guard): None follows MethodConfig.guard_update;
+    # True/False overrides it for this executor (the launcher sets True under
+    # --guard so the in-step skip protects every lane)
+    guard_update: Optional[bool] = None
     # --- remote lane (engine.RemoteExecutor / repro.service) ----------------
     ascent_addr: str = ""          # "host:port" or "unix:/path" of the server
     serve_ascent: bool = False     # loopback: spawn the server as a subprocess
@@ -327,6 +331,9 @@ class AsyncSamExecutor:
         from repro.optim import configure_fused
         optimizer = configure_fused(optimizer, fused_update)
         method_cfg = dataclasses.replace(method_cfg, fused_update=fused_update)
+        if self.xcfg.guard_update is not None:
+            method_cfg = dataclasses.replace(
+                method_cfg, guard_update=self.xcfg.guard_update)
         resident = self.xcfg.resident
         if resident is None:
             resident = (bool(fused_update)
@@ -374,6 +381,11 @@ class AsyncSamExecutor:
         self._closed = False
         # held perturbation direction (host-side fp32 pytree)
         self._held: Optional[tuple[Pytree, float]] = None
+        # numerics-guard lane hooks (runtime.guard drives both); the
+        # non-finite-harvest drop below is always on — a NaN norm means the
+        # whole gradient is unusable as a perturbation direction (0*NaN=NaN)
+        self._rho_scale = 1.0
+        self.nonfinite_drops = 0
         # cached pytree-shaped zeros for steps with no held gradient
         self._zeros: Optional[Pytree] = None
         self._exchange_meta: dict = {}
@@ -410,6 +422,14 @@ class AsyncSamExecutor:
                 # rolling health window (g=None is the lost-exchange
                 # sentinel; pre-swap generations don't count against it)
                 self._health.record(g is not None, meta.get("rtt_s"))
+            if g is not None and gen == self._gen and not np.isfinite(norm):
+                # non-finite harvest: treat exactly like a lost exchange —
+                # holding it would poison every later perturbation (the
+                # carried direction multiplies into w_hat even at rho_eff=0)
+                self.nonfinite_drops += 1
+                trk.event("ascent_nonfinite_drop", lane="guard",
+                          drops=self.nonfinite_drops, step=int(state.step))
+                g = None
             if g is not None and gen == self._gen:
                 self._held = (g, norm)
                 self._exchange_meta = dict(meta)
@@ -478,15 +498,25 @@ class AsyncSamExecutor:
                 self._zeros = jax.tree.map(
                     lambda s: jnp.zeros(s.shape, s.dtype), sds)
             g, norm = self._zeros, 0.0
+        # numerics-guard de-escalation: perturb computes rho/||a||, so feeding
+        # norm/scale scales the effective rho by `scale` without touching the
+        # jitted program; scale 0 is the bottom rung — plain descent
+        scale = self._rho_scale
+        if scale <= 0.0:
+            have = False
+        eff_norm = norm / scale if 0.0 < scale != 1.0 else norm
         with trk.span("descent_compute", lane="descent",
                       step=int(state.step), perturbed=bool(have)):
             new_state, metrics = self._descent(
-                state, descent_batch, g, np.float32(norm), np.bool_(have))
+                state, descent_batch, g, np.float32(eff_norm), np.bool_(have))
             jax.block_until_ready(new_state.params)
         self.timings["descent"].append(time.perf_counter() - t0)
         metrics = dict(metrics)
         metrics["tau"] = self.ledger.tau
         metrics["perturbed"] = float(have)
+        # the UNscaled held norm, every step — the guard's stale-ascent bound
+        # calibrates on this rolling history (0.0 = nothing held, ignored)
+        metrics["ascent_norm"] = float(norm)
         # remote-lane telemetry, present only on the step that actually
         # harvested an exchange (summing a jsonl's wire_bytes column then
         # gives true total traffic) and only when the lane reports it, so
@@ -587,6 +617,20 @@ class AsyncSamExecutor:
         self.ledger.tau = 0
         if self._health is not None:
             self._health.reset()   # fenced-off exchanges are not evidence
+
+    # --- numerics-guard lane hooks (runtime.guard.GuardedExecutor) --------------
+    def set_rho_scale(self, scale: float) -> None:
+        """De-escalation rung: scale the effective rho of every later step
+        (1.0 = undegraded, 0.0 = plain descent). Applied at perturbation
+        time, so it never touches the held gradient or the jitted program."""
+        self._rho_scale = float(scale)
+
+    def drop_ascent(self) -> None:
+        """Discard the held ascent gradient (stale-ascent verdict) without
+        fencing the lane: an in-flight exchange may still deliver a fresh,
+        sane replacement next step."""
+        self._held = None
+        self.ledger.tau = 0
 
     # --- system-aware b' (paper §3.3) -------------------------------------------
     def calibrate(self, state: TrainState, batch: dict, probes: int = 3) -> float:

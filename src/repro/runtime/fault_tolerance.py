@@ -33,6 +33,19 @@ class InjectedFailure(RuntimeError):
     """Raised by failure injectors (stands in for a lost node / preemption)."""
 
 
+class PoisonBatch(RuntimeError):
+    """A NaN-class training-dynamics failure pinned to the DATA, not a node.
+
+    Raised by the numerics guard (runtime.guard) when its de-escalation
+    ladder bottoms out and the anomalies persist: the step stream itself is
+    poisoned. `run_resilient` treats it differently from a node loss — the
+    model state rolls back to the last checkpoint, but the pipeline cursor
+    is NOT rolled back, so the restarted run trains on fresh data instead of
+    bitwise-replaying the poison window into the same NaN (the livelock that
+    would otherwise eat the whole restart budget).
+    """
+
+
 @dataclasses.dataclass
 class ResilienceConfig:
     save_every: int = 50
@@ -43,6 +56,11 @@ class ResilienceConfig:
     max_restarts: int = 5
     async_save: bool = True
     restart_window_s: Optional[float] = None
+    #: refuse rollback targets whose params contain non-finite values —
+    #: a checkpoint saved by an unguarded run after the numerics already
+    #: went bad is a diverged target, not a recovery point (restore falls
+    #: back to the newest finite older step). On for --guard runs.
+    require_finite_restore: bool = False
 
 
 class RestartBudget:
@@ -91,6 +109,8 @@ class RunReport:
     restarts: int
     metrics_history: list
     wall_time_s: float
+    #: restarts classified as PoisonBatch (data advanced past the window)
+    poison_rollbacks: int = 0
 
 
 def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]],
@@ -129,6 +149,7 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
     t_start = time.time()
     budget = RestartBudget(rcfg.max_restarts, rcfg.restart_window_s)
     history: list = []
+    poison_rollbacks = 0
     resident = buckets.is_resident(state)
 
     def snapshot_extras() -> dict:
@@ -163,8 +184,10 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
             manager.wait()
             return RunReport(final_state=state, steps_done=step,
                              restarts=budget.total, metrics_history=history,
-                             wall_time_s=time.time() - t_start)
+                             wall_time_s=time.time() - t_start,
+                             poison_rollbacks=poison_rollbacks)
         except Exception as e:  # noqa: BLE001 — the loop IS the failure domain
+            poison = isinstance(e, PoisonBatch)
             used = budget.spend(cause=e)   # raises past the (windowed) budget
             log.warning("step failed (%s: %s); restart %d/%d in window "
                         "(%d total)", type(e).__name__, e, used,
@@ -172,10 +195,22 @@ def run_resilient(step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]]
             manager.wait()
             restored, extras = manager.restore(
                 jax.eval_shape(lambda: buckets.to_portable(state)),
-                shardings=shardings)
+                shardings=shardings,
+                require_finite=rcfg.require_finite_restore)
             state = (buckets.residentize(restored, like=state)
                      if resident else restored)
-            pipeline.restore(extras["pipeline"])
+            if poison:
+                # NaN-class failure: the model rolls back, the DATA does not.
+                # The live cursor already sits past the poison window, so
+                # skipping the cursor restore is exactly "advance past it" —
+                # a node-loss rollback keeps replaying the identical stream
+                # (bitwise restart determinism), a poison rollback must not.
+                poison_rollbacks += 1
+                log.warning("poison-batch rollback: model restored, pipeline "
+                            "cursor kept at %s (past the poison window)",
+                            pipeline.state())
+            else:
+                pipeline.restore(extras["pipeline"])
             if on_restore is not None:
                 adopted = on_restore(state)
                 if adopted is not None:

@@ -1,0 +1,674 @@
+"""Numerics guard: in-step skip, spike/stale detection, the rho de-escalation
+ladder, NumericChaos injection, and diverge-proof PoisonBatch rollback.
+
+The acceptance soak at the bottom pins ISSUE-10's contract: a NumericChaos
+run (NaN-gradient window + loss-spike events) completes within its restart
+budget with >=1 skip, >=1 de-escalation, >=1 recovery and >=1 poison
+rollback visible in the registry keys, final loss finite and close to an
+uninjected run — while the SAME injection without the guard diverges.
+"""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import MethodConfig, TrainState, init_train_state, make_method
+from repro.data import PipelineConfig, TokenPipeline
+from repro.runtime import (GuardConfig, GuardedExecutor, InjectedFailure,
+                           NumericChaos, NumericChaosPipeline, NumericRule,
+                           PoisonBatch, ResilienceConfig, SpikeDetector,
+                           parse_numchaos, run_resilient)
+from repro.runtime.guard import _poison_batch
+
+
+def _lin_loss(params, batch, rng):
+    # linear classifier (no squashing): a spike-scaled batch produces a
+    # genuinely spiked loss, which tanh MLPs would saturate away
+    logits = batch["x"] @ params["w"]
+    onehot = jax.nn.one_hot(batch["y"], logits.shape[-1])
+    loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+    return loss, {}
+
+
+def _lin_params(seed=0):
+    return {"w": jax.random.normal(jax.random.PRNGKey(seed), (8, 4)) * 0.3}
+
+
+def _float_batch(i, n=32, nan=False, scale=1.0):
+    k = jax.random.PRNGKey(1000 + i)
+    x = np.asarray(jax.random.normal(k, (n, 8)), np.float32) * scale
+    if nan:
+        x = np.full_like(x, np.nan)
+    y = np.asarray(jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, 4))
+    return {"x": x, "y": y}
+
+
+class _CursorPipeline:
+    """Stateful float-batch stream; batch content is a function of the
+    cursor, so replaying the stream replays the poison (the livelock)."""
+
+    def __init__(self, n, chaos: NumericChaos = None):
+        self.n = n
+        self.chaos = chaos
+        self._cursor = 0
+
+    def state(self):
+        return {"cursor": self._cursor}
+
+    def restore(self, st):
+        self._cursor = int(st["cursor"])
+
+    def __iter__(self):
+        while self._cursor < self.n:
+            i = self._cursor
+            self._cursor += 1
+            b = _float_batch(i)
+            yield self.chaos.inject(i, b) if self.chaos is not None else b
+
+
+# ---------------------------------------------------------------------------
+# in-step guard (core/api._finish under guard_update)
+# ---------------------------------------------------------------------------
+
+def test_in_step_guard_skips_nonfinite_update_keeps_params():
+    opt = optim.sgd(0.1, momentum=0.9)
+    mcfg = MethodConfig(name="sgd", guard_update=True)
+    method = make_method(mcfg)
+    state = init_train_state(_lin_params(), opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(_lin_loss, opt))
+
+    state, m = step(state, _float_batch(0))
+    assert float(m["update_skipped"]) == 0.0
+    assert float(m["nonfinite_count"]) == 0.0
+    before = jax.device_get(state.params)
+
+    state, m = step(state, _float_batch(1, nan=True))
+    assert float(m["update_skipped"]) == 1.0
+    assert float(m["nonfinite_count"]) > 0
+    # params (and moments) tree-selected back to the pre-step values ...
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: jnp.array_equal(a, b), before, state.params))
+    assert all(np.isfinite(x).all() for x in jax.tree.leaves(
+        jax.device_get(state.opt_state)))
+    # ... while step/rng advanced: the batch is consumed, not replayed
+    assert int(state.step) == 2
+
+    state, m = step(state, _float_batch(2))
+    assert float(m["update_skipped"]) == 0.0
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_without_guard_nan_batch_poisons_params():
+    opt = optim.sgd(0.1)
+    mcfg = MethodConfig(name="sgd")          # guard_update defaults off
+    method = make_method(mcfg)
+    state = init_train_state(_lin_params(), opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(_lin_loss, opt))
+    state, m = step(state, _float_batch(0, nan=True))
+    assert "update_skipped" not in m         # metric surface unchanged
+    assert not np.isfinite(jax.device_get(state.params["w"])).all()
+
+
+def test_async_sam_guard_keeps_carried_ascent_finite():
+    opt = optim.adamw(1e-3)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5,
+                        guard_update=True)
+    method = make_method(mcfg)
+    state = init_train_state(_lin_params(), opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(_lin_loss, opt))
+    for i in range(3):
+        state, m = step(state, _float_batch(i))
+    held = jax.device_get(state.method_state.ascent_norm)
+    assert np.isfinite(held) and held > 0
+
+    state, m = step(state, _float_batch(3, nan=True))
+    ms = state.method_state
+    # the NaN refresh never entered the carried state (0 * NaN is still NaN:
+    # a poisoned a_t would corrupt every later perturbation even at rho 0)
+    assert np.isfinite(jax.device_get(ms.ascent_norm))
+    assert all(np.isfinite(x).all()
+               for x in jax.tree.leaves(jax.device_get(ms.ascent_grad)))
+    assert float(m["update_skipped"]) == 1.0
+
+    state, m = step(state, _float_batch(4))
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["perturbed"]) == 1.0      # still a SAM step afterwards
+
+
+def test_ascent_reused_flag_disambiguates_nan_sentinel():
+    """Satellite 3: on AsyncSAM-k reuse steps ascent_loss is a NaN SENTINEL;
+    ascent_reused=1 is the explicit marker that it is not a genuine NaN."""
+    opt = optim.sgd(0.05)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5,
+                        ascent_interval=2)
+    method = make_method(mcfg)
+    state = init_train_state(_lin_params(), opt, method, jax.random.PRNGKey(1))
+    step = jax.jit(method.make_step(_lin_loss, opt))
+    seen = {0.0: [], 1.0: []}
+    for i in range(6):
+        state, m = step(state, _float_batch(i))
+        seen[float(m["ascent_reused"])].append(float(m["ascent_loss"]))
+    assert seen[1.0] and all(math.isnan(v) for v in seen[1.0])
+    assert seen[0.0] and all(math.isfinite(v) for v in seen[0.0])
+
+
+# ---------------------------------------------------------------------------
+# SpikeDetector
+# ---------------------------------------------------------------------------
+
+def test_spike_detector_flags_only_positive_excursions():
+    det = SpikeDetector(window=16, min_samples=8)
+    assert det.score(5.0) is None            # not warmed up
+    for i in range(16):
+        det.observe(2.0 - 0.01 * i + 0.02 * (i % 3))   # falling, jittery
+    assert det.score(1.7) < 8.0              # further improvement: fine
+    assert det.score(40.0) > 8.0             # spike
+    assert det.score(0.5) < 0                # signed: below median is negative
+
+
+def test_spike_detector_flat_window_needs_relative_excursion():
+    det = SpikeDetector(window=8, min_samples=4)
+    for _ in range(8):
+        det.observe(1.0)                     # MAD = 0
+    assert det.score(1.001) < 8.0            # numeric jitter: not a spike
+    assert det.score(3.0) > 8.0              # 3x the median: a spike
+
+
+# ---------------------------------------------------------------------------
+# NumericChaos + pipeline wrapper
+# ---------------------------------------------------------------------------
+
+def test_parse_numchaos_grammar_and_errors():
+    nc = parse_numchaos("nan_grad:nth=40:span=8,spike:prob=0.01:scale=1e4,"
+                        "inf_grad:every=50", seed=3)
+    kinds = [r.kind for r in nc.rules]
+    assert kinds == ["nan_grad", "spike", "inf_grad"]
+    assert nc.rules[0].span == 8 and nc.rules[1].scale == 1e4
+    with pytest.raises(ValueError, match="kind"):
+        parse_numchaos("frobnicate:nth=1")
+    with pytest.raises(ValueError, match="unknown key"):
+        parse_numchaos("nan_grad:bogus=1")
+    with pytest.raises(ValueError, match="key=val"):
+        parse_numchaos("nan_grad:nth")
+    with pytest.raises(ValueError, match="empty"):
+        parse_numchaos(" , ")
+
+
+def test_numchaos_is_deterministic_per_index_not_fire_once():
+    """Poison is a property of the data: re-asking about the same index
+    re-fires identically (this is what makes the replay livelock real)."""
+    a = parse_numchaos("spike:prob=0.2,nan_grad:nth=7:span=2", seed=9)
+    b = parse_numchaos("spike:prob=0.2,nan_grad:nth=7:span=2", seed=9)
+    fires_a = [[a._fires(r, i, idx) for i, r in enumerate(a.rules)]
+               for idx in range(200)]
+    fires_b = [[b._fires(r, i, idx) for i, r in enumerate(b.rules)]
+               for idx in range(200)]
+    assert fires_a == fires_b
+    assert any(f[0] for f in fires_a)                  # prob rule does fire
+    assert fires_a[7][1] and fires_a[8][1] and not fires_a[9][1]
+    # replay: asking twice about the same index is idempotent
+    assert a._fires(a.rules[1], 1, 7) and a._fires(a.rules[1], 1, 7)
+
+
+def test_poison_touches_float_leaves_only():
+    batch = {"x": np.ones((4, 8), np.float32), "y": np.arange(4)}
+    out, hit = _poison_batch(batch, NumericRule("nan_grad", nth=0))
+    assert hit
+    assert np.isnan(np.asarray(out["x"])).all()
+    assert np.array_equal(np.asarray(out["y"]), np.arange(4))  # ints untouched
+    tokens_only = {"tokens": np.arange(12).reshape(3, 4)}
+    out, hit = _poison_batch(tokens_only, NumericRule("nan_grad", nth=0))
+    assert not hit                                  # nothing to poison
+    out, _ = _poison_batch({"x": np.full((2, 2), 2.0, np.float32)},
+                           NumericRule("spike", nth=0, scale=100.0))
+    assert np.allclose(np.asarray(out["x"]), 200.0)
+
+
+def test_numchaos_pipeline_cursor_state_and_uninjected_peek():
+    cfg_arch = get_config("olmo-1b", reduced=True)
+    inner = TokenPipeline(cfg_arch, PipelineConfig(global_batch=2, seq_len=8,
+                                                   prefetch=0))
+    chaos = parse_numchaos("nan_grad:nth=1", seed=0)
+    pipe = NumericChaosPipeline(inner, chaos)
+    assert "tokens" in pipe.peek()                  # peek: delegated, uninjected
+    it = iter(pipe)
+    next(it), next(it)
+    st = pipe.state()
+    assert st["cursor"] == 2 and "inner" in st
+    pipe.restore({"cursor": 0, "inner": st["inner"]})
+    assert pipe.state()["cursor"] == 0
+    # token-only batches have no float leaves: injection is a counted no-op
+    assert chaos.fired.get("nan_grad", 0) == 0 and chaos.skipped_no_float == 1
+
+
+def test_pipeline_state_records_rank_world_identity():
+    """Satellite 2: restoring rank 0's cursor into rank 1's pipeline would
+    silently resume on the wrong stream shard — restore() refuses."""
+    cfg_arch = get_config("olmo-1b", reduced=True)
+    p0 = TokenPipeline(cfg_arch, PipelineConfig(global_batch=4, seq_len=8,
+                                                rank=0, world=2, prefetch=0))
+    p1 = TokenPipeline(cfg_arch, PipelineConfig(global_batch=4, seq_len=8,
+                                                rank=1, world=2, prefetch=0))
+    st = p0.state()
+    assert (st["rank"], st["world"]) == (0, 2)
+    p0.restore(st)                                  # same identity: fine
+    with pytest.raises(AssertionError, match="identity"):
+        p1.restore(st)
+    # pre-identity-era states (no rank/world) restore unchanged
+    p1.restore({"step": 3, "seed": 0})
+    assert p1.state()["step"] == 3
+
+
+# ---------------------------------------------------------------------------
+# GuardedExecutor ladder mechanics (deterministic fake inner executor)
+# ---------------------------------------------------------------------------
+
+class _FakeExec:
+    """Inner executor whose metrics are scripted via the batch dict."""
+
+    def __init__(self):
+        self.rho_scales = []
+        self.drops = 0
+        self.closed = False
+
+    def step(self, state, batch):
+        state = state._replace(step=state.step + 1)
+        return state, dict(batch["metrics"])
+
+    def set_rho_scale(self, scale):
+        self.rho_scales.append(scale)
+
+    def drop_ascent(self):
+        self.drops += 1
+
+    def on_restore(self, state):
+        return None
+
+    def close(self):
+        self.closed = True
+
+
+def _fake_state():
+    return TrainState(step=jnp.asarray(0, jnp.int32),
+                      rng=jax.random.PRNGKey(0), params={"w": jnp.zeros(2)},
+                      opt_state=(), method_state=())
+
+
+def _m(loss=1.0, skipped=0.0, **kw):
+    return {"metrics": {"loss": loss, "grad_norm": 1.0,
+                        "update_skipped": skipped, **kw}}
+
+
+def test_guard_ladder_deescalates_then_recovers():
+    cfg = GuardConfig(rho_scales=(1.0, 0.5, 0.0), demote_after=2,
+                      anomaly_window=4, probation_steps=2, cooldown_steps=3,
+                      spike_min_samples=4, rollback=False)
+    inner = _FakeExec()
+    g = GuardedExecutor(inner, cfg)
+    state = _fake_state()
+    # two skip anomalies -> one rung down, rho halved through the hook
+    state, m = g.step(state, _m(skipped=1.0))
+    assert m["guard_state"] == 0.0 and m["steps_skipped"] == 1.0
+    state, m = g.step(state, _m(skipped=1.0))
+    assert m["guard_state"] == 1.0 and m["rho_scale"] == 0.5
+    assert inner.rho_scales == [0.5]
+    # two more -> bottom rung: plain descent; no rollback configured, so the
+    # guard parks there instead of raising
+    state, _ = g.step(state, _m(skipped=1.0))
+    state, m = g.step(state, _m(skipped=1.0))
+    assert m["guard_state"] == 2.0 and m["rho_scale"] == 0.0
+    state, m = g.step(state, _m(skipped=1.0))       # still anomalous at bottom
+    assert m["guard_state"] == 2.0
+    # clean steps: cooldown-gated promotions climb all the way back
+    for _ in range(40):
+        state, m = g.step(state, _m())
+    assert m["guard_state"] == 0.0 and m["rho_scale"] == 1.0
+    assert g.ladder.recoveries >= 2
+    g.close()
+    assert inner.closed
+
+
+def test_guard_spike_and_stale_ascent_classification():
+    cfg = GuardConfig(rho_scales=(1.0, 0.0), demote_after=2, anomaly_window=4,
+                      spike_window=8, spike_min_samples=4, spike_zscore=8.0,
+                      stale_norm_mult=10.0, stale_norm_min_samples=4,
+                      rollback=False)
+    inner = _FakeExec()
+    g = GuardedExecutor(inner, cfg)
+    state = _fake_state()
+    for i in range(8):
+        state, _ = g.step(state, _m(loss=1.0 + 0.01 * (i % 3),
+                                    ascent_norm=2.0))
+    # a loss spike is an anomaly but NOT a skip
+    state, m = g.step(state, _m(loss=500.0, ascent_norm=2.0))
+    assert "steps_skipped" not in m
+    assert sum(g._anomalies) == 1
+    # an exploded held-ascent norm triggers the drop hook next step
+    state, _ = g.step(state, _m(ascent_norm=2000.0))
+    assert sum(g._anomalies) == 0               # 2 anomalies -> demote+clear
+    assert g.ladder.level == 1
+    state, _ = g.step(state, _m(ascent_norm=2.0))
+    assert inner.drops == 1
+    # a non-finite ascent norm is an ascent drop too, never a rollback
+    state, _ = g.step(state, _m(ascent_norm=float("nan")))
+    state, _ = g.step(state, _m(ascent_norm=2.0))
+    assert inner.drops == 2
+
+
+def test_guard_bottom_rung_raises_poison_and_counts_rollback():
+    cfg = GuardConfig(rho_scales=(1.0, 0.0), demote_after=2, anomaly_window=4,
+                      spike_min_samples=4, rollback=True)
+    inner = _FakeExec()
+    g = GuardedExecutor(inner, cfg)
+    state = _fake_state()
+    state, _ = g.step(state, _m(skipped=1.0))
+    state, _ = g.step(state, _m(skipped=1.0))   # -> bottom rung
+    assert g.ladder.level == 1
+    state, _ = g.step(state, _m(skipped=1.0))
+    with pytest.raises(PoisonBatch, match="bottom rung"):
+        g.step(state, _m(skipped=1.0))
+    # the rollback lands in the counters via on_restore; ladder keeps its rung
+    g.on_restore(state)
+    assert g.poison_rollbacks == 1 and g.ladder.level == 1
+    state, m = g.step(state, _m())
+    assert m["poison_rollbacks"] == 1.0
+
+
+def test_guard_severe_nonfinite_state_rolls_back_immediately():
+    """Non-finite loss with the update APPLIED (no in-step guard) means the
+    params may already be poisoned: no rung can fix that — straight to
+    rollback, not a de-escalation."""
+    g = GuardedExecutor(_FakeExec(), GuardConfig(rollback=True))
+    state = _fake_state()
+    state, _ = g.step(state, _m())
+    with pytest.raises(PoisonBatch, match="non-finite training state"):
+        g.step(state, _m(loss=float("nan")))
+
+
+def test_guard_delegates_unknown_attrs_to_inner():
+    inner = _FakeExec()
+    inner.mesh = "the-mesh"
+    g = GuardedExecutor(inner, GuardConfig())
+    assert g.mesh == "the-mesh"
+    with pytest.raises(AttributeError):
+        _ = g.nonesuch
+
+
+# ---------------------------------------------------------------------------
+# hetero executor guard hooks
+# ---------------------------------------------------------------------------
+
+def test_executor_rho_scale_and_nonfinite_harvest_drop():
+    from repro.runtime import AsyncSamExecutor, ExecutorConfig
+    # guard_update so the NaN *descent* batch at step 6 skips instead of
+    # poisoning the params (this test is about the ascent-lane edge)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5,
+                        guard_update=True)
+    opt = optim.sgd(0.05)
+    method = make_method(mcfg)
+    state = init_train_state(_lin_params(), opt, method, jax.random.PRNGKey(1))
+    with AsyncSamExecutor(_lin_loss, mcfg, opt,
+                          ExecutorConfig(lockstep=True)) as ex:
+        for i in range(4):
+            state, m = ex.step(state, _float_batch(i))
+        assert float(m["perturbed"]) == 1.0
+        assert np.isfinite(m["ascent_norm"]) and m["ascent_norm"] > 0
+        # bottom rung: scale 0 forces plain descent while a gradient is held
+        ex.set_rho_scale(0.0)
+        state, m = ex.step(state, _float_batch(4))
+        assert float(m["perturbed"]) == 0.0
+        ex.set_rho_scale(1.0)
+        state, m = ex.step(state, _float_batch(5))
+        assert float(m["perturbed"]) == 1.0
+        # a NaN ascent batch produces a non-finite harvest: dropped at the
+        # lane edge (never held), counted, and training stays perturbable
+        before = ex.nonfinite_drops
+        state, m = ex.step(state, _float_batch(6, nan=True))
+        state, m = ex.step(state, _float_batch(7))
+        state, m = ex.step(state, _float_batch(8))
+        assert ex.nonfinite_drops == before + 1
+        held_g, held_norm = ex._held
+        assert np.isfinite(held_norm)
+        assert np.isfinite(float(m["loss"]))
+        # drop_ascent clears the held gradient without fencing the lane
+        ex.drop_ascent()
+        assert ex._held is None and ex.ledger.tau == 0
+
+
+# ---------------------------------------------------------------------------
+# PoisonBatch rollback: cursor advances, no livelock (satellite 1 pin)
+# ---------------------------------------------------------------------------
+
+def _poison_step_fn():
+    def step_fn(state, batch):
+        if np.isnan(np.asarray(batch["x"])).any():
+            raise PoisonBatch("poisoned batch content")
+        state = state._replace(step=state.step + 1)
+        return state, {"loss": jnp.asarray(0.5)}
+    return step_fn
+
+
+def _tiny_state():
+    return TrainState(step=jnp.asarray(0, jnp.int32),
+                      rng=jax.random.PRNGKey(0), params={"w": jnp.zeros(3)},
+                      opt_state={"m": jnp.zeros(3)},
+                      method_state={"a": jnp.zeros(3)})
+
+
+def test_poison_rollback_advances_cursor_past_the_window(tmp_path):
+    chaos = NumericChaos([NumericRule("nan_grad", nth=7)], seed=0)
+    pipe = _CursorPipeline(40, chaos)
+    report = run_resilient(
+        _poison_step_fn(), _tiny_state(), pipe,
+        CheckpointManager(tmp_path, keep=3), n_steps=12,
+        rcfg=ResilienceConfig(save_every=5, max_restarts=3, async_save=False))
+    assert report.steps_done == 12
+    assert report.poison_rollbacks == 1 and report.restarts == 1
+    # the model rolled back (step 5) but the data did NOT: batch 7 was
+    # consumed exactly once and never replayed
+    assert pipe.state()["cursor"] == 12 + 1 + 2   # 12 steps + poison + rollback gap
+
+
+def test_node_loss_style_replay_livelocks_on_poison_data(tmp_path):
+    """The counterfactual that pins satellite 1: treating a poison batch as
+    a node loss (cursor restored) replays the identical batch into the
+    identical failure until the restart budget is gone."""
+    chaos = NumericChaos([NumericRule("nan_grad", nth=7)], seed=0)
+    pipe = _CursorPipeline(40, chaos)
+
+    def step_fn(state, batch):
+        if np.isnan(np.asarray(batch["x"])).any():
+            raise InjectedFailure("NaN mistaken for a node loss")
+        state = state._replace(step=state.step + 1)
+        return state, {"loss": jnp.asarray(0.5)}
+
+    with pytest.raises(RuntimeError, match="restart budget"):
+        run_resilient(step_fn, _tiny_state(), pipe,
+                      CheckpointManager(tmp_path, keep=3), n_steps=12,
+                      rcfg=ResilienceConfig(save_every=5, max_restarts=3,
+                                            async_save=False))
+
+
+def test_require_finite_restore_skips_diverged_checkpoints(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    good = {"w": jnp.ones(4)}
+    bad = {"w": jnp.array([1.0, float("nan"), 2.0, 3.0])}
+    mgr.save(1, good)
+    mgr.save(2, bad)
+    like = jax.eval_shape(lambda: good)
+    restored, _ = mgr.restore(like)                       # default: newest
+    assert not np.isfinite(np.asarray(restored["w"])).all()
+    restored, _ = mgr.restore(like, require_finite=True)  # falls back past it
+    assert np.array_equal(np.asarray(restored["w"]), np.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# acceptance soak (the ISSUE-10 pinned test) + unguarded counterfactual
+# ---------------------------------------------------------------------------
+
+class _MethodExec:
+    """Minimal fused-form StepExecutor over a jitted method step."""
+
+    def __init__(self, mcfg, loss, opt):
+        self.method = make_method(mcfg)
+        self._step = jax.jit(self.method.make_step(loss, opt))
+
+    def step(self, state, batch):
+        return self._step(state, batch)
+
+    def close(self):
+        pass
+
+
+_SOAK_SPEC = "nan_grad:nth=20,nan_grad:nth=40:span=8,spike:nth=90:span=2:scale=1e4"
+
+
+def _soak_guard_cfg():
+    return GuardConfig(rho_scales=(1.0, 0.5, 0.0), demote_after=2,
+                       anomaly_window=4, probation_steps=4, cooldown_steps=4,
+                       spike_window=16, spike_min_samples=8, rollback=True)
+
+
+def _soak_run(tmp_path, n_steps=120):
+    opt = optim.adamw(3e-3)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5,
+                        guard_update=True)
+    inner = _MethodExec(mcfg, _lin_loss, opt)
+    guard = GuardedExecutor(inner, _soak_guard_cfg())
+    state = init_train_state(_lin_params(), opt, inner.method,
+                             jax.random.PRNGKey(1))
+    chaos = parse_numchaos(_SOAK_SPEC, seed=0)
+    pipe = _CursorPipeline(400, chaos)
+    report = run_resilient(
+        guard.step, state, pipe, CheckpointManager(tmp_path, keep=3),
+        n_steps=n_steps,
+        rcfg=ResilienceConfig(save_every=10, max_restarts=5,
+                              async_save=False, require_finite_restore=True),
+        on_restore=guard.on_restore)
+    return report, guard, chaos
+
+
+def test_acceptance_guarded_numchaos_run_survives_and_converges(tmp_path):
+    report, guard, chaos = _soak_run(tmp_path / "guarded")
+    hist = report.metrics_history
+    assert report.steps_done == 120
+
+    # the injection really happened: NaN window + spike events all fired
+    assert chaos.fired["nan_grad"] >= 9 and chaos.fired["spike"] >= 1
+
+    # contract: >=1 skip, >=1 de-escalation, >=1 recovery, >=1 poison
+    # rollback — all visible in the registry keys of metrics_history
+    assert max(m.get("steps_skipped", 0) for m in hist) >= 1
+    assert max(m.get("guard_state", 0) for m in hist) >= 1          # de-escalated
+    assert hist[-1]["guard_state"] == 0.0                           # recovered
+    assert guard.ladder.recoveries >= 1
+    assert max(m.get("poison_rollbacks", 0) for m in hist) >= 1
+    assert report.poison_rollbacks >= 1
+    assert report.restarts <= 5                                     # in budget
+
+    # final loss finite and within tolerance of an uninjected run
+    final = hist[-1]["loss"]
+    assert np.isfinite(final)
+    opt = optim.adamw(3e-3)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5,
+                        guard_update=True)
+    clean_exec = _MethodExec(mcfg, _lin_loss, opt)
+    clean = init_train_state(_lin_params(), opt, clean_exec.method,
+                             jax.random.PRNGKey(1))
+    for b in _CursorPipeline(120):
+        clean, cm = clean_exec.step(clean, b)
+    assert abs(final - float(cm["loss"])) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# guard x lane-ladder interplay (satellite 4): numeric de-escalation while
+# the remote ascent lane is itself demoted under wire chaos — the two
+# ladders act on different failure domains and recover independently
+# ---------------------------------------------------------------------------
+
+def test_guard_and_lane_ladder_recover_independently():
+    from repro.engine import RemoteExecutor
+    from repro.runtime import ExecutorConfig
+    from repro.service.ascent_server import AscentServer
+    from repro.service.netchaos import ChaosProxy, parse_faults
+
+    server = AscentServer(_lin_loss)
+    server.serve_in_thread()
+    # hostile opening on the wire: the first four GRAD frames all die, which
+    # trips the lane health detector and fails over to the local thread lane
+    sched = parse_faults(
+        "corrupt:GRAD:nth=1,corrupt:GRAD:nth=2,truncate:GRAD:nth=3,"
+        "blackhole:GRAD:nth=4:duration_s=0.2", seed=5)
+    proxy = ChaosProxy(server.address, sched)
+    xcfg = ExecutorConfig(
+        ascent_addr=proxy.addr, reconnect_backoff_s=0.05,
+        max_staleness=3, lane_ladder=True,
+        health_window=4, health_error_threshold=0.5, health_min_samples=2,
+        health_stall_timeout_s=5.0,
+        ladder_cooldown_steps=5, ladder_probation_steps=3,
+        guard_update=True)                    # exercise the config override
+    gcfg = GuardConfig(rho_scales=(1.0, 0.5), demote_after=2,
+                       anomaly_window=4, probation_steps=3, cooldown_steps=5,
+                       spike_min_samples=8, rollback=False)
+    hist = []
+    try:
+        with RemoteExecutor(_lin_loss, MethodConfig(name="async_sam", rho=0.05,
+                                                    ascent_fraction=0.5),
+                            optim.sgd(0.1, momentum=0.9),
+                            exec_cfg=xcfg) as ex:
+            g = GuardedExecutor(ex, gcfg)
+            lane = ex._inner._ladder
+            state = g.init_state(_lin_params(), jax.random.PRNGKey(1))
+            # NaN descent batches arrive while the wire is under attack:
+            # numeric anomalies and lane faults overlap in time
+            deadline = time.monotonic() + 120.0
+            i = 0
+            while True:
+                state, m = g.step(state, _float_batch(i, nan=i in (8, 9)))
+                hist.append(m)
+                i += 1
+                done = (i >= 40
+                        and lane.failovers >= 1 and lane.recoveries >= 1
+                        and g.ladder.failovers >= 1
+                        and g.ladder.recoveries >= 1
+                        and m["lane_state"] == 0.0
+                        and m["guard_state"] == 0.0)
+                if done:
+                    break
+                assert time.monotonic() < deadline and i < 2000, (
+                    "no independent double recovery within deadline: "
+                    f"lane=({lane.failovers},{lane.recoveries}) "
+                    f"guard=({g.ladder.failovers},{g.ladder.recoveries})")
+                time.sleep(0.015)
+    finally:
+        proxy.close()
+        server.close()
+    # both ladders moved, and said so in the registry keys
+    assert max(m["lane_state"] for m in hist) >= 1
+    assert max(m["guard_state"] for m in hist) >= 1
+    assert max(m.get("steps_skipped", 0) for m in hist) >= 1
+    assert proxy.fault_count() >= 4
+    # losses on non-skip steps stayed finite throughout the overlap
+    assert all(np.isfinite(m["loss"]) for m in hist
+               if not m.get("update_skipped", 0))
+
+
+def test_acceptance_same_injection_without_guard_diverges(tmp_path):
+    """The counterfactual: identical injection, guard off — the NaN window
+    poisons the params and the run never produces a finite loss again."""
+    opt = optim.adamw(3e-3)
+    mcfg = MethodConfig(name="async_sam", rho=0.05, ascent_fraction=0.5)
+    ex = _MethodExec(mcfg, _lin_loss, opt)
+    state = init_train_state(_lin_params(), opt, ex.method,
+                             jax.random.PRNGKey(1))
+    chaos = parse_numchaos(_SOAK_SPEC, seed=0)
+    for b in _CursorPipeline(60, chaos):
+        state, m = ex.step(state, b)
+    assert not np.isfinite(float(m["loss"]))
+    assert not np.isfinite(np.asarray(jax.device_get(state.params["w"]))).all()

@@ -82,7 +82,9 @@ def test_contract_tuples_derive_to_historical_values():
     assert ENGINE_OPTIONAL_METRIC_KEYS == (
         "wire_bytes", "job_bytes", "grad_bytes", "rtt_s", "pool_depth",
         "pool_wait_s", "client_id", "mesh_devices", "resize_events",
-        "resize_time_s", "lane_state", "lane_failovers", "lane_recoveries")
+        "resize_time_s", "lane_state", "lane_failovers", "lane_recoveries",
+        "guard_state", "rho_scale", "steps_skipped", "nonfinite_count",
+        "poison_rollbacks")
     # the engine re-export keeps old imports working
     from repro.engine import ENGINE_METRIC_KEYS as legacy
     assert legacy is ENGINE_METRIC_KEYS
